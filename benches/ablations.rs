@@ -1,0 +1,178 @@
+//! Ablations of the design choices DESIGN.md calls out — the knobs the
+//! paper searches but never isolates:
+//!
+//! 1. **Chunks per collective** (1–32): pipelining vs alpha overhead.
+//! 2. **LIFO vs FIFO** gradient scheduling: exposed-tail reduction.
+//! 3. **Baseline vs BlueConnect** multi-dim composition.
+//! 4. **Collective algorithm** (RI/DI/RHD/DBT) across message sizes —
+//!    the latency/bandwidth crossover that drives §6.3's inference
+//!    observation.
+//! 5. **Pareto frontier** latency-vs-cost over a random design sample
+//!    (multi-objective view of the §6.4 diversity claim).
+
+use cosmic::collective::{
+    collective_time_us, multidim_collective_time_us, CollAlgo, CollectiveKind, MultiDimPolicy,
+    SchedulingPolicy,
+};
+use cosmic::dse::pareto::{hypervolume_2d, pareto_frontier, ParetoPoint};
+use cosmic::dse::{network_cost, Objective, WorkloadSpec};
+use cosmic::harness::{make_env, print_table};
+use cosmic::pss::SearchScope;
+use cosmic::sim::{presets, Simulator};
+use cosmic::topology::DimCost;
+use cosmic::util::Rng;
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, Parallelization};
+use std::time::Instant;
+
+fn main() {
+    let started = Instant::now();
+    // Ablations 1-3 use a communication-heavy operating point (fast
+    // System 1 compute, large DP -> big gradient payloads): the knobs
+    // under ablation act on communication, which System 2's weak compute
+    // (10 TFLOPS) hides completely.
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let par = Parallelization::derive(512, 256, 1, 1, true).unwrap();
+    let sim = Simulator::new();
+
+    // --- 1. chunk-count sweep ---
+    let mut rows = Vec::new();
+    for chunks in [1u32, 2, 4, 8, 16, 32] {
+        let mut c = cluster.clone();
+        c.collectives.chunks = chunks;
+        let r = sim.run(&c, &model, &par, 4096, ExecutionMode::Training).unwrap();
+        rows.push(vec![
+            format!("{chunks}"),
+            format!("{:.1}", r.latency_us / 1e3),
+            format!("{:.1}", r.comm_exposed_us / 1e3),
+        ]);
+    }
+    print_table(
+        "Ablation 1: chunks per collective (GPT3-13B, System 1, DP=256)",
+        &["chunks", "latency (ms)", "exposed grad sync (ms)"],
+        &rows,
+    );
+
+    // --- 2. LIFO vs FIFO ---
+    // Needs an exposed gradient tail: tiny per-NPU compute (ViT-Base,
+    // one sample per replica) with full-model gradient collectives.
+    let mut rows = Vec::new();
+    let vit = wl::vit_base().with_simulated_layers(12);
+    let vit_par = Parallelization::derive(512, 512, 1, 1, true).unwrap();
+    for policy in [SchedulingPolicy::Fifo, SchedulingPolicy::Lifo] {
+        let mut c = cluster.clone();
+        c.collectives.scheduling = policy;
+        let r = sim.run(&c, &vit, &vit_par, 512, ExecutionMode::Training).unwrap();
+        rows.push(vec![
+            policy.name().to_string(),
+            format!("{:.3}", r.latency_us / 1e3),
+            format!("{:.3}", r.comm_exposed_us / 1e3),
+        ]);
+    }
+    print_table(
+        "Ablation 2: gradient-sync scheduling policy (ViT-Base, DP=512, batch 512)",
+        &["policy", "latency (ms)", "exposed tail (ms)"],
+        &rows,
+    );
+
+    // --- 3. Baseline vs BlueConnect ---
+    let mut rows = Vec::new();
+    for md in [MultiDimPolicy::Baseline, MultiDimPolicy::BlueConnect] {
+        let mut c = cluster.clone();
+        c.collectives.multidim = md;
+        let r = sim.run(&c, &model, &par, 4096, ExecutionMode::Training).unwrap();
+        rows.push(vec![
+            md.name().to_string(),
+            format!("{:.2}", r.latency_us / 1e3),
+            format!("{:.2}", r.comm_blocking_us / 1e3),
+        ]);
+    }
+    print_table(
+        "Ablation 3: multi-dim collective composition",
+        &["policy", "latency (ms)", "blocking comm (ms)"],
+        &rows,
+    );
+
+    // --- 4. algorithm x message-size crossover ---
+    let dim = DimCost::from_dim(&presets::system2().topology.dims[3]); // System 2's SW dim
+    let mut rows = Vec::new();
+    for exp in [3usize, 5, 7, 9] {
+        let bytes = 10f64.powi(exp as i32);
+        let mut row = vec![format!("1e{exp} B")];
+        let mut best = (f64::INFINITY, CollAlgo::Ring);
+        for algo in CollAlgo::ALL {
+            let t = collective_time_us(algo, CollectiveKind::AllReduce, &dim, bytes);
+            if t < best.0 {
+                best = (t, algo);
+            }
+            row.push(format!("{t:.2}"));
+        }
+        row.push(best.1.short().to_string());
+        rows.push(row);
+    }
+    print_table(
+        "Ablation 4: all-reduce time (us) by algorithm vs message size (8-NPU SW dim)",
+        &["payload", "RI", "DI", "RHD", "DBT", "winner"],
+        &rows,
+    );
+    println!("(the small-message rows are why §6.3's inference designs avoid Ring)");
+
+    // sanity print for blueconnect multidim on one composed case
+    let s2 = presets::system2();
+    let dims: Vec<DimCost> = s2.topology.dims.iter().map(DimCost::from_dim).collect();
+    let algos = &s2.collectives.algorithms;
+    let t_base = multidim_collective_time_us(
+        CollectiveKind::AllReduce,
+        MultiDimPolicy::Baseline,
+        algos,
+        &dims,
+        1e9,
+        4,
+    );
+    let t_bc = multidim_collective_time_us(
+        CollectiveKind::AllReduce,
+        MultiDimPolicy::BlueConnect,
+        algos,
+        &dims,
+        1e9,
+        4,
+    );
+    println!("\n1 GB 4D all-reduce: baseline {t_base:.0} us vs BlueConnect {t_bc:.0} us");
+
+    // --- 5. latency-vs-cost Pareto frontier over a random sample ---
+    let env = make_env(
+        presets::system2(),
+        vec![WorkloadSpec::training(wl::gpt3_175b().with_simulated_layers(4), 2048)],
+        Objective::RawLatency,
+    );
+    let space = env.pss.build_space(SearchScope::FullStack);
+    let mut rng = Rng::seed_from_u64(31);
+    let mut points = Vec::new();
+    let mut designs = Vec::new();
+    while points.len() < 400 {
+        let Some(g) = space.random_valid_genome(&mut rng, 500) else { continue };
+        let Some(lat) = env.latency_us(&g) else { continue };
+        let point = env.pss.schema.decode(&g).unwrap();
+        let (c, _) = env.pss.materialize(&point).unwrap();
+        let cost = network_cost(&c.topology);
+        points.push(ParetoPoint::new(designs.len(), vec![lat, cost]));
+        designs.push(g);
+    }
+    let frontier = pareto_frontier(&points);
+    let ref_pt = (
+        points.iter().map(|p| p.metrics[0]).fold(0.0, f64::max),
+        points.iter().map(|p| p.metrics[1]).fold(0.0, f64::max),
+    );
+    println!(
+        "\nAblation 5: Pareto frontier latency-vs-$ over 400 random designs: \
+         {} non-dominated points, hypervolume {:.3e}",
+        frontier.len(),
+        hypervolume_2d(&frontier, ref_pt)
+    );
+    for p in frontier.iter().take(8) {
+        println!("  latency {:>12.1} ms   network cost {:>12.0} $", p.metrics[0] / 1e3, p.metrics[1]);
+    }
+
+    println!("\nbench wall time: {:.2}s", started.elapsed().as_secs_f64());
+}

@@ -1,0 +1,82 @@
+//! Figure 4 — latency spreads across design-space scopes.
+//!
+//! Reproduces: (a) workload-only spread for GPT3-175B on System 2
+//! (paper: 64.5×), (b) workload+network, (c) workload+collective,
+//! (d) full-stack (paper: up to 103×), (e) workload-only GPT3-13B,
+//! (f) workload-only ViT-Large, (g) full-stack ViT-Large,
+//! (h) full-stack ViT-Base.
+//!
+//! We report min/max latency over a random valid sample per scope; the
+//! paper's claim is the *shape*: spreads are large (tens of ×) and the
+//! full-stack spread exceeds the workload-only spread.
+
+use cosmic::dse::{Objective, WorkloadSpec};
+use cosmic::harness::{latency_spread, make_env, print_table};
+use cosmic::pss::SearchScope;
+use cosmic::sim::presets;
+use cosmic::workload::models::presets as wl;
+use std::time::Instant;
+
+fn main() {
+    let started = Instant::now();
+    let samples = 3000;
+    let cases: Vec<(&str, cosmic::workload::ModelConfig, u64, SearchScope)> = vec![
+        ("(a) GPT3-175B workload-only", wl::gpt3_175b(), 2048, SearchScope::WorkloadOnly),
+        ("(b) GPT3-175B workload+network", wl::gpt3_175b(), 2048, SearchScope::WorkloadNetwork),
+        ("(c) GPT3-175B workload+collective", wl::gpt3_175b(), 2048, SearchScope::WorkloadCollective),
+        ("(d) GPT3-175B full-stack", wl::gpt3_175b(), 2048, SearchScope::FullStack),
+        ("(e) GPT3-13B workload-only", wl::gpt3_13b(), 2048, SearchScope::WorkloadOnly),
+        ("(f) ViT-Large workload-only", wl::vit_large(), 2048, SearchScope::WorkloadOnly),
+        ("(g) ViT-Large full-stack", wl::vit_large(), 2048, SearchScope::FullStack),
+        ("(h) ViT-Base full-stack", wl::vit_base(), 2048, SearchScope::FullStack),
+    ];
+
+    let mut rows = Vec::new();
+    let mut spread_by_label = Vec::new();
+    for (label, model, batch, scope) in cases {
+        let env = make_env(
+            presets::system2(),
+            vec![WorkloadSpec::training(model.with_simulated_layers(4), batch)],
+            Objective::RawLatency,
+        );
+        let (min, max, n) = latency_spread(&env, scope, samples, 0xF164);
+        let spread = if min > 0.0 && min.is_finite() { max / min } else { f64::NAN };
+        spread_by_label.push((label.to_string(), spread));
+        rows.push(vec![
+            label.to_string(),
+            format!("{n}"),
+            format!("{:.1}", min / 1e3),
+            format!("{:.1}", max / 1e3),
+            format!("{spread:.1}x"),
+        ]);
+    }
+    print_table(
+        "Figure 4: latency spread per scope (System 2, random valid samples)",
+        &["case", "valid", "min latency (ms)", "max latency (ms)", "spread"],
+        &rows,
+    );
+
+    // Shape assertions the paper implies.
+    let get = |tag: &str| {
+        spread_by_label
+            .iter()
+            .find(|(l, _)| l.starts_with(tag))
+            .map(|(_, s)| *s)
+            .unwrap_or(f64::NAN)
+    };
+    let wl_only = get("(a)");
+    let full = get("(d)");
+    println!("\nshape checks:");
+    println!(
+        "  workload-only spread large (paper 64.5x): {:.1}x -> {}",
+        wl_only,
+        if wl_only > 10.0 { "OK" } else { "WEAK" }
+    );
+    println!(
+        "  full-stack spread >= workload-only (paper 103x vs 64.5x): {:.1}x vs {:.1}x -> {}",
+        full,
+        wl_only,
+        if full >= wl_only { "OK" } else { "MISMATCH" }
+    );
+    println!("\nbench wall time: {:.2}s", started.elapsed().as_secs_f64());
+}

@@ -1,0 +1,79 @@
+//! Figure 6 — ML runtime per BW/NPU for GPT3-175B: workload-only /
+//! collective-only / network-only / full-stack optimization on
+//! System 1 (512 NPUs) and System 2 (1,024 NPUs), normalized to the
+//! full-stack outcome.
+//!
+//! Paper shape: full-stack best everywhere (1.50–48.41× over single
+//! stacks on System 1; 3.15–17.67× on System 2); collective-only gains
+//! least, workload-only is the strongest single stack.
+
+use cosmic::agents::AgentKind;
+use cosmic::dse::{Objective, WorkloadSpec};
+use cosmic::harness::{make_env, print_table, scoped_search};
+use cosmic::pss::SearchScope;
+use cosmic::sim::presets;
+use cosmic::workload::models::presets as wl;
+use std::time::Instant;
+
+const STEPS: u64 = 600;
+// The full-stack scope searches a ~1e5x larger space than any single
+// stack; it gets a 3x step budget (still vastly sub-proportionate).
+const FULL_STEPS: u64 = 1800;
+
+fn main() {
+    let started = Instant::now();
+    let scopes = [
+        SearchScope::WorkloadOnly,
+        SearchScope::CollectiveOnly,
+        SearchScope::NetworkOnly,
+        SearchScope::FullStack,
+    ];
+
+    for (sys_idx, sys_name) in [(1usize, "System 1 (512 NPUs)"), (2, "System 2 (1024 NPUs)")] {
+        let mut rows = Vec::new();
+        let mut best = Vec::new();
+        for scope in scopes {
+            let mut env = make_env(
+                presets::by_index(sys_idx).unwrap(),
+                vec![WorkloadSpec::training(wl::gpt3_175b().with_simulated_layers(4), 2048)],
+                Objective::PerfPerBwPerNpu,
+            );
+            // Best of the four agents per scope (the paper lets every
+            // agent run; we report the best discovered design).
+            let mut best_reward = 0.0f64;
+            let mut best_latency = f64::INFINITY;
+            let mut wall = 0.0;
+            for (i, agent) in AgentKind::ALL.iter().enumerate() {
+                let steps = if scope == SearchScope::FullStack { FULL_STEPS } else { STEPS };
+                let r = scoped_search(&mut env, scope, *agent, steps, 100 + i as u64);
+                wall += r.wall_secs;
+                if r.run.best_reward > best_reward {
+                    best_reward = r.run.best_reward;
+                    best_latency = r.best_latency_us;
+                }
+            }
+            best.push((scope.name().to_string(), best_reward));
+            rows.push(vec![
+                scope.name().to_string(),
+                format!("{best_reward:.4e}"),
+                format!("{:.1}", best_latency / 1e3),
+                format!("{wall:.2}s"),
+            ]);
+        }
+        // Normalized "runtime per BW/NPU" bars: the paper normalizes the
+        // (minimized) product to the full-stack outcome, so higher reward
+        // -> lower bar. Report full/scope reward ratio = bar height.
+        let full = best.last().unwrap().1;
+        for (i, (_, r)) in best.iter().enumerate() {
+            rows[i].push(format!("{:.2}x", full / r.max(1e-300)));
+        }
+        print_table(
+            &format!("Figure 6: GPT3-175B perf-per-BW/NPU, {sys_name}"),
+            &["scope", "best reward", "best latency (ms)", "search wall", "normalized runtime-per-BW (vs full)"],
+            &rows,
+        );
+        let full_wins = best.iter().all(|(_, r)| *r <= full + 1e-30);
+        println!("full-stack >= all single stacks: {}", if full_wins { "OK" } else { "MISMATCH" });
+    }
+    println!("\nbench wall time: {:.2}s", started.elapsed().as_secs_f64());
+}

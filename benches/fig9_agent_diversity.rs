@@ -1,0 +1,104 @@
+//! Figure 9 — differing configurations discovered within and across ML
+//! agents, all achieving near-equivalent optimal performance.
+//!
+//! For each agent (RW, GA, ACO, BO) we run a full-stack DSE on System 2
+//! / GPT3-175B and report its two best *distinct* configurations in the
+//! figure's parameter indexing:
+//!   a) chunks-per-collective; b–e) 4D NPU count; f) scheduling policy
+//!   (1=FIFO, 2=LIFO); g–j) 4D all-reduce algorithm (1=RI, 2=DI, 3=RHD,
+//!   4=DBT); k) multi-dim collective (1=Baseline, 2=BlueConnect);
+//!   l–o) 4D topology (1=RI, 2=FC, 3=SW).
+//!
+//! Paper shape: all agents reach similar peak reward but land on
+//! *different* parameter vectors — redundancy/flexibility of the space.
+
+use cosmic::agents::AgentKind;
+use cosmic::dse::{DseConfig, DseRunner, Environment, Objective, WorkloadSpec};
+use cosmic::harness::{make_env, print_table};
+use cosmic::psa::builders::names;
+use cosmic::pss::SearchScope;
+use cosmic::sim::presets;
+use cosmic::workload::models::presets as wl;
+use std::time::Instant;
+
+const STEPS: u64 = 800;
+
+/// Figure 9 parameter indexing for one materialized design point.
+fn fig9_row(env: &Environment, genome: &[usize], label: &str, reward: f64) -> Vec<String> {
+    let point = env.pss.schema.decode(genome).expect("decode");
+    let (cluster, _) = env.pss.materialize(&point).expect("materialize");
+    let mut row = vec![label.to_string()];
+    // a) chunks
+    row.push(format!("{}", cluster.collectives.chunks));
+    // b-e) NPUs per dim
+    for d in &cluster.topology.dims {
+        row.push(format!("{}", d.npus));
+    }
+    // f) scheduling policy
+    row.push(format!("{}", cluster.collectives.scheduling.index()));
+    // g-j) collective algorithm per dim
+    for a in &cluster.collectives.algorithms {
+        row.push(format!("{}", a.index()));
+    }
+    // k) multi-dim collective
+    row.push(format!("{}", cluster.collectives.multidim.index()));
+    // l-o) topology kind per dim (1=RI, 2=FC, 3=SW -- figure legend order)
+    for d in &cluster.topology.dims {
+        row.push(
+            match d.kind {
+                cosmic::topology::DimKind::Ring => "1",
+                cosmic::topology::DimKind::FullyConnected => "2",
+                cosmic::topology::DimKind::Switch => "3",
+            }
+            .to_string(),
+        );
+    }
+    let _ = point.int(names::DP); // touch to assert workload knobs exist
+    row.push(format!("{reward:.3e}"));
+    row
+}
+
+fn main() {
+    let started = Instant::now();
+    let headers = [
+        "agent/run", "a", "b", "c", "d", "e", "f", "g", "h", "i", "j", "k", "l", "m", "n", "o",
+        "reward",
+    ];
+    let mut rows = Vec::new();
+    let mut peaks = Vec::new();
+    for agent in AgentKind::ALL {
+        // Two seeds per agent -> two (typically distinct) best configs.
+        let mut bests: Vec<(Vec<usize>, f64)> = Vec::new();
+        let mut env = make_env(
+            presets::system2(),
+            vec![WorkloadSpec::training(wl::gpt3_175b().with_simulated_layers(4), 2048)],
+            Objective::PerfPerBwPerNpu,
+        );
+        for seed in [11u64, 23] {
+            let r = DseRunner::new(DseConfig::new(agent, STEPS, seed), SearchScope::FullStack)
+                .run(&mut env);
+            if !r.best_genome.is_empty() {
+                bests.push((r.best_genome, r.best_reward));
+            }
+        }
+        for (i, (g, rw)) in bests.iter().enumerate() {
+            rows.push(fig9_row(&env, g, &format!("{}-{}", agent.name(), i + 1), *rw));
+            peaks.push(*rw);
+        }
+    }
+    print_table("Figure 9: per-agent best configurations (parameter-indexed)", &headers, &rows);
+
+    // Shape: peak rewards within ~an order of magnitude; configs differ.
+    let max = peaks.iter().cloned().fold(0.0f64, f64::max);
+    let min = peaks.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("\npeak reward range across agents: {min:.3e} .. {max:.3e} ({:.1}x)", max / min);
+    let distinct: std::collections::HashSet<Vec<String>> =
+        rows.iter().map(|r| r[1..r.len() - 1].to_vec()).collect();
+    println!(
+        "distinct parameter vectors among {} bests: {} -> {}",
+        rows.len(),
+        distinct.len(),
+        if distinct.len() > 1 { "diverse (matches paper)" } else { "degenerate" }
+    );
+    println!("\nbench wall time: {:.2}s", started.elapsed().as_secs_f64());
+}

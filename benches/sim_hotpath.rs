@@ -1,0 +1,139 @@
+//! Hot-path micro-benchmarks (the §Perf deliverable's measurement tool).
+//!
+//! Times the three layers' hot paths:
+//! - L3: `Simulator::run` and `Environment::evaluate_uncached` per design
+//!   point (the DSE inner loop) — target ≥10k points/min on one core;
+//! - L2/L1 via PJRT: one XLA `cost_model` batch (256 candidates) vs the
+//!   equivalent 256 Rust-fallback evaluations;
+//! - GP surrogate: XLA vs Rust fit+predict round.
+
+use cosmic::dse::{Objective, WorkloadSpec};
+use cosmic::harness::make_env;
+use cosmic::runtime::{cost_model_ref, CostBatch, CostModel, Runtime, BATCH};
+use cosmic::sim::{presets, Simulator};
+use cosmic::util::Rng;
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, Parallelization};
+use std::hint::black_box;
+use std::path::Path;
+use std::time::Instant;
+
+fn time_it<F: FnMut()>(iters: u64, mut f: F) -> f64 {
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    println!("=== sim_hotpath: per-layer hot-path timings ===\n");
+
+    // --- L3: simulator ---
+    let cluster = presets::system2();
+    let model = wl::gpt3_175b().with_simulated_layers(4);
+    let par = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+    let sim = Simulator::new();
+    let t = time_it(2000, || {
+        black_box(sim.run(&cluster, &model, &par, 2048, ExecutionMode::Training).unwrap());
+    });
+    println!("Simulator::run (GPT3-175B/4L, System 2): {:>10.1} us/point  ({:.0} points/s)", t * 1e6, 1.0 / t);
+
+    let env = make_env(
+        presets::system2(),
+        vec![WorkloadSpec::training(model.clone(), 2048)],
+        Objective::PerfPerBwPerNpu,
+    );
+    let genome = env.pss.baseline_genome();
+    let t = time_it(2000, || {
+        black_box(env.evaluate_uncached(&genome));
+    });
+    println!("Environment::evaluate_uncached:          {:>10.1} us/point  ({:.0} points/s)", t * 1e6, 1.0 / t);
+
+    // Random-genome evaluation (includes decode + constraint checking).
+    let space = env.pss.build_space(cosmic::pss::SearchScope::FullStack);
+    let mut rng = Rng::seed_from_u64(1);
+    let genomes: Vec<Vec<usize>> =
+        (0..256).filter_map(|_| space.random_valid_genome(&mut rng, 500)).collect();
+    let mut i = 0;
+    let t = time_it(2000, || {
+        black_box(env.evaluate_uncached(&genomes[i % genomes.len()]));
+        i += 1;
+    });
+    println!("  (random valid genomes):                {:>10.1} us/point  ({:.0} points/s)", t * 1e6, 1.0 / t);
+
+    // --- L2/L1: XLA cost model vs fallback ---
+    let mut batch = CostBatch::zeros();
+    let mut rng = Rng::seed_from_u64(2);
+    for v in batch.flops.iter_mut().chain(batch.bytes.iter_mut()) {
+        *v = (rng.gen_f64() * 1e6) as f32;
+    }
+    batch.peak_flops_us = 1e7;
+    batch.mem_bytes_us = 5e4;
+
+    let t_ref = time_it(200, || {
+        black_box(cost_model_ref(&batch));
+    });
+    println!("\ncost_model fallback (256 configs):       {:>10.1} us/batch ({:.2} us/config)", t_ref * 1e6, t_ref * 1e6 / BATCH as f64);
+
+    match Runtime::cpu() {
+        Ok(rt) => {
+            let cm = CostModel::load(Some(&rt.client), Path::new("artifacts"));
+            if cm.is_xla() {
+                // warmup
+                let _ = cm.evaluate(&batch).unwrap();
+                let t_xla = time_it(200, || {
+                    black_box(cm.evaluate(&batch).unwrap());
+                });
+                println!("cost_model XLA artifact (256 configs):   {:>10.1} us/batch ({:.2} us/config)", t_xla * 1e6, t_xla * 1e6 / BATCH as f64);
+                println!("  XLA/fallback ratio: {:.2}x", t_xla / t_ref);
+            } else {
+                println!("cost_model XLA artifact: not built (run `make artifacts`)");
+            }
+
+            // GP surrogate round.
+            use cosmic::agents::bo::Surrogate;
+            let mut gp_rust = cosmic::runtime::GpSurrogate::load(None, Path::new("artifacts"), 0.4);
+            let mut gp_xla =
+                cosmic::runtime::GpSurrogate::load(Some(&rt.client), Path::new("artifacts"), 0.4);
+            let xs: Vec<Vec<f64>> = (0..32)
+                .map(|_| (0..32).map(|_| rng.gen_f64()).collect())
+                .collect();
+            let ys: Vec<f64> = (0..32).map(|_| rng.gen_f64()).collect();
+            gp_rust.fit(&xs, &ys);
+            gp_xla.fit(&xs, &ys);
+            let q: Vec<f64> = (0..32).map(|_| rng.gen_f64()).collect();
+            let t_rust = time_it(100, || {
+                black_box(gp_rust.predict(&q));
+            });
+            println!("\ngp predict rust fallback:                {:>10.1} us", t_rust * 1e6);
+            if gp_xla.is_xla() {
+                let _ = gp_xla.predict(&q);
+                let t_xla = time_it(100, || {
+                    black_box(gp_xla.predict(&q));
+                });
+                println!("gp predict XLA artifact:                 {:>10.1} us", t_xla * 1e6);
+            }
+        }
+        Err(e) => println!("PJRT unavailable ({e:#}); skipping XLA timings"),
+    }
+
+    // --- end-to-end DSE throughput ---
+    use cosmic::agents::AgentKind;
+    use cosmic::dse::{DseConfig, DseRunner};
+    let mut env = make_env(
+        presets::system2(),
+        vec![WorkloadSpec::training(model, 2048)],
+        Objective::PerfPerBwPerNpu,
+    );
+    let start = Instant::now();
+    let steps = 2000;
+    let r = DseRunner::new(DseConfig::new(AgentKind::Ga, steps, 9), cosmic::pss::SearchScope::FullStack)
+        .run(&mut env);
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "\nend-to-end GA DSE: {steps} steps in {wall:.2}s = {:.0} steps/s (best {:.3e})",
+        steps as f64 / wall,
+        r.best_reward
+    );
+}

@@ -1,0 +1,75 @@
+//! Compare the four search agents on one DSE problem (paper §6.4).
+//!
+//! ```sh
+//! cargo run --release --example agent_comparison
+//! ```
+//!
+//! Runs RW, GA, ACO and BO with identical budgets on the same
+//! environment and prints final reward, steps-to-peak and invalid-eval
+//! counts — the Figure 10 summary. Also demonstrates swapping the BO
+//! surrogate for the XLA-compiled artifact when available.
+
+use cosmic::agents::{AgentKind, BayesOpt};
+use cosmic::dse::{DseConfig, DseRunner, Objective, WorkloadSpec};
+use cosmic::harness::{make_env, print_table};
+use cosmic::pss::SearchScope;
+use cosmic::runtime::{GpSurrogate, Runtime};
+use cosmic::sim::presets;
+use cosmic::workload::models::presets as models;
+use std::path::Path;
+
+const STEPS: u64 = 600;
+
+fn main() {
+    let model = models::gpt3_13b().with_simulated_layers(4);
+    let mut rows = Vec::new();
+    for agent in AgentKind::ALL {
+        let mut env = make_env(
+            presets::system1(),
+            vec![WorkloadSpec::training(model.clone(), 1024)],
+            Objective::PerfPerBwPerNpu,
+        );
+        let t0 = std::time::Instant::now();
+        let r = DseRunner::new(DseConfig::new(agent, STEPS, 99), SearchScope::FullStack)
+            .run(&mut env);
+        rows.push(vec![
+            agent.name().to_string(),
+            format!("{:.4e}", r.best_reward),
+            format!("{}", r.steps_to_peak),
+            format!("{}", r.invalid),
+            format!("{:.2}s", t0.elapsed().as_secs_f64()),
+        ]);
+    }
+    print_table(
+        "Agent comparison (GPT3-13B, System 1, full-stack, 600 steps)",
+        &["agent", "best reward", "steps to peak", "invalid", "wall"],
+        &rows,
+    );
+
+    // BO with the AOT-compiled GP surrogate (Layer 2 artifact) when the
+    // artifacts are built; identical math to the Rust fallback.
+    if Path::new("artifacts/gp_surrogate.hlo.txt").exists() {
+        match Runtime::cpu() {
+            Ok(rt) => {
+                let gp = GpSurrogate::load(Some(&rt.client), Path::new("artifacts"), 0.4);
+                println!(
+                    "\nBO with {} surrogate:",
+                    if gp.is_xla() { "XLA (PJRT)" } else { "rust" }
+                );
+                let mut env = make_env(
+                    presets::system1(),
+                    vec![WorkloadSpec::training(model, 1024)],
+                    Objective::PerfPerBwPerNpu,
+                );
+                let space = env.pss.build_space(SearchScope::FullStack);
+                let mut bo = BayesOpt::new(space, 64, 99).with_surrogate(Box::new(gp));
+                let r = DseRunner::new(DseConfig::new(AgentKind::Bo, 150, 99), SearchScope::FullStack)
+                    .run_with_agent(&mut env, &mut bo);
+                println!("best reward {:.4e} at step {}", r.best_reward, r.steps_to_peak);
+            }
+            Err(e) => println!("PJRT unavailable: {e:#}"),
+        }
+    } else {
+        println!("\n(artifacts not built; run `make artifacts` to try the XLA-backed BO)");
+    }
+}

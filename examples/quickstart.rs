@@ -1,0 +1,49 @@
+//! Quickstart: simulate one distributed-training design point.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds Table 3's System 1 (512 TPUv5p-like NPUs), trains GPT3-13B
+//! with a hand-picked parallelization, and prints the simulator's
+//! latency/memory/utilization report.
+
+use cosmic::prelude::*;
+
+fn main() {
+    // 1. A target cluster: Table 3's System 1 preset. Presets are plain
+    //    data — build your own ClusterConfig for custom fabrics.
+    let cluster = cosmic::sim::presets::system1();
+    println!("cluster: {} ({} NPUs)", cluster.topology, cluster.npus());
+
+    // 2. A workload: GPT3-13B from Table 2, simulating 4 layers with
+    //    post-scaling (the paper's own trick to bound simulation time).
+    let model = cosmic::workload::models::presets::gpt3_13b().with_simulated_layers(4);
+    println!("model:   {} ({:.1}B params)", model.name, model.total_params() as f64 / 1e9);
+
+    // 3. A parallelization: DP=64, SP=1, PP=1; TP is derived (=8 here);
+    //    ZeRO weight sharding on.
+    let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).expect("valid par");
+    println!("par:     {par}");
+
+    // 4. Simulate one training iteration at global batch 1024.
+    let report = Simulator::new()
+        .run(&cluster, &model, &par, 1024, ExecutionMode::Training)
+        .expect("valid design point");
+
+    println!("\niteration latency : {:>10.2} ms", report.latency_us / 1e3);
+    println!("compute time      : {:>10.2} ms", report.compute_us / 1e3);
+    println!("blocking comm     : {:>10.2} ms", report.comm_blocking_us / 1e3);
+    println!("exposed grad sync : {:>10.2} ms", report.comm_exposed_us / 1e3);
+    println!("memory per NPU    : {:>10.2} GB", report.memory.total() / 1e9);
+    println!("cluster throughput: {:>10.1} TFLOP/s", report.achieved_tflops);
+    println!("comm fraction     : {:>10.1} %", report.comm_fraction() * 100.0);
+
+    // 5. The §5.4 memory constraint in action: drop sharding and the
+    //    same design point becomes invalid.
+    let dense = Parallelization::derive(cluster.npus(), 64, 1, 1, false).unwrap();
+    match Simulator::new().run(&cluster, &model, &dense, 1024, ExecutionMode::Training) {
+        Err(e) => println!("\nwithout weight sharding: rejected ({e:?})"),
+        Ok(r) => println!("\nwithout weight sharding: {:.2} GB/NPU", r.memory.total() / 1e9),
+    }
+}

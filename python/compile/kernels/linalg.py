@@ -1,0 +1,72 @@
+"""Custom-call-free dense linear algebra for AOT artifacts.
+
+``jnp.linalg.cholesky`` / ``jax.scipy.linalg.solve_triangular`` lower to
+LAPACK *custom-calls* on CPU (API_VERSION_TYPED_FFI), which the Rust
+runtime's XLA (xla_extension 0.5.1) cannot execute. These replacements
+lower to pure HLO (while-loops + dynamic slices) so the GP artifact runs
+on any PJRT backend.
+
+All routines assume static square shapes — fine for the fixed-shape AOT
+artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def cholesky(k):
+    """Lower-triangular Cholesky factor of an SPD matrix.
+
+    Right-looking algorithm: one ``fori_loop`` over columns, each step a
+    masked rank-1 Schur-complement update — O(n) HLO while-iterations of
+    O(n^2) vector work.
+    """
+    k = jnp.asarray(k)
+    n = k.shape[0]
+    rows = jnp.arange(n)
+
+    def body(j, carry):
+        a, l = carry
+        d = jnp.sqrt(jnp.maximum(a[j, j], 1e-30))
+        col = jnp.where(rows >= j, a[:, j] / d, 0.0)
+        l = l.at[:, j].set(col)
+        a = a - jnp.outer(col, col)
+        return (a, l)
+
+    _, l = jax.lax.fori_loop(0, n, body, (k, jnp.zeros_like(k)))
+    return l
+
+
+def solve_lower(l, b):
+    """Solve ``L y = b`` (forward substitution). ``b``: [n] or [n, m]."""
+    l, b = jnp.asarray(l), jnp.asarray(b)
+    n = l.shape[0]
+    y0 = jnp.zeros_like(b)
+
+    def body(i, y):
+        # y[j] == 0 for j >= i, so the full dot only picks up j < i.
+        acc = l[i, :] @ y
+        yi = (b[i] - acc) / l[i, i]
+        return y.at[i].set(yi)
+
+    return jax.lax.fori_loop(0, n, body, y0)
+
+
+def solve_upper_t(l, b):
+    """Solve ``L^T x = b`` (backward substitution on the transpose)."""
+    l, b = jnp.asarray(l), jnp.asarray(b)
+    n = l.shape[0]
+    x0 = jnp.zeros_like(b)
+
+    def body(k, x):
+        i = n - 1 - k
+        acc = l[:, i] @ x  # only rows j > i contribute (x[j>i] set)
+        xi = (b[i] - acc) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, x0)
+
+
+def cho_solve(l, b):
+    """Solve ``L L^T x = b`` given the Cholesky factor."""
+    return solve_upper_t(l, solve_lower(l, b))

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernel and the GP surrogate.
+
+These are the correctness references: ``test_kernel.py`` asserts the
+Pallas kernel matches ``roofline_cost_ref`` across randomized and
+hypothesis-generated inputs, and ``test_model.py`` checks the GP graph
+against ``gp_posterior_ref``. The Rust fallback
+(``rust/src/runtime/fallback.rs``) implements the same equations.
+"""
+
+import jax.numpy as jnp
+
+
+def roofline_cost_ref(flops, bytes_, steps, volume, alpha_us, beta, peak, membw):
+    """Reference for kernels.roofline.roofline_cost (same signature)."""
+    compute = jnp.sum(jnp.maximum(flops / peak[0], bytes_ / membw[0]), axis=1)
+    comm = jnp.sum(steps * alpha_us + volume / beta, axis=1)
+    return compute + comm
+
+
+def gp_posterior_ref(x_train, y, mask, x_query, lengthscale, noise):
+    """Reference GP posterior (mean, var) with masked padding rows.
+
+    Must match both ``model.gp_surrogate`` and the Rust fallback:
+    - RBF kernel ``exp(-|a-b|^2 / (2 l^2))`` masked by row validity;
+    - diagonal gets ``noise + 1e-6``, plus ``1.0`` on padded rows;
+    - ``var = max(1 - v.v, 1e-9)`` with ``v = L^-1 k_q``.
+    """
+    ls2 = 2.0 * lengthscale[0] * lengthscale[0]
+    d2 = jnp.sum((x_train[:, None, :] - x_train[None, :, :]) ** 2, axis=-1)
+    k = jnp.exp(-d2 / ls2) * mask[:, None] * mask[None, :]
+    diag = noise[0] + 1e-6 + (1.0 - mask) * 1.0
+    k = k + jnp.diag(diag)
+
+    l = jnp.linalg.cholesky(k)
+    ym = y * mask
+    alpha = jnp.linalg.solve(k, ym)
+
+    d2q = jnp.sum((x_train[:, None, :] - x_query[None, :, :]) ** 2, axis=-1)
+    kq = jnp.exp(-d2q / ls2) * mask[:, None]  # [train, query]
+    mean = kq.T @ alpha
+    v = jnp.linalg.solve(l, kq)  # [train, query]
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-9)
+    return mean, var

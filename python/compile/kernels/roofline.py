@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: batched roofline + alpha-beta collective cost.
+
+The DSE inner loop scores thousands of candidate cluster configurations;
+the analytical pre-filter evaluates, for a batch of ``BATCH`` candidates
+with ``OPS`` operator classes and ``DIMS`` network dimensions:
+
+    total[i] = sum_k max(flops[i,k]/peak, bytes[i,k]/membw)          (roofline)
+             + sum_d (steps[i,d] * alpha[i,d] + volume[i,d]/beta[i,d])  (alpha-beta)
+
+Shapes are fixed at AOT time (see ``SHAPES``) and must match the Rust
+side (``rust/src/runtime/fallback.rs``).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is blocked along
+the batch axis in ``BLOCK`` rows so one block's operands --
+``BLOCK*(2*OPS + 4*DIMS) * 4 B`` = 128*(16+16)*4 = 16 KiB -- sit
+comfortably in VMEM; the reduction over ops/dims is VPU elementwise work
+with a single fused max. ``interpret=True`` everywhere: the CPU PJRT
+client cannot run Mosaic custom-calls, and correctness is what the AOT
+path needs (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed artifact shapes -- keep in sync with rust/src/runtime/fallback.rs.
+BATCH = 256
+OPS = 8
+DIMS = 4
+BLOCK = 128  # batch rows per Pallas block
+
+SHAPES = {
+    "flops": (BATCH, OPS),
+    "bytes": (BATCH, OPS),
+    "steps": (BATCH, DIMS),
+    "volume": (BATCH, DIMS),
+    "alpha_us": (BATCH, DIMS),
+    "beta": (BATCH, DIMS),
+}
+
+
+def _cost_kernel(flops_ref, bytes_ref, steps_ref, volume_ref, alpha_ref,
+                 beta_ref, peak_ref, membw_ref, out_ref):
+    """One block: BLOCK candidate rows, full OPS/DIMS width."""
+    peak = peak_ref[0]
+    membw = membw_ref[0]
+    compute_us = jnp.maximum(flops_ref[...] / peak, bytes_ref[...] / membw)
+    compute_total = jnp.sum(compute_us, axis=1)
+    comm_us = steps_ref[...] * alpha_ref[...] + volume_ref[...] / beta_ref[...]
+    comm_total = jnp.sum(comm_us, axis=1)
+    out_ref[...] = compute_total + comm_total
+
+
+@functools.partial(jax.jit, static_argnames=())
+def roofline_cost(flops, bytes_, steps, volume, alpha_us, beta, peak, membw):
+    """Batched analytical cost (microseconds) per candidate config.
+
+    ``peak``/``membw`` arrive as shape-(1,) f32 arrays (flops/us and
+    bytes/us) so the whole computation stays shape-polymorphic-free for
+    AOT lowering.
+    """
+    grid = (BATCH // BLOCK,)
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, OPS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, OPS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, DIMS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, DIMS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, DIMS), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, DIMS), lambda i: (i, 0)),
+            # Scalars broadcast to every block.
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((BATCH,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(flops, bytes_, steps, volume, alpha_us, beta, peak, membw)

@@ -1,0 +1,103 @@
+"""L2 compute graphs, AOT-lowered to HLO text for the Rust runtime.
+
+Two graphs:
+
+- ``cost_model`` -- the batched analytical cost estimator. Wraps the L1
+  Pallas roofline kernel (``kernels/roofline.py``); the Rust DSE uses it
+  to score candidate-configuration batches before running the detailed
+  discrete-event simulation.
+- ``gp_surrogate`` -- the BO agent's Gaussian-process posterior
+  (fit + predict in one call: masked RBF kernel, Cholesky solve,
+  posterior mean/variance at a padded query batch).
+
+Both use fixed shapes (AOT requires static shapes); padding + masks
+handle variable problem sizes. Python never runs at DSE time -- these
+lower once in ``aot.py`` and the Rust runtime executes the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linalg
+from .kernels.roofline import BATCH, DIMS, OPS, roofline_cost
+
+# GP artifact shapes -- keep in sync with rust/src/runtime/fallback.rs.
+GP_TRAIN = 64
+GP_QUERY = 64
+GP_FEATURES = 32
+
+
+def cost_model(flops, bytes_, steps, volume, alpha_us, beta, peak, membw):
+    """Batched candidate scoring. Returns a 1-tuple (jax AOT convention).
+
+    Args (all f32):
+        flops, bytes_:      [BATCH, OPS]   per-operator roofline inputs
+        steps, volume,
+        alpha_us, beta:     [BATCH, DIMS]  per-dimension alpha-beta inputs
+        peak, membw:        [1]            device roofline constants
+    """
+    total = roofline_cost(flops, bytes_, steps, volume, alpha_us, beta, peak, membw)
+    return (total,)
+
+
+def cost_model_specs():
+    """ShapeDtypeStructs for lowering cost_model."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((BATCH, OPS), f32),
+        jax.ShapeDtypeStruct((BATCH, OPS), f32),
+        jax.ShapeDtypeStruct((BATCH, DIMS), f32),
+        jax.ShapeDtypeStruct((BATCH, DIMS), f32),
+        jax.ShapeDtypeStruct((BATCH, DIMS), f32),
+        jax.ShapeDtypeStruct((BATCH, DIMS), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+def gp_surrogate(x_train, y, mask, x_query, lengthscale, noise):
+    """GP posterior (mean, var) at the queries.
+
+    Matches ``kernels.ref.gp_posterior_ref`` and the Rust fallback:
+    masked RBF kernel; diagonal jitter ``noise + 1e-6`` plus ``1.0`` on
+    padded rows; Cholesky solves; ``var = max(1 - v.v, 1e-9)``.
+
+    Args (all f32):
+        x_train:     [GP_TRAIN, GP_FEATURES]  normalized genomes (padded)
+        y:           [GP_TRAIN]               centered rewards
+        mask:        [GP_TRAIN]               1.0 = real row, 0.0 = padding
+        x_query:     [GP_QUERY, GP_FEATURES]  query genomes (padded)
+        lengthscale: [1]
+        noise:       [1]
+    """
+    ls2 = 2.0 * lengthscale[0] * lengthscale[0]
+    d2 = jnp.sum((x_train[:, None, :] - x_train[None, :, :]) ** 2, axis=-1)
+    k = jnp.exp(-d2 / ls2) * mask[:, None] * mask[None, :]
+    diag = noise[0] + 1e-6 + (1.0 - mask) * 1.0
+    k = k + jnp.diag(diag)
+
+    # Custom-call-free factorization (kernels/linalg.py): jnp.linalg /
+    # jax.scipy lower to LAPACK custom-calls the Rust-side XLA rejects.
+    l = linalg.cholesky(k)
+    ym = y * mask
+    alpha = linalg.cho_solve(l, ym)
+
+    d2q = jnp.sum((x_train[:, None, :] - x_query[None, :, :]) ** 2, axis=-1)
+    kq = jnp.exp(-d2q / ls2) * mask[:, None]  # [train, query]
+    mean = kq.T @ alpha
+    v = linalg.solve_lower(l, kq)  # [train, query]
+    var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-9)
+    return (mean, var)
+
+
+def gp_surrogate_specs():
+    """ShapeDtypeStructs for lowering gp_surrogate."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((GP_TRAIN, GP_FEATURES), f32),
+        jax.ShapeDtypeStruct((GP_TRAIN,), f32),
+        jax.ShapeDtypeStruct((GP_TRAIN,), f32),
+        jax.ShapeDtypeStruct((GP_QUERY, GP_FEATURES), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )

@@ -1,0 +1,98 @@
+"""L1 correctness: Pallas roofline kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer: the kernel
+that ends up inside the AOT artifact must agree with ``ref.py`` on
+every input we can throw at it -- fixed cases, seeded random sweeps, and
+hypothesis-generated shapes/values.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import roofline_cost_ref
+from compile.kernels.roofline import BATCH, DIMS, OPS, roofline_cost
+
+
+def make_inputs(rng, scale=1e6):
+    f32 = np.float32
+    return (
+        rng.uniform(0, scale, (BATCH, OPS)).astype(f32),
+        rng.uniform(0, scale, (BATCH, OPS)).astype(f32),
+        rng.uniform(0, 64, (BATCH, DIMS)).astype(f32),
+        rng.uniform(0, scale, (BATCH, DIMS)).astype(f32),
+        rng.uniform(0.01, 10, (BATCH, DIMS)).astype(f32),
+        rng.uniform(1, 1e5, (BATCH, DIMS)).astype(f32),
+        np.array([1e8], dtype=f32),
+        np.array([1e6], dtype=f32),
+    )
+
+
+def test_zero_inputs_cost_zero():
+    zeros = (
+        np.zeros((BATCH, OPS), np.float32),
+        np.zeros((BATCH, OPS), np.float32),
+        np.zeros((BATCH, DIMS), np.float32),
+        np.zeros((BATCH, DIMS), np.float32),
+        np.zeros((BATCH, DIMS), np.float32),
+        np.ones((BATCH, DIMS), np.float32),
+        np.array([1.0], np.float32),
+        np.array([1.0], np.float32),
+    )
+    out = np.asarray(roofline_cost(*zeros))
+    assert out.shape == (BATCH,)
+    np.testing.assert_array_equal(out, 0.0)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 17, 42])
+def test_kernel_matches_ref_random(seed):
+    rng = np.random.default_rng(seed)
+    inputs = make_inputs(rng)
+    got = np.asarray(roofline_cost(*inputs))
+    want = np.asarray(roofline_cost_ref(*inputs))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+def test_roofline_max_semantics():
+    """A compute-bound row must cost flops/peak; memory-bound bytes/membw."""
+    rng = np.random.default_rng(7)
+    inputs = list(make_inputs(rng))
+    # Zero out comm terms.
+    for i in (2, 3):
+        inputs[i] = np.zeros_like(inputs[i])
+    inputs[4] = np.zeros_like(inputs[4])
+    # Row 0: all compute-bound (huge flops, tiny bytes).
+    inputs[0][0, :] = 1e9
+    inputs[1][0, :] = 1.0
+    out = np.asarray(roofline_cost(*inputs))
+    expect = OPS * 1e9 / inputs[6][0]
+    np.testing.assert_allclose(out[0], expect, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1.0, 1e3, 1e6, 1e9]),
+    peak=st.sampled_from([1e6, 1e8, 4.59e8]),
+    membw=st.sampled_from([5e4, 1e6, 2.765e6]),
+)
+def test_kernel_matches_ref_hypothesis(seed, scale, peak, membw):
+    rng = np.random.default_rng(seed)
+    inputs = list(make_inputs(rng, scale=scale))
+    inputs[6] = np.array([peak], np.float32)
+    inputs[7] = np.array([membw], np.float32)
+    got = np.asarray(roofline_cost(*inputs))
+    want = np.asarray(roofline_cost_ref(*inputs))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+    assert np.all(np.isfinite(got))
+    assert np.all(got >= 0)
+
+
+def test_monotone_in_flops():
+    rng = np.random.default_rng(11)
+    inputs = list(make_inputs(rng))
+    base = np.asarray(roofline_cost(*inputs))
+    inputs[0] = inputs[0] * 2.0
+    more = np.asarray(roofline_cost(*inputs))
+    assert np.all(more >= base - 1e-3)

@@ -1,0 +1,56 @@
+"""Custom-call-free linalg kernels vs numpy/LAPACK references."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import linalg
+
+
+def spd(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (n, n)).astype(np.float32)
+    return a @ a.T + n * np.eye(n, dtype=np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([2, 3, 8, 16, 64]), seed=st.integers(0, 10_000))
+def test_cholesky_matches_numpy(n, seed):
+    k = spd(n, seed)
+    l = np.asarray(linalg.cholesky(k))
+    l_ref = np.linalg.cholesky(k)
+    np.testing.assert_allclose(l, l_ref, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([2, 8, 32]), seed=st.integers(0, 10_000))
+def test_cho_solve_solves(n, seed):
+    k = spd(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    b = rng.normal(0, 1, n).astype(np.float32)
+    l = linalg.cholesky(k)
+    x = np.asarray(linalg.cho_solve(l, b))
+    np.testing.assert_allclose(k @ x, b, rtol=1e-2, atol=1e-2)
+
+
+def test_solve_lower_matrix_rhs():
+    k = spd(16, 3)
+    l = np.asarray(linalg.cholesky(k))
+    rng = np.random.default_rng(4)
+    b = rng.normal(0, 1, (16, 5)).astype(np.float32)
+    y = np.asarray(linalg.solve_lower(l, b))
+    np.testing.assert_allclose(l @ y, b, rtol=1e-3, atol=1e-3)
+
+
+def test_solve_upper_t_matrix_rhs():
+    k = spd(16, 5)
+    l = np.asarray(linalg.cholesky(k))
+    rng = np.random.default_rng(6)
+    b = rng.normal(0, 1, 16).astype(np.float32)
+    x = np.asarray(linalg.solve_upper_t(l, b))
+    np.testing.assert_allclose(l.T @ x, b, rtol=1e-3, atol=1e-3)
+
+
+def test_cholesky_lower_triangular():
+    l = np.asarray(linalg.cholesky(spd(8, 9)))
+    assert np.allclose(np.triu(l, 1), 0.0)

@@ -1,0 +1,107 @@
+"""L2 correctness: the GP surrogate graph and the cost-model wrapper."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import gp_posterior_ref
+from compile.model import (
+    GP_FEATURES,
+    GP_QUERY,
+    GP_TRAIN,
+    cost_model,
+    cost_model_specs,
+    gp_surrogate,
+    gp_surrogate_specs,
+)
+
+
+def gp_inputs(n_real=8, seed=0, lengthscale=0.4, noise=1e-4):
+    rng = np.random.default_rng(seed)
+    f32 = np.float32
+    x = np.zeros((GP_TRAIN, GP_FEATURES), f32)
+    y = np.zeros((GP_TRAIN,), f32)
+    mask = np.zeros((GP_TRAIN,), f32)
+    x[:n_real] = rng.uniform(0, 1, (n_real, GP_FEATURES)).astype(f32)
+    y[:n_real] = rng.normal(0, 1, n_real).astype(f32)
+    mask[:n_real] = 1.0
+    xq = np.zeros((GP_QUERY, GP_FEATURES), f32)
+    xq[:n_real] = rng.uniform(0, 1, (n_real, GP_FEATURES)).astype(f32)
+    return x, y, mask, xq, np.array([lengthscale], f32), np.array([noise], f32)
+
+
+def test_gp_matches_reference():
+    inputs = gp_inputs(n_real=10, seed=3)
+    mean, var = gp_surrogate(*inputs)
+    mean_ref, var_ref = gp_posterior_ref(*inputs)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_gp_interpolates_training_points():
+    x, y, mask, _, ls, noise = gp_inputs(n_real=6, seed=5, noise=1e-5)
+    # Query exactly the training points.
+    xq = x.copy()
+    mean, var = gp_surrogate(x, y, mask, xq, ls, noise)
+    mean = np.asarray(mean)[:6]
+    var = np.asarray(var)[:6]
+    np.testing.assert_allclose(mean, y[:6], atol=0.05)
+    assert np.all(var < 0.05)
+
+
+def test_gp_variance_bounds():
+    inputs = gp_inputs(n_real=4, seed=9)
+    _, var = gp_surrogate(*inputs)
+    var = np.asarray(var)
+    assert np.all(var > 0)
+    assert np.all(var <= 1.0 + 1e-5)
+
+
+def test_gp_padding_inert():
+    x, y, mask, xq, ls, noise = gp_inputs(n_real=5, seed=1)
+    x2 = x.copy()
+    x2[10:] = 0.77  # garbage in padded rows
+    m1, v1 = gp_surrogate(x, y, mask, xq, ls, noise)
+    m2, v2 = gp_surrogate(x2, y, mask, xq, ls, noise)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_real=st.integers(2, GP_TRAIN),
+    seed=st.integers(0, 10_000),
+    ls=st.sampled_from([0.1, 0.3, 0.5, 1.0]),
+)
+def test_gp_reference_agreement_hypothesis(n_real, seed, ls):
+    inputs = gp_inputs(n_real=n_real, seed=seed, lengthscale=ls)
+    mean, var = gp_surrogate(*inputs)
+    mean_ref, var_ref = gp_posterior_ref(*inputs)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_ref), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_ref), rtol=1e-3, atol=1e-3)
+
+
+def test_cost_model_wrapper_shapes():
+    specs = cost_model_specs()
+    args = [np.ones(s.shape, np.float32) for s in specs]
+    (total,) = cost_model(*args)
+    assert np.asarray(total).shape == (specs[0].shape[0],)
+
+
+def test_spec_shapes_match_rust_constants():
+    """Shape contract with rust/src/runtime/fallback.rs."""
+    cm = cost_model_specs()
+    assert cm[0].shape == (256, 8)
+    assert cm[2].shape == (256, 4)
+    gp = gp_surrogate_specs()
+    assert gp[0].shape == (64, 32)
+    assert gp[3].shape == (64, 32)
+
+
+@pytest.mark.parametrize("n_real", [1, GP_TRAIN])
+def test_gp_edge_population_sizes(n_real):
+    inputs = gp_inputs(n_real=n_real, seed=2)
+    mean, var = gp_surrogate(*inputs)
+    assert np.all(np.isfinite(np.asarray(mean)))
+    assert np.all(np.isfinite(np.asarray(var)))

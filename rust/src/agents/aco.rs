@@ -1,0 +1,201 @@
+//! Ant Colony Optimization agent (paper §5.3, [9]).
+//!
+//! Each parameter slot keeps a pheromone vector over its domain values.
+//! An ant constructs a genome by sampling each free slot proportionally to
+//! `pheromone^greediness`; after evaluation, ants deposit pheromone on
+//! the slots of high-reward genomes and all trails evaporate by `rho`.
+//! The paper tunes the number of ants, the greediness factor, and the
+//! evaporation rate.
+
+use super::Agent;
+use crate::psa::DesignSpace;
+use crate::util::Rng;
+
+pub struct AntColony {
+    space: DesignSpace,
+    rng: Rng,
+    /// `pheromone[slot][value]`.
+    pheromone: Vec<Vec<f64>>,
+    pub ants: usize,
+    pub greediness: f64,
+    pub evaporation: f64,
+    best: Option<(Vec<usize>, f64)>,
+}
+
+impl AntColony {
+    pub fn new(space: DesignSpace, ants: usize, greediness: f64, evaporation: f64, seed: u64) -> Self {
+        let pheromone = space.slot_cards.iter().map(|&c| vec![1.0; c]).collect();
+        Self {
+            space,
+            rng: Rng::seed_from_u64(seed),
+            pheromone,
+            ants: ants.max(1),
+            greediness,
+            evaporation: evaporation.clamp(0.0, 1.0),
+            best: None,
+        }
+    }
+
+    fn construct(&mut self) -> Vec<usize> {
+        let mut g = self.space.baseline.clone();
+        let free = self.space.free_slots.clone();
+        for &s in &free {
+            let weights: Vec<f64> =
+                self.pheromone[s].iter().map(|&p| p.powf(self.greediness)).collect();
+            g[s] = self.rng.weighted_index(&weights);
+        }
+        g
+    }
+
+    /// Best genome observed so far (and its reward).
+    pub fn best(&self) -> Option<&(Vec<usize>, f64)> {
+        self.best.as_ref()
+    }
+
+    /// Current pheromone mass on a slot value (for tests/inspection).
+    pub fn pheromone_at(&self, slot: usize, value: usize) -> f64 {
+        self.pheromone[slot][value]
+    }
+}
+
+impl Agent for AntColony {
+    fn name(&self) -> &'static str {
+        "ACO"
+    }
+
+    fn ask(&mut self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.ants);
+        for _ in 0..self.ants {
+            // Construct until valid (bounded); fall back to random valid.
+            let mut g = self.construct();
+            for _ in 0..50 {
+                if self.space.is_valid(&g) {
+                    break;
+                }
+                g = self.construct();
+            }
+            if !self.space.is_valid(&g) {
+                g = self
+                    .space
+                    .random_valid_genome(&mut self.rng, 2000)
+                    .unwrap_or_else(|| self.space.baseline.clone());
+            }
+            out.push(g);
+        }
+        out
+    }
+
+    fn tell(&mut self, results: &[(Vec<usize>, f64)]) {
+        // Evaporate.
+        for trail in &mut self.pheromone {
+            for p in trail.iter_mut() {
+                *p *= 1.0 - self.evaporation;
+                *p = p.max(1e-6); // keep exploration alive
+            }
+        }
+        // Deposit proportional to reward; the iteration best deposits and
+        // the global best reinforces (elitist ant system).
+        for (g, r) in results {
+            if *r <= 0.0 {
+                continue;
+            }
+            for &s in &self.space.free_slots {
+                self.pheromone[s][g[s]] += *r;
+            }
+            if self.best.as_ref().map(|(_, br)| *r > *br).unwrap_or(true) {
+                self.best = Some((g.clone(), *r));
+            }
+        }
+        if let Some((bg, br)) = self.best.clone() {
+            for &s in &self.space.free_slots {
+                self.pheromone[s][bg[s]] += br * 0.5;
+            }
+        }
+    }
+
+    fn space(&self) -> &DesignSpace {
+        &self.space
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psa::paper_table4_schema;
+    use crate::pss::{Pss, SearchScope};
+    use crate::sim::presets;
+    use crate::workload::Parallelization;
+
+    fn space() -> DesignSpace {
+        Pss::new(
+            paper_table4_schema(1024, 4),
+            presets::system2(),
+            Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+        )
+        .build_space(SearchScope::FullStack)
+    }
+
+    #[test]
+    fn deposits_increase_pheromone_on_rewarded_values() {
+        let sp = space();
+        let slot = sp.free_slots[0];
+        let mut aco = AntColony::new(sp, 4, 2.0, 0.1, 3);
+        let proposals = aco.ask();
+        let g = proposals[0].clone();
+        let v = g[slot];
+        let before = aco.pheromone_at(slot, v);
+        aco.tell(&[(g, 10.0)]);
+        let after = aco.pheromone_at(slot, v);
+        assert!(after > before, "pheromone should grow: {before} -> {after}");
+    }
+
+    #[test]
+    fn evaporation_decays_unrewarded_trails() {
+        let sp = space();
+        let slot = sp.free_slots[0];
+        let mut aco = AntColony::new(sp, 2, 2.0, 0.5, 4);
+        let before = aco.pheromone_at(slot, 0);
+        // Tell with zero rewards: everything evaporates only.
+        let proposals = aco.ask();
+        let results: Vec<_> = proposals.into_iter().map(|g| (g, 0.0)).collect();
+        aco.tell(&results);
+        let after = aco.pheromone_at(slot, 0);
+        assert!(after < before);
+    }
+
+    #[test]
+    fn converges_to_rewarded_value_on_synthetic_objective() {
+        let sp = space();
+        let slot = sp.free_slots[0];
+        let mut aco = AntColony::new(sp, 8, 2.0, 0.2, 5);
+        // Reward only genomes with value 1 in the chosen slot.
+        for _ in 0..30 {
+            let proposals = aco.ask();
+            let results: Vec<_> = proposals
+                .into_iter()
+                .map(|g| {
+                    let r = if g[slot] == 1 { 1.0 } else { 0.01 };
+                    (g, r)
+                })
+                .collect();
+            aco.tell(&results);
+        }
+        // After 30 iterations most proposals should pick value 1.
+        let proposals = aco.ask();
+        let hits = proposals.iter().filter(|g| g[slot] == 1).count();
+        assert!(hits * 2 >= proposals.len(), "{hits}/{} converged", proposals.len());
+    }
+
+    #[test]
+    fn tracks_global_best() {
+        let mut aco = AntColony::new(space(), 3, 2.0, 0.1, 6);
+        let proposals = aco.ask();
+        let g1 = proposals[0].clone();
+        aco.tell(&[(g1.clone(), 5.0)]);
+        assert_eq!(aco.best().unwrap().1, 5.0);
+        let proposals = aco.ask();
+        aco.tell(&[(proposals[0].clone(), 2.0)]);
+        // Lower reward does not displace the best.
+        assert_eq!(aco.best().unwrap().1, 5.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Bayesian Optimization agent (paper §5.3, [32]).
+//!
+//! GP surrogate (RBF over genomes normalized to the unit hypercube) +
+//! Expected Improvement acquisition maximized over a random valid
+//! candidate pool. The paper "randomizes the surrogate model by varying
+//! the random seed of the underlying Gaussian process" — the seed here
+//! drives both the initial design and the candidate pools.
+//!
+//! The GP fit/predict math has an AOT-compiled JAX twin
+//! (`artifacts/gp_surrogate.hlo.txt`); when a [`runtime::GpSurrogate`]
+//! hook is installed the posterior is evaluated through XLA, otherwise
+//! the pure-Rust [`Gp`] is used. Both implement the same equations.
+
+use super::gp::Gp;
+use super::Agent;
+use crate::psa::DesignSpace;
+use crate::util::Rng;
+
+/// Posterior evaluation hook — satisfied by `runtime::GpSurrogate` (XLA)
+/// and by the built-in Rust GP. (Not `Send`: the PJRT client handle is
+/// `Rc`-based; the DSE loop is single-threaded by design.)
+pub trait Surrogate {
+    /// Fit on (normalized xs, ys); return false if the fit failed.
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool;
+    /// Posterior (mean, variance) at one normalized query.
+    fn predict(&self, q: &[f64]) -> (f64, f64);
+}
+
+/// Default surrogate: the pure-Rust GP.
+struct RustSurrogate {
+    gp: Option<Gp>,
+    lengthscale: f64,
+}
+
+impl Surrogate for RustSurrogate {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+        match Gp::fit(xs.to_vec(), ys, self.lengthscale, 1.0, 1e-4) {
+            Ok(gp) => {
+                self.gp = Some(gp);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn predict(&self, q: &[f64]) -> (f64, f64) {
+        match &self.gp {
+            Some(gp) => gp.predict(q),
+            None => (0.0, 1.0),
+        }
+    }
+}
+
+pub struct BayesOpt {
+    space: DesignSpace,
+    rng: Rng,
+    /// Observed (genome, normalized genome, reward).
+    history: Vec<(Vec<usize>, Vec<f64>, f64)>,
+    surrogate: Box<dyn Surrogate>,
+    /// Candidate pool size per acquisition round.
+    pub pool: usize,
+    /// Initial random design before the GP kicks in.
+    pub init_points: usize,
+    /// Cap on GP training set (most recent + best kept).
+    pub max_train: usize,
+    asked_init: usize,
+}
+
+impl BayesOpt {
+    pub fn new(space: DesignSpace, pool: usize, seed: u64) -> Self {
+        let lengthscale = 0.2 * (space.free_slots.len().max(1) as f64).sqrt();
+        Self {
+            space,
+            rng: Rng::seed_from_u64(seed),
+            history: Vec::new(),
+            surrogate: Box::new(RustSurrogate { gp: None, lengthscale }),
+            pool: pool.max(8),
+            init_points: 8,
+            max_train: 160,
+            asked_init: 0,
+        }
+    }
+
+    /// Install a different surrogate (e.g. the XLA-backed one).
+    pub fn with_surrogate(mut self, surrogate: Box<dyn Surrogate>) -> Self {
+        self.surrogate = surrogate;
+        self
+    }
+
+    /// Normalize a genome to the unit hypercube over free slots.
+    fn normalize(&self, g: &[usize]) -> Vec<f64> {
+        self.space
+            .free_slots
+            .iter()
+            .map(|&s| {
+                let card = self.space.slot_cards[s].max(2);
+                g[s] as f64 / (card - 1) as f64
+            })
+            .collect()
+    }
+
+    fn best_reward(&self) -> f64 {
+        self.history.iter().map(|(_, _, r)| *r).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn refit(&mut self) -> bool {
+        if self.history.is_empty() {
+            return false;
+        }
+        // Training subset: keep the best quarter + most recent.
+        let mut idx: Vec<usize> = (0..self.history.len()).collect();
+        if self.history.len() > self.max_train {
+            idx.sort_by(|&a, &b| {
+                self.history[b].2.partial_cmp(&self.history[a].2).unwrap()
+            });
+            let keep_best = self.max_train / 4;
+            let mut chosen: Vec<usize> = idx[..keep_best].to_vec();
+            let recent_start = self.history.len() - (self.max_train - keep_best);
+            chosen.extend(recent_start..self.history.len());
+            chosen.sort_unstable();
+            chosen.dedup();
+            idx = chosen;
+        }
+        let xs: Vec<Vec<f64>> = idx.iter().map(|&i| self.history[i].1.clone()).collect();
+        let ys: Vec<f64> = idx.iter().map(|&i| self.history[i].2).collect();
+        self.surrogate.fit(&xs, &ys)
+    }
+
+    fn acquisition(&self, q: &[f64], best: f64) -> f64 {
+        let (mu, var) = self.surrogate.predict(q);
+        let sigma = var.max(1e-12).sqrt();
+        // Expected improvement (same closed form as Gp::expected_improvement,
+        // but routed through the pluggable surrogate).
+        let z = (mu - best) / sigma;
+        let pdf = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+        let cdf = 0.5 * (1.0 + erf_local(z / std::f64::consts::SQRT_2));
+        ((mu - best) * cdf + sigma * pdf).max(0.0)
+    }
+}
+
+fn erf_local(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+impl Agent for BayesOpt {
+    fn name(&self) -> &'static str {
+        "BO"
+    }
+
+    fn ask(&mut self) -> Vec<Vec<usize>> {
+        // Phase 1: initial random design.
+        if self.asked_init < self.init_points {
+            self.asked_init += 1;
+            let g = self
+                .space
+                .random_valid_genome(&mut self.rng, 2000)
+                .unwrap_or_else(|| self.space.baseline.clone());
+            return vec![g];
+        }
+        // Phase 2: fit GP, maximize EI over a random valid pool.
+        if !self.refit() {
+            let g = self
+                .space
+                .random_valid_genome(&mut self.rng, 2000)
+                .unwrap_or_else(|| self.space.baseline.clone());
+            return vec![g];
+        }
+        let best = self.best_reward();
+        let mut best_g: Option<(Vec<usize>, f64)> = None;
+        for _ in 0..self.pool {
+            if let Some(g) = self.space.random_valid_genome(&mut self.rng, 200) {
+                let q = self.normalize(&g);
+                let ei = self.acquisition(&q, best);
+                if best_g.as_ref().map(|(_, b)| ei > *b).unwrap_or(true) {
+                    best_g = Some((g, ei));
+                }
+            }
+        }
+        vec![best_g.map(|(g, _)| g).unwrap_or_else(|| self.space.baseline.clone())]
+    }
+
+    fn tell(&mut self, results: &[(Vec<usize>, f64)]) {
+        for (g, r) in results {
+            let q = self.normalize(g);
+            self.history.push((g.clone(), q, *r));
+        }
+    }
+
+    fn space(&self) -> &DesignSpace {
+        &self.space
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psa::paper_table4_schema;
+    use crate::pss::{Pss, SearchScope};
+    use crate::sim::presets;
+    use crate::workload::Parallelization;
+
+    fn space() -> DesignSpace {
+        Pss::new(
+            paper_table4_schema(1024, 4),
+            presets::system2(),
+            Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+        )
+        .build_space(SearchScope::FullStack)
+    }
+
+    #[test]
+    fn initial_design_then_model_based() {
+        let mut bo = BayesOpt::new(space(), 16, 21);
+        bo.init_points = 3;
+        for _ in 0..5 {
+            let p = bo.ask();
+            assert_eq!(p.len(), 1);
+            assert!(bo.space.is_valid(&p[0]));
+            bo.tell(&[(p[0].clone(), 0.1)]);
+        }
+        assert!(bo.history.len() == 5);
+    }
+
+    #[test]
+    fn normalization_maps_to_unit_cube() {
+        let bo = BayesOpt::new(space(), 16, 1);
+        let g = bo.space.baseline.clone();
+        let q = bo.normalize(&g);
+        assert_eq!(q.len(), bo.space.free_slots.len());
+        assert!(q.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn improves_on_synthetic_objective() {
+        // Smooth objective over the normalized genome: BO should find
+        // better points than its initial random design on average.
+        let mut bo = BayesOpt::new(space(), 48, 33);
+        bo.init_points = 6;
+        let objective = |q: &[f64]| 1.0 - q.iter().map(|x| (x - 0.3).abs()).sum::<f64>() / q.len() as f64;
+        let mut rewards = Vec::new();
+        for _ in 0..40 {
+            let g = bo.ask().pop().unwrap();
+            let q = bo.normalize(&g);
+            let r = objective(&q);
+            rewards.push(r);
+            bo.tell(&[(g, r)]);
+        }
+        let early: f64 = rewards[..6].iter().sum::<f64>() / 6.0;
+        let late_best = rewards[6..].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(late_best >= early, "late_best={late_best} early_mean={early}");
+    }
+
+    #[test]
+    fn history_capping_keeps_fit_working() {
+        let mut bo = BayesOpt::new(space(), 16, 5);
+        bo.init_points = 2;
+        bo.max_train = 20;
+        for i in 0..60 {
+            let g = bo.ask().pop().unwrap();
+            bo.tell(&[(g, (i as f64 * 0.31).sin().abs())]);
+        }
+        assert_eq!(bo.history.len(), 60);
+        assert!(bo.refit(), "refit must succeed with capped training set");
+    }
+}

@@ -1,0 +1,210 @@
+//! Genetic Algorithm agent (paper §5.3, [21]).
+//!
+//! Classic generational GA over genomes: tournament selection, uniform
+//! crossover, per-slot mutation, elitism of one. The paper tunes
+//! population size and mutation probability; invalid offspring are
+//! repaired by re-sampling the offending slots (bounded), else replaced
+//! by a fresh valid genome.
+
+use super::Agent;
+use crate::psa::DesignSpace;
+use crate::util::Rng;
+
+pub struct Genetic {
+    space: DesignSpace,
+    rng: Rng,
+    population: Vec<Vec<usize>>,
+    fitness: Vec<f64>,
+    pub mutation_prob: f64,
+    generation: u64,
+}
+
+impl Genetic {
+    pub fn new(space: DesignSpace, population: usize, mutation_prob: f64, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let population: Vec<Vec<usize>> = (0..population.max(2))
+            .map(|_| {
+                space
+                    .random_valid_genome(&mut rng, 2000)
+                    .unwrap_or_else(|| space.baseline.clone())
+            })
+            .collect();
+        let fitness = vec![0.0; population.len()];
+        Self { space, rng, population, fitness, mutation_prob, generation: 0 }
+    }
+
+    fn tournament(&mut self) -> usize {
+        let a = self.rng.gen_range(self.population.len());
+        let b = self.rng.gen_range(self.population.len());
+        if self.fitness[a] >= self.fitness[b] {
+            a
+        } else {
+            b
+        }
+    }
+
+    fn crossover(&mut self, p1: usize, p2: usize) -> Vec<usize> {
+        let (a, b) = (self.population[p1].clone(), self.population[p2].clone());
+        let mut child = a;
+        for (i, bv) in b.iter().enumerate() {
+            if self.rng.gen_bool(0.5) {
+                child[i] = *bv;
+            }
+        }
+        child
+    }
+
+    fn mutate(&mut self, genome: &mut Vec<usize>) {
+        // Iterate free slots; each flips with probability mutation_prob.
+        let free = self.space.free_slots.clone();
+        for s in free {
+            if self.rng.gen_bool(self.mutation_prob) {
+                let card = self.space.slot_cards[s];
+                if card > 1 {
+                    genome[s] = self.rng.gen_range(card);
+                }
+            }
+        }
+    }
+
+    fn repair(&mut self, genome: Vec<usize>) -> Vec<usize> {
+        if self.space.is_valid(&genome) {
+            return genome;
+        }
+        let mut g = genome;
+        for _ in 0..100 {
+            g = self.space.mutate_one(&g, &mut self.rng);
+            if self.space.is_valid(&g) {
+                return g;
+            }
+        }
+        self.space
+            .random_valid_genome(&mut self.rng, 2000)
+            .unwrap_or_else(|| self.space.baseline.clone())
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}
+
+impl Agent for Genetic {
+    fn name(&self) -> &'static str {
+        "GA"
+    }
+
+    fn ask(&mut self) -> Vec<Vec<usize>> {
+        if self.generation == 0 {
+            // First generation: evaluate the random initial population.
+            return self.population.clone();
+        }
+        // Elite carries over; the rest are offspring.
+        let elite = self
+            .fitness
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let mut next = vec![self.population[elite].clone()];
+        while next.len() < self.population.len() {
+            let p1 = self.tournament();
+            let p2 = self.tournament();
+            let mut child = self.crossover(p1, p2);
+            self.mutate(&mut child);
+            next.push(self.repair(child));
+        }
+        self.population = next.clone();
+        next
+    }
+
+    fn tell(&mut self, results: &[(Vec<usize>, f64)]) {
+        // Results arrive in ask-order == population order.
+        for (i, (_, reward)) in results.iter().enumerate() {
+            if i < self.fitness.len() {
+                self.fitness[i] = *reward;
+            }
+        }
+        self.generation += 1;
+    }
+
+    fn space(&self) -> &DesignSpace {
+        &self.space
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psa::paper_table4_schema;
+    use crate::pss::{Pss, SearchScope};
+    use crate::sim::presets;
+    use crate::workload::Parallelization;
+
+    fn space() -> DesignSpace {
+        Pss::new(
+            paper_table4_schema(1024, 4),
+            presets::system2(),
+            Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+        )
+        .build_space(SearchScope::FullStack)
+    }
+
+    fn reward(g: &[usize]) -> f64 {
+        // Synthetic smooth objective: prefer small slot indices.
+        1.0 / (1.0 + g.iter().map(|&x| x as f64).sum::<f64>())
+    }
+
+    #[test]
+    fn improves_on_synthetic_objective() {
+        let mut ga = Genetic::new(space(), 24, 0.1, 11);
+        let mut first_best = 0.0f64;
+        let mut last_best = 0.0f64;
+        for gen in 0..30 {
+            let proposals = ga.ask();
+            let results: Vec<(Vec<usize>, f64)> =
+                proposals.into_iter().map(|g| (g.clone(), reward(&g))).collect();
+            let best = results.iter().map(|r| r.1).fold(0.0, f64::max);
+            if gen == 0 {
+                first_best = best;
+            }
+            last_best = last_best.max(best);
+            ga.tell(&results);
+        }
+        assert!(last_best >= first_best, "GA regressed: {last_best} < {first_best}");
+    }
+
+    #[test]
+    fn elite_survives() {
+        let mut ga = Genetic::new(space(), 8, 0.2, 5);
+        let proposals = ga.ask();
+        // Give genome 3 a huge reward.
+        let results: Vec<(Vec<usize>, f64)> = proposals
+            .iter()
+            .enumerate()
+            .map(|(i, g)| (g.clone(), if i == 3 { 100.0 } else { 0.1 }))
+            .collect();
+        let champion = proposals[3].clone();
+        ga.tell(&results);
+        let next = ga.ask();
+        assert_eq!(next[0], champion, "elite must carry over as first member");
+    }
+
+    #[test]
+    fn offspring_are_valid() {
+        let mut ga = Genetic::new(space(), 10, 0.3, 9);
+        let proposals = ga.ask();
+        let results: Vec<(Vec<usize>, f64)> =
+            proposals.into_iter().map(|g| (g.clone(), reward(&g))).collect();
+        ga.tell(&results);
+        for g in ga.ask() {
+            assert!(ga.space.is_valid(&g));
+        }
+    }
+
+    #[test]
+    fn population_clamps_to_two() {
+        let ga = Genetic::new(space(), 0, 0.1, 1);
+        assert_eq!(ga.population.len(), 2);
+    }
+}

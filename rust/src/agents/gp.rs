@@ -1,0 +1,243 @@
+//! Gaussian-process regression for the BO agent — the L2/L1 surrogate's
+//! pure-Rust twin.
+//!
+//! RBF kernel over genomes normalized to the unit hypercube, fitted by a
+//! jitter-stabilized Cholesky factorization. This module is the reference
+//! implementation the AOT-compiled JAX surrogate (`artifacts/
+//! gp_surrogate.hlo.txt`, built by `python/compile/model.py`) must agree
+//! with — `runtime::tests` and the python test-suite check both against
+//! the same fixtures.
+
+/// Squared-exponential kernel: `σ² · exp(-‖a-b‖² / (2ℓ²))`.
+fn rbf(a: &[f64], b: &[f64], lengthscale: f64, signal_var: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    signal_var * (-d2 / (2.0 * lengthscale * lengthscale)).exp()
+}
+
+/// In-place Cholesky of a symmetric positive-definite matrix (row-major
+/// `n×n`). Returns the lower-triangular factor. Fails on non-PD input.
+pub fn cholesky(mat: &[f64], n: usize) -> Result<Vec<f64>, String> {
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = mat[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("matrix not PD at pivot {i} (sum={sum})"));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (forward) then `Lᵀ x = y` (backward).
+pub fn cho_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// A fitted Gaussian process.
+pub struct Gp {
+    x: Vec<Vec<f64>>,
+    /// Cholesky factor of `K + σ_n² I`.
+    chol: Vec<f64>,
+    /// `(K + σ_n² I)^{-1} (y - mean)`.
+    alpha: Vec<f64>,
+    mean: f64,
+    pub lengthscale: f64,
+    pub signal_var: f64,
+    pub noise_var: f64,
+}
+
+impl Gp {
+    /// Fit on normalized inputs `x` (each in `[0,1]^d`) and targets `y`.
+    pub fn fit(
+        x: Vec<Vec<f64>>,
+        y: &[f64],
+        lengthscale: f64,
+        signal_var: f64,
+        noise_var: f64,
+    ) -> Result<Self, String> {
+        let n = x.len();
+        if n == 0 || n != y.len() {
+            return Err(format!("bad GP shapes: {n} inputs, {} targets", y.len()));
+        }
+        let mean = y.iter().sum::<f64>() / n as f64;
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = rbf(&x[i], &x[j], lengthscale, signal_var);
+            }
+            k[i * n + i] += noise_var + 1e-8; // jitter
+        }
+        let chol = cholesky(&k, n)?;
+        let centered: Vec<f64> = y.iter().map(|v| v - mean).collect();
+        let alpha = cho_solve(&chol, n, &centered);
+        Ok(Self { x, chol, alpha, mean, lengthscale, signal_var, noise_var })
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    /// Posterior mean and variance at `q`.
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kq: Vec<f64> =
+            self.x.iter().map(|xi| rbf(xi, q, self.lengthscale, self.signal_var)).collect();
+        let mean = self.mean + kq.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>();
+        // var = k(q,q) - kqᵀ (K+σI)⁻¹ kq, via v = L⁻¹ kq.
+        let mut v = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = kq[i];
+            for k in 0..i {
+                sum -= self.chol[i * n + k] * v[k];
+            }
+            v[i] = sum / self.chol[i * n + i];
+        }
+        let kqq = self.signal_var;
+        let var = (kqq - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (mean, var)
+    }
+
+    /// Expected improvement over `best` at `q` (maximization).
+    pub fn expected_improvement(&self, q: &[f64], best: f64) -> f64 {
+        let (mu, var) = self.predict(q);
+        let sigma = var.sqrt();
+        if sigma < 1e-12 {
+            return (mu - best).max(0.0);
+        }
+        let z = (mu - best) / sigma;
+        let (pdf, cdf) = (std_normal_pdf(z), std_normal_cdf(z));
+        ((mu - best) * cdf + sigma * pdf).max(0.0)
+    }
+}
+
+fn std_normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Abramowitz–Stegun-style erf approximation (max err ~1.5e-7).
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+fn std_normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_of_identity() {
+        let n = 3;
+        let eye = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&eye, n).unwrap();
+        assert_eq!(l, eye);
+    }
+
+    #[test]
+    fn cholesky_known_2x2() {
+        // [[4, 2], [2, 3]] -> L = [[2, 0], [1, sqrt(2)]]
+        let l = cholesky(&[4.0, 2.0, 2.0, 3.0], 2).unwrap();
+        assert!((l[0] - 2.0).abs() < 1e-12);
+        assert!((l[2] - 1.0).abs() < 1e-12);
+        assert!((l[3] - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        assert!(cholesky(&[1.0, 2.0, 2.0, 1.0], 2).is_err());
+    }
+
+    #[test]
+    fn cho_solve_inverts() {
+        // A = [[4,2],[2,3]], b = [8, 7] -> x = [1.25, 1.5]
+        let l = cholesky(&[4.0, 2.0, 2.0, 3.0], 2).unwrap();
+        let x = cho_solve(&l, 2, &[8.0, 7.0]);
+        assert!((4.0 * x[0] + 2.0 * x[1] - 8.0).abs() < 1e-10);
+        assert!((2.0 * x[0] + 3.0 * x[1] - 7.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gp_interpolates_training_points() {
+        let x = vec![vec![0.0], vec![0.5], vec![1.0]];
+        let y = [1.0, 2.0, 3.0];
+        let gp = Gp::fit(x, &y, 0.3, 1.0, 1e-6).unwrap();
+        for (xi, yi) in [(0.0, 1.0), (0.5, 2.0), (1.0, 3.0)] {
+            let (mu, var) = gp.predict(&[xi]);
+            assert!((mu - yi).abs() < 0.05, "mu({xi})={mu} want {yi}");
+            assert!(var < 0.01, "var at training point should be tiny, got {var}");
+        }
+    }
+
+    #[test]
+    fn gp_uncertainty_grows_away_from_data() {
+        let x = vec![vec![0.0], vec![0.1]];
+        let y = [0.0, 0.1];
+        let gp = Gp::fit(x, &y, 0.1, 1.0, 1e-6).unwrap();
+        let (_, var_near) = gp.predict(&[0.05]);
+        let (_, var_far) = gp.predict(&[0.9]);
+        assert!(var_far > var_near * 10.0, "near={var_near} far={var_far}");
+    }
+
+    #[test]
+    fn ei_prefers_unexplored_high_mean() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = [0.0, 1.0];
+        let gp = Gp::fit(x, &y, 0.4, 1.0, 1e-6).unwrap();
+        let ei_known_bad = gp.expected_improvement(&[0.0], 1.0);
+        let ei_promising = gp.expected_improvement(&[0.8], 1.0);
+        assert!(ei_promising > ei_known_bad);
+    }
+
+    #[test]
+    fn erf_matches_known_values() {
+        assert!((erf(0.0)).abs() < 1e-6); // A&S 7.1.26 approx
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((std_normal_cdf(0.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gp_rejects_shape_mismatch() {
+        assert!(Gp::fit(vec![vec![0.0]], &[1.0, 2.0], 0.3, 1.0, 1e-6).is_err());
+        assert!(Gp::fit(vec![], &[], 0.3, 1.0, 1e-6).is_err());
+    }
+}

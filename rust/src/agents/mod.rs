@@ -1,0 +1,139 @@
+//! ML search agents (paper §5.3).
+//!
+//! Four agents, matching the paper's selection: **Random Walker** (RW),
+//! **Genetic Algorithm** (GA), **Ant Colony Optimization** (ACO) and
+//! **Bayesian Optimization** (BO). All speak the same [`Agent`] interface
+//! — the PsA/PSS guarantee (§4.3) that *"any agent can be integrated
+//! without modification"*: agents see only genomes (one integer index per
+//! parameter slot) and scalar rewards; they never touch domain objects.
+//!
+//! The paper's agent hyper-parameters (§5.3): RW varies population size;
+//! GA population size and mutation probability; ACO number of ants,
+//! greediness and evaporation rate; BO the surrogate's random seed.
+
+pub mod aco;
+pub mod bo;
+pub mod ga;
+pub mod gp;
+pub mod rw;
+
+pub use aco::AntColony;
+pub use bo::BayesOpt;
+pub use ga::Genetic;
+pub use rw::RandomWalker;
+
+use crate::psa::DesignSpace;
+
+/// The agent⇄environment contract: `ask` proposes genomes, `tell`
+/// reports their rewards (same order). Invalid proposals receive reward 0
+/// like any other bad configuration — agents must learn to avoid them.
+pub trait Agent {
+    fn name(&self) -> &'static str;
+
+    /// Propose the next batch of genomes to evaluate.
+    fn ask(&mut self) -> Vec<Vec<usize>>;
+
+    /// Observe rewards for the genomes returned by the last `ask`.
+    fn tell(&mut self, results: &[(Vec<usize>, f64)]);
+
+    /// The action space the agent searches (set by the PSS).
+    fn space(&self) -> &DesignSpace;
+}
+
+/// Agent kinds, for CLI/bench construction by name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AgentKind {
+    Rw,
+    Ga,
+    Aco,
+    Bo,
+}
+
+impl AgentKind {
+    pub const ALL: [AgentKind; 4] = [AgentKind::Rw, AgentKind::Ga, AgentKind::Aco, AgentKind::Bo];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AgentKind::Rw => "RW",
+            AgentKind::Ga => "GA",
+            AgentKind::Aco => "ACO",
+            AgentKind::Bo => "BO",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "RW" | "RANDOM" | "RANDOM-WALKER" => Some(AgentKind::Rw),
+            "GA" | "GENETIC" => Some(AgentKind::Ga),
+            "ACO" | "ANT" | "ANT-COLONY" => Some(AgentKind::Aco),
+            "BO" | "BAYES" | "BAYESIAN" => Some(AgentKind::Bo),
+            _ => None,
+        }
+    }
+
+    /// Construct the agent with paper-like default hyper-parameters.
+    pub fn build(&self, space: DesignSpace, seed: u64) -> Box<dyn Agent> {
+        match self {
+            AgentKind::Rw => Box::new(RandomWalker::new(space, 8, seed)),
+            AgentKind::Ga => Box::new(Genetic::new(space, 16, 0.15, seed)),
+            AgentKind::Aco => Box::new(AntColony::new(space, 12, 2.0, 0.1, seed)),
+            AgentKind::Bo => Box::new(BayesOpt::new(space, 64, seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psa::paper_table4_schema;
+    use crate::pss::{Pss, SearchScope};
+    use crate::sim::presets;
+    use crate::workload::Parallelization;
+
+    fn space() -> DesignSpace {
+        let pss = Pss::new(
+            paper_table4_schema(1024, 4),
+            presets::system2(),
+            Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+        );
+        pss.build_space(SearchScope::FullStack)
+    }
+
+    #[test]
+    fn from_name_roundtrips() {
+        for k in AgentKind::ALL {
+            assert_eq!(AgentKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(AgentKind::from_name("zzz"), None);
+    }
+
+    #[test]
+    fn all_agents_ask_tell_cycle() {
+        let sp = space();
+        for kind in AgentKind::ALL {
+            let mut agent = kind.build(sp.clone(), 42);
+            for step in 0..3 {
+                let proposals = agent.ask();
+                assert!(!proposals.is_empty(), "{} step {step}: empty ask", kind.name());
+                for g in &proposals {
+                    assert_eq!(g.len(), sp.schema.genome_len(), "{}", kind.name());
+                }
+                let results: Vec<(Vec<usize>, f64)> =
+                    proposals.into_iter().map(|g| (g, 0.5)).collect();
+                agent.tell(&results);
+            }
+        }
+    }
+
+    #[test]
+    fn agents_are_deterministic_given_seed() {
+        let sp = space();
+        for kind in AgentKind::ALL {
+            let mut a = kind.build(sp.clone(), 7);
+            let mut b = kind.build(sp.clone(), 7);
+            let pa = a.ask();
+            let pb = b.ask();
+            assert_eq!(pa, pb, "{} not deterministic", kind.name());
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Random Walker agent (paper §5.3, [39]).
+//!
+//! A population of independent walkers. Each step every walker mutates
+//! one slot of its current position and moves there unconditionally — RW
+//! "does not leverage history" (paper §6.4), so its reward curve is flat
+//! on average and it finds good points purely by chance. The population
+//! size is the only hyper-parameter the paper varies.
+
+use super::Agent;
+use crate::psa::DesignSpace;
+use crate::util::Rng;
+
+pub struct RandomWalker {
+    space: DesignSpace,
+    rng: Rng,
+    walkers: Vec<Vec<usize>>,
+}
+
+impl RandomWalker {
+    pub fn new(space: DesignSpace, population: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let walkers = (0..population.max(1))
+            .map(|_| {
+                space
+                    .random_valid_genome(&mut rng, 2000)
+                    .unwrap_or_else(|| space.baseline.clone())
+            })
+            .collect();
+        Self { space, rng, walkers }
+    }
+
+    pub fn population(&self) -> usize {
+        self.walkers.len()
+    }
+}
+
+impl Agent for RandomWalker {
+    fn name(&self) -> &'static str {
+        "RW"
+    }
+
+    fn ask(&mut self) -> Vec<Vec<usize>> {
+        let mut proposals = Vec::with_capacity(self.walkers.len());
+        for w in &mut self.walkers {
+            // Mutate until valid (bounded), else stay put.
+            let mut next = self.space.mutate_one(w, &mut self.rng);
+            for _ in 0..50 {
+                if self.space.is_valid(&next) {
+                    break;
+                }
+                next = self.space.mutate_one(w, &mut self.rng);
+            }
+            if !self.space.is_valid(&next) {
+                next = w.clone();
+            }
+            *w = next.clone();
+            proposals.push(next);
+        }
+        proposals
+    }
+
+    fn tell(&mut self, _results: &[(Vec<usize>, f64)]) {
+        // Memoryless by design.
+    }
+
+    fn space(&self) -> &DesignSpace {
+        &self.space
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psa::paper_table4_schema;
+    use crate::pss::{Pss, SearchScope};
+    use crate::sim::presets;
+    use crate::workload::Parallelization;
+
+    fn space() -> DesignSpace {
+        Pss::new(
+            paper_table4_schema(1024, 4),
+            presets::system2(),
+            Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+        )
+        .build_space(SearchScope::FullStack)
+    }
+
+    #[test]
+    fn proposals_match_population() {
+        let mut rw = RandomWalker::new(space(), 5, 1);
+        assert_eq!(rw.population(), 5);
+        assert_eq!(rw.ask().len(), 5);
+    }
+
+    #[test]
+    fn all_proposals_are_valid() {
+        let mut rw = RandomWalker::new(space(), 6, 2);
+        for _ in 0..5 {
+            for g in rw.ask() {
+                assert!(rw.space.is_valid(&g));
+            }
+        }
+    }
+
+    #[test]
+    fn walkers_actually_move() {
+        let mut rw = RandomWalker::new(space(), 1, 3);
+        let a = rw.ask()[0].clone();
+        let mut moved = false;
+        for _ in 0..10 {
+            if rw.ask()[0] != a {
+                moved = true;
+                break;
+            }
+        }
+        assert!(moved);
+    }
+
+    #[test]
+    fn zero_population_clamps_to_one() {
+        let rw = RandomWalker::new(space(), 0, 4);
+        assert_eq!(rw.population(), 1);
+    }
+}

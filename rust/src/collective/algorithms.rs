@@ -1,0 +1,315 @@
+//! Analytical alpha-beta cost of collective algorithms over one network
+//! dimension (paper §2.2).
+//!
+//! The four algorithms the paper searches over (Table 1/4's
+//! `MultiDim {Ring, Direct, RHD, DBT}`) have well-known alpha-beta costs
+//! for an `n`-NPU group moving a per-NPU buffer of `S` bytes:
+//!
+//! | algo | all-reduce time | character |
+//! |---|---|---|
+//! | Ring (RI)   | `2(n-1)α + 2S(n-1)/(n·β)`            | bandwidth-optimal, latency-heavy |
+//! | Direct (DI) | `2α + 2S(n-1)/(n·β)` (n² messages)   | latency-optimal, needs all-to-all paths |
+//! | RHD         | `2log₂(n)α + 2S(n-1)/(n·β)`          | log latency, bw-optimal for powers of two |
+//! | DBT         | `2⌈log₂(n)⌉α + 2S/β` (two half-bw trees) | log latency, ~bw-optimal at scale |
+//!
+//! Reduce-Scatter and All-Gather are each "half" an All-Reduce; All-to-All
+//! is inherently direct-exchange shaped. Non-power-of-two groups pay one
+//! extra (α + S/β) round for RHD/DBT (the standard 3-phase trick).
+//!
+//! These closed forms are used in two places: (i) the L1 Pallas kernel and
+//! its Rust fallback (`runtime::fallback`) evaluate them in batch as the
+//! DSE pre-filter, and (ii) the chunk scheduler uses them as per-chunk
+//! phase durations in the discrete-event simulator.
+
+use crate::topology::DimCost;
+use std::fmt;
+
+/// Collective communication pattern (Figure 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    ReduceScatter,
+    AllGather,
+    AllReduce,
+    AllToAll,
+}
+
+impl CollectiveKind {
+    pub const ALL: [CollectiveKind; 4] = [
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::AllGather,
+        CollectiveKind::AllReduce,
+        CollectiveKind::AllToAll,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::ReduceScatter => "reduce-scatter",
+            CollectiveKind::AllGather => "all-gather",
+            CollectiveKind::AllReduce => "all-reduce",
+            CollectiveKind::AllToAll => "all-to-all",
+        }
+    }
+}
+
+impl fmt::Display for CollectiveKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Collective algorithm (paper's RI / DI / RHD / DBT).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollAlgo {
+    Ring,
+    Direct,
+    Rhd,
+    Dbt,
+}
+
+impl CollAlgo {
+    pub const ALL: [CollAlgo; 4] = [CollAlgo::Ring, CollAlgo::Direct, CollAlgo::Rhd, CollAlgo::Dbt];
+
+    /// Paper notation: RI / DI / RHD / DBT.
+    pub fn short(&self) -> &'static str {
+        match self {
+            CollAlgo::Ring => "RI",
+            CollAlgo::Direct => "DI",
+            CollAlgo::Rhd => "RHD",
+            CollAlgo::Dbt => "DBT",
+        }
+    }
+
+    pub fn from_short(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "RI" | "RING" => Some(CollAlgo::Ring),
+            "DI" | "DIRECT" => Some(CollAlgo::Direct),
+            "RHD" => Some(CollAlgo::Rhd),
+            "DBT" => Some(CollAlgo::Dbt),
+            _ => None,
+        }
+    }
+
+    /// Figure 9's 1-based parameter index (1=RI, 2=DI, 3=RHD, 4=DBT).
+    pub fn index(&self) -> usize {
+        match self {
+            CollAlgo::Ring => 1,
+            CollAlgo::Direct => 2,
+            CollAlgo::Rhd => 3,
+            CollAlgo::Dbt => 4,
+        }
+    }
+}
+
+impl fmt::Display for CollAlgo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+fn log2_ceil(n: u64) -> f64 {
+    (64 - (n - 1).leading_zeros()) as f64
+}
+
+fn is_pow2(n: u64) -> bool {
+    n.count_ones() == 1
+}
+
+/// Latency (α) term in microseconds for one *phase set* of the algorithm.
+fn alpha_steps(algo: CollAlgo, kind: CollectiveKind, n: u64) -> f64 {
+    let nf = n as f64;
+    let log = log2_ceil(n);
+    // Steps for the "one-sided" primitives (RS or AG); AR composes both.
+    let one_sided = match algo {
+        CollAlgo::Ring => nf - 1.0,
+        CollAlgo::Direct => 1.0,
+        CollAlgo::Rhd => log,
+        CollAlgo::Dbt => log,
+    };
+    let extra = if matches!(algo, CollAlgo::Rhd | CollAlgo::Dbt) && !is_pow2(n) {
+        1.0 // pre/post round for non-power-of-two groups
+    } else {
+        0.0
+    };
+    match kind {
+        CollectiveKind::ReduceScatter | CollectiveKind::AllGather => one_sided + extra,
+        CollectiveKind::AllReduce => 2.0 * one_sided + extra,
+        // All-to-all: personalized exchange. Ring forwards n-1 steps;
+        // direct is one shot; RHD/DBT degrade to log-structured exchange.
+        CollectiveKind::AllToAll => match algo {
+            CollAlgo::Ring => nf - 1.0,
+            CollAlgo::Direct => 1.0,
+            CollAlgo::Rhd | CollAlgo::Dbt => log + extra,
+        },
+    }
+}
+
+/// Bandwidth (β) term: bytes crossing the per-NPU link, as a multiple of
+/// the per-NPU buffer size `S`.
+fn beta_volume_factor(algo: CollAlgo, kind: CollectiveKind, n: u64) -> f64 {
+    let nf = n as f64;
+    let frac = (nf - 1.0) / nf;
+    let one_sided = match algo {
+        // RS/AG move S(n-1)/n for ring, direct, RHD alike.
+        CollAlgo::Ring | CollAlgo::Direct | CollAlgo::Rhd => frac,
+        // DBT does a full-buffer reduce+broadcast on two half-bandwidth
+        // trees: effective volume ~= S per one-sided primitive.
+        CollAlgo::Dbt => 1.0,
+    };
+    let extra = if matches!(algo, CollAlgo::Rhd | CollAlgo::Dbt) && !is_pow2(n) {
+        1.0 / nf // remainder NPUs exchange one shard
+    } else {
+        0.0
+    };
+    match kind {
+        CollectiveKind::ReduceScatter | CollectiveKind::AllGather => one_sided + extra,
+        CollectiveKind::AllReduce => 2.0 * one_sided + extra,
+        // All-to-all: every NPU sends S(n-1)/n regardless of algorithm,
+        // but ring-style forwarding relays payload ~n/2 times on average.
+        CollectiveKind::AllToAll => match algo {
+            CollAlgo::Direct => frac,
+            CollAlgo::Ring => frac * nf / 2.0,
+            CollAlgo::Rhd | CollAlgo::Dbt => frac * log2_ceil(n) / 2.0 + extra,
+        },
+    }
+}
+
+/// Time (microseconds) for a collective of `bytes` per-NPU payload over a
+/// group of `dim.npus` NPUs on one dimension, using `algo`.
+///
+/// `bytes` is the *per-NPU* buffer size (the paper's chunk size after
+/// upstream dimensions have scattered it). Groups of 1 are free.
+pub fn collective_time_us(algo: CollAlgo, kind: CollectiveKind, dim: &DimCost, bytes: f64) -> f64 {
+    let n = dim.npus;
+    if n <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let alpha = alpha_steps(algo, kind, n) * dim.alpha_us;
+    let beta = beta_volume_factor(algo, kind, n) * bytes / dim.beta_bytes_per_us;
+    alpha + beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{DimKind, NetworkDim};
+
+    fn dim(n: u64, bw: f64, lat: f64) -> DimCost {
+        DimCost::from_dim(&NetworkDim::new(DimKind::Ring, n, bw, lat))
+    }
+
+    const MB: f64 = 1e6;
+
+    #[test]
+    fn group_of_one_is_free() {
+        let d = dim(1, 100.0, 1.0);
+        for a in CollAlgo::ALL {
+            for k in CollectiveKind::ALL {
+                assert_eq!(collective_time_us(a, k, &d, MB), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let d = dim(8, 100.0, 1.0);
+        assert_eq!(collective_time_us(CollAlgo::Ring, CollectiveKind::AllReduce, &d, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ring_allreduce_matches_closed_form() {
+        let d = dim(8, 100.0, 1.0);
+        let s = 64.0 * MB;
+        let expect = 2.0 * 7.0 * 1.0 + 2.0 * (7.0 / 8.0) * s / 1e5;
+        let got = collective_time_us(CollAlgo::Ring, CollectiveKind::AllReduce, &d, s);
+        assert!((got - expect).abs() < 1e-6, "got {got}, expect {expect}");
+    }
+
+    #[test]
+    fn rhd_allreduce_matches_closed_form_pow2() {
+        let d = dim(16, 100.0, 1.0);
+        let s = 64.0 * MB;
+        let expect = 2.0 * 4.0 * 1.0 + 2.0 * (15.0 / 16.0) * s / 1e5;
+        let got = collective_time_us(CollAlgo::Rhd, CollectiveKind::AllReduce, &d, s);
+        assert!((got - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_ordering_small_messages() {
+        // For tiny payloads latency dominates: direct < RHD/DBT < ring for
+        // any non-trivial group — this is the paper's §6.3 observation that
+        // inference (small decode messages) prefers DI/RHD/DBT over RI.
+        let d = dim(16, 100.0, 2.0);
+        let tiny = 1024.0;
+        let t = |a| collective_time_us(a, CollectiveKind::AllReduce, &d, tiny);
+        assert!(t(CollAlgo::Direct) < t(CollAlgo::Rhd));
+        assert!(t(CollAlgo::Rhd) < t(CollAlgo::Ring));
+        assert!(t(CollAlgo::Dbt) < t(CollAlgo::Ring));
+    }
+
+    #[test]
+    fn ring_is_bandwidth_optimal_large_messages() {
+        // For huge payloads on low-latency links, ring ties/beats DBT
+        // (which moves 2S vs ring's 2S(n-1)/n).
+        let d = dim(16, 100.0, 0.01);
+        let huge = 1e9;
+        let ring = collective_time_us(CollAlgo::Ring, CollectiveKind::AllReduce, &d, huge);
+        let dbt = collective_time_us(CollAlgo::Dbt, CollectiveKind::AllReduce, &d, huge);
+        assert!(ring < dbt);
+    }
+
+    #[test]
+    fn allreduce_equals_rs_plus_ag_for_ring() {
+        let d = dim(8, 200.0, 0.5);
+        let s = 10.0 * MB;
+        let ar = collective_time_us(CollAlgo::Ring, CollectiveKind::AllReduce, &d, s);
+        let rs = collective_time_us(CollAlgo::Ring, CollectiveKind::ReduceScatter, &d, s);
+        let ag = collective_time_us(CollAlgo::Ring, CollectiveKind::AllGather, &d, s);
+        assert!((ar - (rs + ag)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_pow2_pays_extra_round_for_rhd() {
+        // Same total NPUs, but 12 (non-pow2) pays the pre/post round.
+        let d12 = dim(12, 100.0, 1.0);
+        let alpha12 = alpha_steps(CollAlgo::Rhd, CollectiveKind::AllReduce, 12);
+        // ceil(log2(12)) = 4 -> 2*4 + 1 extra = 9
+        assert!((alpha12 - 9.0).abs() < 1e-12);
+        assert!(collective_time_us(CollAlgo::Rhd, CollectiveKind::AllReduce, &d12, MB) > 0.0);
+    }
+
+    #[test]
+    fn cost_scales_linearly_in_bytes_at_fixed_alpha() {
+        let d = dim(8, 100.0, 0.0);
+        let t1 = collective_time_us(CollAlgo::Ring, CollectiveKind::AllGather, &d, MB);
+        let t2 = collective_time_us(CollAlgo::Ring, CollectiveKind::AllGather, &d, 2.0 * MB);
+        assert!((t2 - 2.0 * t1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_to_all_direct_cheapest() {
+        let d = dim(16, 100.0, 0.5);
+        let s = 8.0 * MB;
+        let t = |a| collective_time_us(a, CollectiveKind::AllToAll, &d, s);
+        assert!(t(CollAlgo::Direct) < t(CollAlgo::Ring));
+        assert!(t(CollAlgo::Direct) < t(CollAlgo::Rhd));
+    }
+
+    #[test]
+    fn short_and_index_roundtrip() {
+        for a in CollAlgo::ALL {
+            assert_eq!(CollAlgo::from_short(a.short()), Some(a));
+        }
+        assert_eq!(CollAlgo::Ring.index(), 1);
+        assert_eq!(CollAlgo::Dbt.index(), 4);
+    }
+
+    #[test]
+    fn more_npus_more_latency_steps_for_ring() {
+        let d4 = dim(4, 100.0, 1.0);
+        let d16 = dim(16, 100.0, 1.0);
+        let tiny = 8.0;
+        let t4 = collective_time_us(CollAlgo::Ring, CollectiveKind::AllReduce, &d4, tiny);
+        let t16 = collective_time_us(CollAlgo::Ring, CollectiveKind::AllReduce, &d16, tiny);
+        assert!(t16 > t4);
+    }
+}

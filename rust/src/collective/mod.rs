@@ -1,0 +1,114 @@
+//! Collective communication substrate (paper §2.2, Figure 2).
+//!
+//! Distributed ML synchronizes NPUs with *collective communications* —
+//! Reduce-Scatter, All-Gather, All-Reduce, All-to-All — executed in
+//! fine-grained *chunks* by a *collective algorithm* (Ring, Direct,
+//! Recursive Halving-Doubling, Double Binary Tree). This module provides:
+//!
+//! - [`algorithms`] — analytical alpha-beta cost of each (kind, algorithm)
+//!   pair over one network dimension;
+//! - [`multidim`] — composition of per-dimension phases into a
+//!   multi-dimensional collective, either the **Baseline** hierarchical
+//!   schedule or **BlueConnect**'s pipelined RS/AG decomposition;
+//! - [`scheduler`] — the chunk-level collective scheduler (LIFO/FIFO
+//!   policies, `chunks-per-collective` pipelining) used by the
+//!   discrete-event simulator.
+
+pub mod algorithms;
+pub mod multidim;
+pub mod scheduler;
+
+pub use algorithms::{collective_time_us, CollAlgo, CollectiveKind};
+pub use multidim::{multidim_collective_time_us, MultiDimPolicy};
+pub use scheduler::{ChunkScheduler, SchedulingPolicy};
+
+
+/// Full collective-stack configuration — the paper's "Collective Knob"
+/// rows in Tables 1 and 4.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectiveConfig {
+    /// Chunk scheduling policy ({LIFO, FIFO}).
+    pub scheduling: SchedulingPolicy,
+    /// One algorithm per network dimension (MultiDim {RI, DI, RHD, DBT}).
+    pub algorithms: Vec<CollAlgo>,
+    /// Chunks per collective ({1..=32}; Table 4 restricts to {2,4,8,16}).
+    pub chunks: u32,
+    /// Multi-dimensional composition ({Baseline, BlueConnect}).
+    pub multidim: MultiDimPolicy,
+}
+
+impl CollectiveConfig {
+    pub fn new(
+        scheduling: SchedulingPolicy,
+        algorithms: Vec<CollAlgo>,
+        chunks: u32,
+        multidim: MultiDimPolicy,
+    ) -> Self {
+        Self { scheduling, algorithms, chunks, multidim }
+    }
+
+    /// Paper-style algorithm notation, e.g. `[RI, RHD, DBT, DBT]`.
+    pub fn algo_notation(&self) -> String {
+        let inner: Vec<&str> = self.algorithms.iter().map(|a| a.short()).collect();
+        format!("[{}]", inner.join(", "))
+    }
+
+    pub fn validate(&self, num_dims: usize) -> Result<(), String> {
+        if self.algorithms.len() != num_dims {
+            return Err(format!(
+                "collective config has {} algorithms but topology has {} dims",
+                self.algorithms.len(),
+                num_dims
+            ));
+        }
+        if self.chunks == 0 || self.chunks > 32 {
+            return Err(format!("chunks per collective must be in 1..=32, got {}", self.chunks));
+        }
+        Ok(())
+    }
+}
+
+impl Default for CollectiveConfig {
+    fn default() -> Self {
+        Self {
+            scheduling: SchedulingPolicy::Fifo,
+            algorithms: vec![CollAlgo::Ring],
+            chunks: 1,
+            multidim: MultiDimPolicy::Baseline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_checks_dims_and_chunks() {
+        let c = CollectiveConfig::new(
+            SchedulingPolicy::Lifo,
+            vec![CollAlgo::Ring, CollAlgo::Rhd],
+            4,
+            MultiDimPolicy::Baseline,
+        );
+        assert!(c.validate(2).is_ok());
+        assert!(c.validate(3).is_err());
+        let mut bad = c.clone();
+        bad.chunks = 0;
+        assert!(bad.validate(2).is_err());
+        let mut bad = c;
+        bad.chunks = 64;
+        assert!(bad.validate(2).is_err());
+    }
+
+    #[test]
+    fn notation_matches_paper() {
+        let c = CollectiveConfig::new(
+            SchedulingPolicy::Lifo,
+            vec![CollAlgo::Ring, CollAlgo::Rhd, CollAlgo::Dbt, CollAlgo::Dbt],
+            4,
+            MultiDimPolicy::Baseline,
+        );
+        assert_eq!(c.algo_notation(), "[RI, RHD, DBT, DBT]");
+    }
+}

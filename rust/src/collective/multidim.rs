@@ -1,0 +1,348 @@
+//! Multi-dimensional collective composition (paper §2.2 / BlueConnect [7]).
+//!
+//! A collective over a group that spans several network dimensions is
+//! executed as a sequence of per-dimension phases. Two compositions are
+//! searched by the paper ("Multi-dim Collective" knob):
+//!
+//! - **Baseline** — the hierarchical schedule of ASTRA-sim: run
+//!   reduce-scatter phases inward (dim 0 .. dim D-1), each phase shrinking
+//!   the live shard by its dimension size, then all-gather phases outward.
+//!   Phases are strictly sequential for a given chunk.
+//! - **BlueConnect** — decompose the all-reduce into per-dimension
+//!   reduce-scatters and all-gathers and *pipeline* them across dimensions:
+//!   with enough chunks in flight, the collective time approaches the
+//!   slowest single dimension phase instead of the sum of all phases.
+//!
+//! Chunking: the payload is split into `chunks` equal pieces; consecutive
+//! chunks pipeline through the phase sequence, so total time is
+//! `sum(phases for one chunk) + (chunks-1) * bottleneck_phase`.
+
+use super::algorithms::{collective_time_us, CollAlgo, CollectiveKind};
+use crate::topology::{DimCost, Topology};
+
+/// Multi-dimensional composition policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MultiDimPolicy {
+    Baseline,
+    BlueConnect,
+}
+
+impl MultiDimPolicy {
+    pub const ALL: [MultiDimPolicy; 2] = [MultiDimPolicy::Baseline, MultiDimPolicy::BlueConnect];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MultiDimPolicy::Baseline => "Baseline",
+            MultiDimPolicy::BlueConnect => "BlueConnect",
+        }
+    }
+
+    /// Figure 9's 1-based index (1=Baseline, 2=BlueConnect).
+    pub fn index(&self) -> usize {
+        match self {
+            MultiDimPolicy::Baseline => 1,
+            MultiDimPolicy::BlueConnect => 2,
+        }
+    }
+}
+
+/// Phase list for one chunk of an all-reduce over `dims` (subset of the
+/// topology's dimensions that the communicating group spans), with the
+/// per-dimension algorithm choice. Returns per-phase durations in us.
+fn allreduce_phases(
+    algos: &[CollAlgo],
+    dims: &[DimCost],
+    chunk_bytes: f64,
+) -> Vec<f64> {
+    // Hierarchical schedule: RS inward over dims 0..D, then AG outward.
+    // After the RS on dim d (size n_d), the live shard shrinks by n_d.
+    let mut phases = Vec::with_capacity(dims.len() * 2);
+    let mut size = chunk_bytes;
+    for (d, dim) in dims.iter().enumerate() {
+        phases.push(collective_time_us(algos[d], CollectiveKind::ReduceScatter, dim, size));
+        size /= dim.npus as f64;
+    }
+    for (d, dim) in dims.iter().enumerate().rev() {
+        size *= dim.npus as f64;
+        phases.push(collective_time_us(algos[d], CollectiveKind::AllGather, dim, size));
+    }
+    phases
+}
+
+fn one_sided_phases(
+    kind: CollectiveKind,
+    algos: &[CollAlgo],
+    dims: &[DimCost],
+    chunk_bytes: f64,
+) -> Vec<f64> {
+    match kind {
+        CollectiveKind::AllReduce => allreduce_phases(algos, dims, chunk_bytes),
+        CollectiveKind::ReduceScatter => {
+            let mut size = chunk_bytes;
+            dims.iter()
+                .enumerate()
+                .map(|(d, dim)| {
+                    let t = collective_time_us(algos[d], kind, dim, size);
+                    size /= dim.npus as f64;
+                    t
+                })
+                .collect()
+        }
+        CollectiveKind::AllGather => {
+            // Gather outward: the shard grows through the dims.
+            let total: f64 = dims.iter().map(|d| d.npus as f64).product();
+            let mut size = chunk_bytes / total;
+            dims.iter()
+                .enumerate()
+                .rev()
+                .map(|(d, dim)| {
+                    size *= dim.npus as f64;
+                    collective_time_us(algos[d], kind, dim, size)
+                })
+                .collect()
+        }
+        CollectiveKind::AllToAll => {
+            // Personalized exchange phase per dimension on the full chunk.
+            dims.iter()
+                .enumerate()
+                .map(|(d, dim)| collective_time_us(algos[d], kind, dim, chunk_bytes))
+                .collect()
+        }
+    }
+}
+
+/// Time (us) for a multi-dimensional collective of `bytes` per-NPU payload
+/// over the given dimension subset, split into `chunks` pipelined pieces.
+///
+/// `dims`/`algos` must be the same length: the dimensions spanned by the
+/// communicating group, innermost first, with each dimension's algorithm.
+pub fn multidim_collective_time_us(
+    kind: CollectiveKind,
+    policy: MultiDimPolicy,
+    algos: &[CollAlgo],
+    dims: &[DimCost],
+    bytes: f64,
+    chunks: u32,
+) -> f64 {
+    assert_eq!(algos.len(), dims.len(), "one algorithm per spanned dimension");
+    if dims.is_empty() || bytes <= 0.0 {
+        return 0.0;
+    }
+    let chunks = chunks.max(1);
+    let chunk_bytes = bytes / chunks as f64;
+    let phases = one_sided_phases(kind, algos, dims, chunk_bytes);
+    let first: f64 = phases.iter().sum();
+    let bottleneck = phases.iter().cloned().fold(0.0, f64::max);
+    match policy {
+        // Baseline: chunks pipeline through strictly sequential phases —
+        // classic pipeline makespan: one full pass plus (chunks-1) times
+        // the bottleneck stage.
+        MultiDimPolicy::Baseline => first + (chunks as f64 - 1.0) * bottleneck,
+        // BlueConnect decomposes the collective so each dimension's
+        // RS/AG stream runs *concurrently* on its own links (not merely
+        // pipelined): steady state is chunks x the bottleneck dimension,
+        // and the fill/drain is the largest single non-bottleneck phase
+        // (they overlap each other), not their sum.
+        MultiDimPolicy::BlueConnect => {
+            let fill = phases
+                .iter()
+                .cloned()
+                .filter(|p| *p < bottleneck)
+                .fold(0.0, f64::max);
+            bottleneck * chunks as f64 + fill
+        }
+    }
+}
+
+/// Convenience: resolve the [`DimCost`]s for a contiguous span of topology
+/// dimensions `[lo, hi)` — the common case where a parallelism group maps
+/// onto whole topology dimensions.
+pub fn dim_costs(topo: &Topology, lo: usize, hi: usize) -> Vec<DimCost> {
+    topo.dims[lo..hi].iter().map(DimCost::from_dim).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{DimKind, NetworkDim};
+
+    fn dims2() -> Vec<DimCost> {
+        vec![
+            DimCost::from_dim(&NetworkDim::new(DimKind::Ring, 4, 200.0, 0.5)),
+            DimCost::from_dim(&NetworkDim::new(DimKind::Switch, 8, 100.0, 1.0)),
+        ]
+    }
+
+    const GB: f64 = 1e9;
+
+    #[test]
+    fn empty_dims_is_free() {
+        let t = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::Baseline,
+            &[],
+            &[],
+            GB,
+            4,
+        );
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn blueconnect_never_slower_than_baseline() {
+        let dims = dims2();
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        for chunks in [1u32, 2, 4, 8, 16] {
+            let base = multidim_collective_time_us(
+                CollectiveKind::AllReduce,
+                MultiDimPolicy::Baseline,
+                &algos,
+                &dims,
+                GB,
+                chunks,
+            );
+            let bc = multidim_collective_time_us(
+                CollectiveKind::AllReduce,
+                MultiDimPolicy::BlueConnect,
+                &algos,
+                &dims,
+                GB,
+                chunks,
+            );
+            assert!(bc <= base + 1e-9, "chunks={chunks}: bc={bc} base={base}");
+        }
+    }
+
+    #[test]
+    fn chunking_helps_baseline_pipelining() {
+        let dims = dims2();
+        let algos = [CollAlgo::Ring, CollAlgo::Ring];
+        let t1 = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            GB,
+            1,
+        );
+        let t8 = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            GB,
+            8,
+        );
+        // With 8 chunks, non-bottleneck phases hide behind the bottleneck.
+        assert!(t8 < t1, "t8={t8} t1={t1}");
+    }
+
+    #[test]
+    fn too_many_chunks_hurts_via_alpha() {
+        // Each chunk pays the full alpha; at some point more chunks lose.
+        let dims = vec![DimCost::from_dim(&NetworkDim::new(DimKind::Ring, 8, 100.0, 50.0))];
+        let algos = [CollAlgo::Ring];
+        let small = 1e6;
+        let t2 = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            small,
+            2,
+        );
+        let t32 = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            small,
+            32,
+        );
+        assert!(t32 > t2, "t32={t32} t2={t2}");
+    }
+
+    #[test]
+    fn single_dim_matches_flat_cost_times_chunk_pipeline() {
+        let dims = vec![dims2()[0]];
+        let algos = [CollAlgo::Ring];
+        let t = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            GB,
+            1,
+        );
+        let flat = collective_time_us(CollAlgo::Ring, CollectiveKind::AllReduce, &dims[0], GB);
+        assert!((t - flat).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rs_then_ag_equals_ar_for_hierarchical_ring() {
+        let dims = dims2();
+        let algos = [CollAlgo::Ring, CollAlgo::Ring];
+        let ar = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            GB,
+            1,
+        );
+        let rs = multidim_collective_time_us(
+            CollectiveKind::ReduceScatter,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            GB,
+            1,
+        );
+        let ag = multidim_collective_time_us(
+            CollectiveKind::AllGather,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            GB,
+            1,
+        );
+        assert!((ar - (rs + ag)).abs() < 1e-6, "ar={ar} rs+ag={}", rs + ag);
+    }
+
+    #[test]
+    fn dim_costs_slices_topology() {
+        let topo = Topology::from_arrays(
+            &[DimKind::Ring, DimKind::FullyConnected, DimKind::Switch],
+            &[4, 8, 4],
+            &[100.0, 200.0, 300.0],
+            &[1.0, 1.0, 1.0],
+        );
+        let c = dim_costs(&topo, 1, 3);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].npus, 8);
+        assert_eq!(c[1].npus, 4);
+    }
+
+    #[test]
+    fn bigger_payload_costs_more() {
+        let dims = dims2();
+        let algos = [CollAlgo::Rhd, CollAlgo::Dbt];
+        let a = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::BlueConnect,
+            &algos,
+            &dims,
+            GB,
+            4,
+        );
+        let b = multidim_collective_time_us(
+            CollectiveKind::AllReduce,
+            MultiDimPolicy::BlueConnect,
+            &algos,
+            &dims,
+            4.0 * GB,
+            4,
+        );
+        assert!(b > a);
+    }
+}

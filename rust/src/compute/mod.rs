@@ -1,0 +1,164 @@
+//! Compute-device substrate (paper §2.4).
+//!
+//! The paper models an NPU with three parameters — *peak-perf*,
+//! *local-mem-bw*, and *memory-capacity* — and uses a simple roofline model
+//! for per-operator runtime plus a capacity constraint that invalidates
+//! parallelizations whose per-NPU footprint exceeds the budget (24 GB in
+//! §5.4). We implement exactly that.
+
+
+/// Memory budget per NPU beyond which a parallelization is invalid
+/// (paper §5.4: "any parallelization strategy resulting in a memory
+/// footprint exceeding 24 GB per NPU is considered invalid").
+pub const MEM_LIMIT_BYTES: f64 = 24.0 * 1e9;
+
+/// An NPU as the paper parameterizes it (Table 3's "Compute Knob").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeDevice {
+    /// Peak compute throughput in TFLOP/s (Table 3 "Compute Performance").
+    pub peak_tflops: f64,
+    /// Local memory bandwidth in GB/s (Table 3 "Local Mem BW").
+    pub local_mem_bw_gbps: f64,
+    /// Memory capacity in GB.
+    pub memory_capacity_gb: f64,
+}
+
+impl ComputeDevice {
+    pub fn new(peak_tflops: f64, local_mem_bw_gbps: f64, memory_capacity_gb: f64) -> Self {
+        Self { peak_tflops, local_mem_bw_gbps, memory_capacity_gb }
+    }
+
+    /// Roofline runtime (microseconds) of one operator:
+    /// `max(flops / peak, bytes / mem_bw)`.
+    ///
+    /// `flops` is total floating-point operations, `bytes` is total HBM
+    /// traffic (reads + writes). TFLOP/s = flops/us × 1e6;
+    /// GB/s = bytes/us × 1e3.
+    pub fn op_time_us(&self, flops: f64, bytes: f64) -> f64 {
+        let compute_us = flops / (self.peak_tflops * 1e6);
+        let memory_us = bytes / (self.local_mem_bw_gbps * 1e3);
+        compute_us.max(memory_us)
+    }
+
+    /// Arithmetic-intensity ridge point (flops/byte): ops above this are
+    /// compute-bound, below memory-bound.
+    pub fn ridge_intensity(&self) -> f64 {
+        (self.peak_tflops * 1e6) / (self.local_mem_bw_gbps * 1e3)
+    }
+
+    /// Whether an operator is compute-bound on this device.
+    pub fn compute_bound(&self, flops: f64, bytes: f64) -> bool {
+        bytes <= 0.0 || flops / bytes >= self.ridge_intensity()
+    }
+
+    /// Effective achieved TFLOP/s for an op (for utilization reporting).
+    pub fn achieved_tflops(&self, flops: f64, bytes: f64) -> f64 {
+        let t = self.op_time_us(flops, bytes);
+        if t <= 0.0 {
+            0.0
+        } else {
+            flops / (t * 1e6)
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.peak_tflops <= 0.0 {
+            return Err("peak_tflops must be > 0".into());
+        }
+        if self.local_mem_bw_gbps <= 0.0 {
+            return Err("local_mem_bw_gbps must be > 0".into());
+        }
+        if self.memory_capacity_gb <= 0.0 {
+            return Err("memory_capacity_gb must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Table 3's three compute configurations.
+pub mod presets {
+    use super::ComputeDevice;
+
+    /// System 1: TPUv5p-like (459 TFLOPS, 2765 GB/s).
+    pub fn system1() -> ComputeDevice {
+        ComputeDevice::new(459.0, 2765.0, 32.0)
+    }
+
+    /// System 2: the 4D-network cluster of [43] (10 TFLOPS, 50 GB/s).
+    pub fn system2() -> ComputeDevice {
+        ComputeDevice::new(10.0, 50.0, 32.0)
+    }
+
+    /// System 3: H100-like (900 TFLOPS, 3000 GB/s).
+    pub fn system3() -> ComputeDevice {
+        ComputeDevice::new(900.0, 3000.0, 32.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_op_hits_peak() {
+        let d = ComputeDevice::new(100.0, 1000.0, 32.0);
+        // 1e12 flops, tiny bytes: time = 1e12/(100e6) us = 1e4 us.
+        let t = d.op_time_us(1e12, 1.0);
+        assert!((t - 1e4).abs() < 1e-6);
+        assert!(d.compute_bound(1e12, 1.0));
+        assert!((d.achieved_tflops(1e12, 1.0) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn memory_bound_op_hits_bandwidth() {
+        let d = ComputeDevice::new(100.0, 1000.0, 32.0);
+        // 1 GB of traffic at 1000 GB/s = 1000 us, tiny flops.
+        let t = d.op_time_us(1.0, 1e9);
+        assert!((t - 1000.0).abs() < 1e-6);
+        assert!(!d.compute_bound(1.0, 1e9));
+    }
+
+    #[test]
+    fn ridge_point_separates_regimes() {
+        let d = ComputeDevice::new(100.0, 1000.0, 32.0);
+        let ridge = d.ridge_intensity(); // 1e8/1e6 = 100 flops/byte
+        assert!((ridge - 100.0).abs() < 1e-9);
+        // Exactly at ridge both roofs are equal.
+        let flops = 1e10;
+        let bytes = flops / ridge;
+        let t = d.op_time_us(flops, bytes);
+        assert!((t - flops / 1e8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn presets_match_table3() {
+        assert_eq!(presets::system1().peak_tflops, 459.0);
+        assert_eq!(presets::system1().local_mem_bw_gbps, 2765.0);
+        assert_eq!(presets::system2().peak_tflops, 10.0);
+        assert_eq!(presets::system2().local_mem_bw_gbps, 50.0);
+        assert_eq!(presets::system3().peak_tflops, 900.0);
+        assert_eq!(presets::system3().local_mem_bw_gbps, 3000.0);
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive() {
+        assert!(ComputeDevice::new(0.0, 1.0, 1.0).validate().is_err());
+        assert!(ComputeDevice::new(1.0, 0.0, 1.0).validate().is_err());
+        assert!(ComputeDevice::new(1.0, 1.0, 0.0).validate().is_err());
+        assert!(ComputeDevice::new(1.0, 1.0, 1.0).validate().is_ok());
+    }
+
+    #[test]
+    fn zero_work_is_free() {
+        let d = ComputeDevice::new(100.0, 1000.0, 32.0);
+        assert_eq!(d.op_time_us(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn faster_device_is_faster() {
+        let slow = presets::system2();
+        let fast = presets::system3();
+        let (f, b) = (1e12, 1e9);
+        assert!(fast.op_time_us(f, b) < slow.op_time_us(f, b));
+    }
+}

@@ -1,0 +1,130 @@
+//! LIBRA-style network dollar-cost model (paper §5.4, cost model of [59]).
+//!
+//! The "Runtime per Network Cost" reward regularizes the search with the
+//! dollar cost of the network build-out. Following LIBRA, cost is
+//! dominated by link bandwidth-capacity and switch silicon:
+//!
+//! `cost = Σ_dim  links(dim) · bw(dim) · $per(GB/s, kind)  +  switches(dim) · $switch(radix, bw)`
+//!
+//! where `links(dim)` counts physical links across the whole cluster for
+//! that dimension and the per-GB/s rate reflects the technology tier —
+//! short-reach electrical (Ring/FC intra-dim) is cheap, switched fabrics
+//! pay for ports and crossbar silicon.
+
+use crate::topology::{DimKind, Topology};
+
+/// $ per GB/s of point-to-point link capacity (arbitrary but fixed units;
+/// only *relative* cost matters to the reward shape).
+pub const LINK_COST_PER_GBPS: f64 = 1.0;
+/// $ per GB/s of a switch port (NPU-side plus switch-side SerDes).
+pub const SWITCH_PORT_COST_PER_GBPS: f64 = 2.0;
+/// Fixed switch-chassis cost per port (radix tax).
+pub const SWITCH_CHASSIS_PER_PORT: f64 = 50.0;
+
+/// Physical links across the whole cluster for one dimension of `n` NPUs
+/// appearing in `groups` parallel instances.
+fn links_in_dim(kind: DimKind, n: u64, groups: u64) -> u64 {
+    let per_group = match kind {
+        DimKind::Ring => {
+            if n <= 1 {
+                0
+            } else if n == 2 {
+                1
+            } else {
+                n
+            }
+        }
+        DimKind::Switch => n, // NPU-to-switch links
+        DimKind::FullyConnected => n * n.saturating_sub(1) / 2,
+    };
+    per_group * groups
+}
+
+/// Total network dollar cost of a topology.
+pub fn network_cost(topo: &Topology) -> f64 {
+    let total = topo.total_npus();
+    let mut cost = 0.0;
+    for (d, dim) in topo.dims.iter().enumerate() {
+        let groups = total / dim.npus;
+        let links = links_in_dim(dim.kind, dim.npus, groups) as f64;
+        let _ = d;
+        match dim.kind {
+            DimKind::Switch => {
+                // Ports: one per NPU per group, plus switch chassis tax.
+                let ports = (dim.npus * groups) as f64;
+                cost += ports * dim.bandwidth_gbps * SWITCH_PORT_COST_PER_GBPS;
+                cost += ports * SWITCH_CHASSIS_PER_PORT;
+            }
+            _ => {
+                cost += links * dim.bandwidth_gbps * LINK_COST_PER_GBPS;
+            }
+        }
+    }
+    cost
+}
+
+/// Cost normalized per NPU — convenient for cross-system comparisons.
+pub fn network_cost_per_npu(topo: &Topology) -> f64 {
+    network_cost(topo) / topo.total_npus().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::NetworkDim;
+
+    fn topo(kind: DimKind, n: u64, bw: f64) -> Topology {
+        Topology::new(vec![NetworkDim::new(kind, n, bw, 1.0)])
+    }
+
+    #[test]
+    fn ring_cost_scales_with_links_and_bw() {
+        let a = network_cost(&topo(DimKind::Ring, 8, 100.0));
+        assert!((a - 8.0 * 100.0).abs() < 1e-9);
+        let b = network_cost(&topo(DimKind::Ring, 8, 200.0));
+        assert!((b - 2.0 * a).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fc_is_quadratic_in_group_size() {
+        let small = network_cost(&topo(DimKind::FullyConnected, 4, 100.0));
+        let big = network_cost(&topo(DimKind::FullyConnected, 8, 100.0));
+        // 4 NPUs: 6 links; 8 NPUs: 28 links.
+        assert!((small - 600.0).abs() < 1e-9);
+        assert!((big - 2800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn switch_pays_port_and_chassis_tax() {
+        let c = network_cost(&topo(DimKind::Switch, 8, 100.0));
+        let expect = 8.0 * 100.0 * SWITCH_PORT_COST_PER_GBPS + 8.0 * SWITCH_CHASSIS_PER_PORT;
+        assert!((c - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn switch_costs_more_than_ring_same_bw() {
+        let ring = network_cost(&topo(DimKind::Ring, 8, 100.0));
+        let switch = network_cost(&topo(DimKind::Switch, 8, 100.0));
+        assert!(switch > ring);
+    }
+
+    #[test]
+    fn multi_dim_cost_sums_and_counts_groups() {
+        let t = Topology::from_arrays(
+            &[DimKind::Ring, DimKind::Ring],
+            &[4, 4],
+            &[100.0, 100.0],
+            &[1.0, 1.0],
+        );
+        // 16 NPUs: dim0 has 4 groups of ring-4 (4 links each) = 16 links;
+        // dim1 same. Total 32 links * 100 GB/s.
+        assert!((network_cost(&t) - 3200.0).abs() < 1e-9);
+        assert!((network_cost_per_npu(&t) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_npu_ring_is_single_link() {
+        let c = network_cost(&topo(DimKind::Ring, 2, 100.0));
+        assert!((c - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,170 @@
+//! Multi-objective analysis: Pareto frontiers over evaluated designs.
+//!
+//! The paper optimizes one regularized scalar at a time (§5.4), but its
+//! §6.4 point — many distinct configurations with equivalent reward —
+//! is naturally a multi-objective statement: designs trade latency
+//! against provisioned bandwidth and dollar cost. This module extracts
+//! the non-dominated set over arbitrary metric vectors (all metrics
+//! minimized), used by the ablation bench and available to downstream
+//! users for co-design trade-off studies.
+
+/// One evaluated design: an opaque id plus its metric vector
+/// (all metrics are minimized).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    pub id: usize,
+    pub metrics: Vec<f64>,
+}
+
+impl ParetoPoint {
+    pub fn new(id: usize, metrics: Vec<f64>) -> Self {
+        Self { id, metrics }
+    }
+
+    /// Does `self` dominate `other` (≤ on every metric, < on at least
+    /// one)?
+    pub fn dominates(&self, other: &ParetoPoint) -> bool {
+        debug_assert_eq!(self.metrics.len(), other.metrics.len());
+        let mut strictly = false;
+        for (a, b) in self.metrics.iter().zip(&other.metrics) {
+            if a > b {
+                return false;
+            }
+            if a < b {
+                strictly = true;
+            }
+        }
+        strictly
+    }
+}
+
+/// Extract the Pareto frontier (non-dominated points), sorted by the
+/// first metric. Duplicate metric vectors keep the first occurrence.
+/// O(n²) pairwise — fine for DSE result sets (≤ thousands).
+pub fn pareto_frontier(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut frontier: Vec<ParetoPoint> = Vec::new();
+    'outer: for p in points {
+        if p.metrics.iter().any(|m| !m.is_finite()) {
+            continue;
+        }
+        let mut i = 0;
+        while i < frontier.len() {
+            if frontier[i].dominates(p) || frontier[i].metrics == p.metrics {
+                continue 'outer; // dominated or duplicate
+            }
+            if p.dominates(&frontier[i]) {
+                frontier.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        frontier.push(p.clone());
+    }
+    frontier.sort_by(|a, b| a.metrics[0].partial_cmp(&b.metrics[0]).unwrap());
+    frontier
+}
+
+/// Hypervolume indicator in 2D (area dominated relative to a reference
+/// point; both metrics minimized). A standard scalar summary for
+/// comparing frontiers.
+pub fn hypervolume_2d(frontier: &[ParetoPoint], reference: (f64, f64)) -> f64 {
+    let mut pts: Vec<(f64, f64)> = frontier
+        .iter()
+        .filter(|p| p.metrics.len() >= 2)
+        .map(|p| (p.metrics[0], p.metrics[1]))
+        .filter(|(x, y)| *x <= reference.0 && *y <= reference.1)
+        .collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut hv = 0.0;
+    let mut prev_y = reference.1;
+    for (x, y) in pts {
+        if y < prev_y {
+            hv += (reference.0 - x) * (prev_y - y);
+            prev_y = y;
+        }
+    }
+    hv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(id: usize, m: &[f64]) -> ParetoPoint {
+        ParetoPoint::new(id, m.to_vec())
+    }
+
+    #[test]
+    fn dominance_semantics() {
+        let a = p(0, &[1.0, 1.0]);
+        let b = p(1, &[2.0, 2.0]);
+        let c = p(2, &[1.0, 2.0]);
+        assert!(a.dominates(&b));
+        assert!(a.dominates(&c));
+        assert!(!b.dominates(&a));
+        assert!(!c.dominates(&a));
+        // Equal vectors do not dominate each other.
+        assert!(!a.dominates(&p(3, &[1.0, 1.0])));
+    }
+
+    #[test]
+    fn frontier_drops_dominated() {
+        let pts = vec![
+            p(0, &[1.0, 5.0]),
+            p(1, &[2.0, 4.0]),
+            p(2, &[3.0, 3.0]),
+            p(3, &[2.5, 4.5]), // dominated by id=1
+            p(4, &[5.0, 5.0]), // dominated by everything
+        ];
+        let f = pareto_frontier(&pts);
+        let ids: Vec<usize> = f.iter().map(|x| x.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn frontier_handles_duplicates_and_nan() {
+        let pts = vec![
+            p(0, &[1.0, 1.0]),
+            p(1, &[1.0, 1.0]),
+            p(2, &[f64::NAN, 0.0]),
+            p(3, &[0.5, 2.0]),
+        ];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().any(|x| x.id == 0));
+        assert!(f.iter().any(|x| x.id == 3));
+    }
+
+    #[test]
+    fn frontier_sorted_by_first_metric() {
+        let pts = vec![p(0, &[3.0, 1.0]), p(1, &[1.0, 3.0]), p(2, &[2.0, 2.0])];
+        let f = pareto_frontier(&pts);
+        let xs: Vec<f64> = f.iter().map(|x| x.metrics[0]).collect();
+        assert_eq!(xs, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn hypervolume_known_case() {
+        // Single point (1,1) vs reference (3,3): area = 2*2 = 4.
+        let f = vec![p(0, &[1.0, 1.0])];
+        assert!((hypervolume_2d(&f, (3.0, 3.0)) - 4.0).abs() < 1e-12);
+        // Two-point staircase.
+        let f = vec![p(0, &[1.0, 2.0]), p(1, &[2.0, 1.0])];
+        // (3-1)*(3-2) + (3-2)*(2-1) = 2 + 1 = 3.
+        assert!((hypervolume_2d(&f, (3.0, 3.0)) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_ignores_out_of_reference() {
+        let f = vec![p(0, &[5.0, 5.0])];
+        assert_eq!(hypervolume_2d(&f, (3.0, 3.0)), 0.0);
+    }
+
+    #[test]
+    fn bigger_frontier_no_smaller_hypervolume() {
+        let small = vec![p(0, &[2.0, 2.0])];
+        let big = vec![p(0, &[2.0, 2.0]), p(1, &[1.0, 2.5])];
+        let r = (4.0, 4.0);
+        assert!(hypervolume_2d(&big, r) >= hypervolume_2d(&small, r));
+    }
+}

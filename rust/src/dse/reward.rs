@@ -1,0 +1,145 @@
+//! The paper's reward functions (§5.4).
+//!
+//! COSMIC minimizes total ML runtime, regularized so the agent does not
+//! simply max out every network resource:
+//!
+//! - **Runtime per BW/NPU**:
+//!   `reward = 1 / sqrt((latency · Σ(BW per Dim) − 1)²)`
+//! - **Runtime per Network Cost**:
+//!   `reward = 1 / sqrt((latency · network_cost − 1)²)`
+//!
+//! (the `−1` offset is the paper's divide-by-zero guard). Invalid
+//! configurations — §5.4's >24 GB/NPU memory violations, constraint
+//! violations, non-materializable points — receive reward 0.
+
+use super::cost::network_cost;
+use crate::sim::SimReport;
+use crate::topology::Topology;
+
+/// Optimization objective (which regularized reward to maximize).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// Perf per aggregate bandwidth per NPU.
+    PerfPerBwPerNpu,
+    /// Perf per network dollar cost.
+    PerfPerNetworkCost,
+    /// Raw performance (1/latency) — used by the Figure 4 spread studies.
+    RawLatency,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 3] =
+        [Objective::PerfPerBwPerNpu, Objective::PerfPerNetworkCost, Objective::RawLatency];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::PerfPerBwPerNpu => "perf-per-bw-npu",
+            Objective::PerfPerNetworkCost => "perf-per-cost",
+            Objective::RawLatency => "raw-latency",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "perf-per-bw-npu" | "bw" | "bw-npu" => Some(Objective::PerfPerBwPerNpu),
+            "perf-per-cost" | "cost" => Some(Objective::PerfPerNetworkCost),
+            "raw-latency" | "latency" | "raw" => Some(Objective::RawLatency),
+            _ => None,
+        }
+    }
+
+    /// The scalar the reward divides latency by (the paper's
+    /// "regulation metric"); 1.0 for raw latency.
+    pub fn regulator(&self, topo: &Topology) -> f64 {
+        match self {
+            Objective::PerfPerBwPerNpu => topo.sum_bw_per_dim(),
+            Objective::PerfPerNetworkCost => network_cost(topo),
+            Objective::RawLatency => 1.0,
+        }
+    }
+
+    /// The paper's reward. `latency` in seconds (converted from the
+    /// simulator's microseconds by the caller via [`reward_from_report`]).
+    pub fn reward(&self, latency_s: f64, topo: &Topology) -> f64 {
+        if !latency_s.is_finite() || latency_s <= 0.0 {
+            return 0.0;
+        }
+        let product = latency_s * self.regulator(topo);
+        // 1 / sqrt((x - 1)^2) == 1 / |x - 1|, the paper's exact form.
+        let denom = (product - 1.0).abs().max(1e-12);
+        1.0 / denom
+    }
+}
+
+/// Reward of a successful simulation under `objective`.
+pub fn reward_from_report(objective: Objective, report: &SimReport, topo: &Topology) -> f64 {
+    objective.reward(report.latency_us / 1e6, topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{DimKind, NetworkDim};
+
+    fn topo() -> Topology {
+        Topology::new(vec![
+            NetworkDim::new(DimKind::Ring, 4, 100.0, 1.0),
+            NetworkDim::new(DimKind::Switch, 8, 50.0, 1.0),
+        ])
+    }
+
+    #[test]
+    fn lower_latency_higher_reward_above_knee() {
+        let t = topo();
+        for obj in Objective::ALL {
+            // Past the product>1 knee, less latency must help.
+            let hi = obj.reward(10.0, &t);
+            let lo = obj.reward(100.0, &t);
+            assert!(hi > lo, "{}: {hi} !> {lo}", obj.name());
+        }
+    }
+
+    #[test]
+    fn invalid_latency_is_zero() {
+        let t = topo();
+        assert_eq!(Objective::PerfPerBwPerNpu.reward(0.0, &t), 0.0);
+        assert_eq!(Objective::PerfPerBwPerNpu.reward(f64::NAN, &t), 0.0);
+        assert_eq!(Objective::PerfPerBwPerNpu.reward(-1.0, &t), 0.0);
+    }
+
+    #[test]
+    fn bw_regulator_is_sum_of_dim_bandwidths() {
+        let t = topo();
+        assert_eq!(Objective::PerfPerBwPerNpu.regulator(&t), 150.0);
+        assert_eq!(Objective::RawLatency.regulator(&t), 1.0);
+    }
+
+    #[test]
+    fn more_bandwidth_penalized_at_equal_latency() {
+        let lean = topo();
+        let mut fat = topo();
+        fat.dims[0].bandwidth_gbps = 1000.0;
+        let latency = 1.0;
+        let r_lean = Objective::PerfPerBwPerNpu.reward(latency, &lean);
+        let r_fat = Objective::PerfPerBwPerNpu.reward(latency, &fat);
+        assert!(r_lean > r_fat, "over-provisioned bw must be penalized");
+    }
+
+    #[test]
+    fn cost_objective_penalizes_expensive_fabric() {
+        let cheap = topo();
+        let mut pricey = topo();
+        pricey.dims[0].kind = DimKind::FullyConnected;
+        let r_cheap = Objective::PerfPerNetworkCost.reward(1.0, &cheap);
+        let r_pricey = Objective::PerfPerNetworkCost.reward(1.0, &pricey);
+        assert!(r_cheap > r_pricey);
+    }
+
+    #[test]
+    fn from_name_roundtrips() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::from_name(o.name()), Some(o));
+        }
+        assert_eq!(Objective::from_name("bogus"), None);
+    }
+}

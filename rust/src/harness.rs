@@ -1,0 +1,217 @@
+//! Experiment harness shared by the `benches/` table/figure reproducers
+//! and the examples: scoped DSE drivers, latency-spread sampling, and
+//! plain-text table/series printers that mirror the paper's layout.
+//!
+//! (criterion is not vendored in this offline image; benches are
+//! `harness = false` binaries that time with `std::time::Instant` and
+//! print the paper-shaped rows — see DESIGN.md §Substitutions.)
+
+use crate::agents::AgentKind;
+use crate::dse::{DseConfig, DseRunner, Environment, Objective, RunResult, WorkloadSpec};
+use crate::psa::paper_table4_schema;
+use crate::pss::{Pss, SearchScope};
+use crate::sim::ClusterConfig;
+use crate::sim::Simulator;
+use crate::util::Rng;
+use crate::workload::{enumerate_parallelizations, Parallelization};
+use std::time::Instant;
+
+/// The default (un-optimized) baseline parallelization used as the
+/// frozen workload value for collective-/network-only scopes: pure data
+/// parallel with sharding, DP capped at 64.
+pub fn default_baseline_par(npus: u64) -> Parallelization {
+    Parallelization::derive(npus, npus.min(64), 1, 1, true).expect("baseline par")
+}
+
+/// An untuned-but-sane baseline parallelization: among all valid
+/// (memory-fitting, simulatable) parallelizations of the first workload
+/// on the target cluster, take the *median-latency* one. This is the
+/// frozen workload value for collective-/network-only scopes -- the
+/// paper's single-stack baselines assume the target system ships with a
+/// workable but unoptimized configuration.
+pub fn median_baseline_par(cluster: &ClusterConfig, workload: &WorkloadSpec) -> Parallelization {
+    let sim = Simulator::new();
+    let npus = cluster.npus();
+    let mut scored: Vec<(f64, Parallelization)> = enumerate_parallelizations(npus, 4, &[true])
+        .into_iter()
+        .filter(|p| workload.batch >= p.dp)
+        .filter_map(|p| {
+            sim.run(cluster, &workload.model, &p, workload.batch, workload.mode)
+                .ok()
+                .map(|r| (r.latency_us, p))
+        })
+        .collect();
+    if scored.is_empty() {
+        return default_baseline_par(npus);
+    }
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    scored[scored.len() / 2].1
+}
+
+/// Build the standard evaluation environment: Table 4 schema over the
+/// given system, one or more training workloads, one objective. The
+/// frozen-workload baseline is the median valid parallelization of the
+/// first workload (see [`median_baseline_par`]).
+pub fn make_env(
+    cluster: ClusterConfig,
+    workloads: Vec<WorkloadSpec>,
+    objective: Objective,
+) -> Environment {
+    let npus = cluster.npus();
+    let dims = cluster.topology.num_dims();
+    let baseline = median_baseline_par(&cluster, &workloads[0]);
+    let pss = Pss::new(paper_table4_schema(npus, dims), cluster, baseline);
+    Environment::new(pss, workloads, objective)
+}
+
+/// Outcome of one scoped search, with the quantities the paper reports.
+#[derive(Debug, Clone)]
+pub struct ScopedResult {
+    pub scope: SearchScope,
+    pub run: RunResult,
+    /// End-to-end latency (us) of the best design (sum over workloads).
+    pub best_latency_us: f64,
+    pub wall_secs: f64,
+}
+
+/// Run one (scope, agent) search and resolve the best design's latency.
+pub fn scoped_search(
+    env: &mut Environment,
+    scope: SearchScope,
+    agent: AgentKind,
+    steps: u64,
+    seed: u64,
+) -> ScopedResult {
+    let started = Instant::now();
+    let run = DseRunner::new(DseConfig::new(agent, steps, seed), scope).run(env);
+    let wall_secs = started.elapsed().as_secs_f64();
+    let best_latency_us = if run.best_genome.is_empty() {
+        f64::INFINITY
+    } else {
+        env.latency_us(&run.best_genome).unwrap_or(f64::INFINITY)
+    };
+    ScopedResult { scope, run, best_latency_us, wall_secs }
+}
+
+/// Latency spread over random valid genomes in a scope (Figure 4):
+/// returns (min, max, valid-sample count).
+pub fn latency_spread(
+    env: &Environment,
+    scope: SearchScope,
+    samples: usize,
+    seed: u64,
+) -> (f64, f64, usize) {
+    let space = env.pss.build_space(scope);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut min = f64::INFINITY;
+    let mut max: f64 = 0.0;
+    let mut n = 0;
+    for _ in 0..samples {
+        if let Some(g) = space.random_valid_genome(&mut rng, 500) {
+            if let Some(lat) = env.latency_us(&g) {
+                min = min.min(lat);
+                max = max.max(lat);
+                n += 1;
+            }
+        }
+    }
+    (min, max, n)
+}
+
+/// Fixed-width table printer (paper-style rows).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line: Vec<String> =
+        headers.iter().enumerate().map(|(i, h)| format!("{:<w$}", h, w = widths[i])).collect();
+    println!("{}", line.join("  "));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        let line: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect();
+        println!("{}", line.join("  "));
+    }
+}
+
+/// Print a reward-vs-step series at a fixed sampling interval
+/// (Figure 10-style, one line per sample point).
+pub fn print_series(name: &str, curve: &[f64], every: usize) {
+    println!("\n--- {name} (best-so-far reward vs step) ---");
+    for (i, v) in curve.iter().enumerate() {
+        if i % every == 0 || i + 1 == curve.len() {
+            println!("{name},{},{v:.6e}", i + 1);
+        }
+    }
+}
+
+/// Normalize each scope's best reward to the full-stack result (the
+/// paper's Figures 6/7 bar normalization). Input: (label, best_reward);
+/// the entry labelled `full_label` is the denominator.
+pub fn normalize_to(rows: &[(String, f64)], full_label: &str) -> Vec<(String, f64)> {
+    let full = rows
+        .iter()
+        .find(|(l, _)| l == full_label)
+        .map(|(_, r)| *r)
+        .unwrap_or(1.0)
+        .max(1e-300);
+    rows.iter().map(|(l, r)| (l.clone(), r / full)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::presets;
+    use crate::workload::models::presets as wl;
+
+    #[test]
+    fn scoped_search_produces_finite_latency() {
+        let mut env = make_env(
+            presets::system1(),
+            vec![WorkloadSpec::training(wl::gpt3_13b().with_simulated_layers(4), 1024)],
+            Objective::PerfPerBwPerNpu,
+        );
+        let r = scoped_search(&mut env, SearchScope::WorkloadOnly, AgentKind::Rw, 20, 1);
+        assert!(r.best_latency_us.is_finite());
+        assert!(r.run.best_reward > 0.0);
+    }
+
+    #[test]
+    fn latency_spread_min_le_max() {
+        let env = make_env(
+            presets::system2(),
+            vec![WorkloadSpec::training(wl::gpt3_13b().with_simulated_layers(4), 1024)],
+            Objective::RawLatency,
+        );
+        let (min, max, n) = latency_spread(&env, SearchScope::WorkloadOnly, 30, 5);
+        assert!(n > 0);
+        assert!(min <= max);
+        assert!(min > 0.0);
+    }
+
+    #[test]
+    fn normalize_divides_by_full() {
+        let rows = vec![("a".to_string(), 2.0), ("full".to_string(), 4.0)];
+        let out = normalize_to(&rows, "full");
+        assert_eq!(out[0].1, 0.5);
+        assert_eq!(out[1].1, 1.0);
+    }
+
+    #[test]
+    fn baseline_par_valid_for_all_presets() {
+        for i in 1..=3 {
+            let c = presets::by_index(i).unwrap();
+            let p = default_baseline_par(c.npus());
+            assert!(p.validate(c.npus()).is_ok());
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! # COSMIC — full-stack co-design and optimization of distributed ML systems
+//!
+//! A reproduction of *"COSMIC: Enabling Full-Stack Co-Design and
+//! Optimization of Distributed Machine Learning Systems"* (CS.DC 2025) as
+//! a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Substrates** ([`topology`], [`collective`], [`compute`],
+//!   [`workload`], [`sim`]) — an ASTRA-sim-like end-to-end distributed-ML
+//!   simulator built from scratch.
+//! - **PsA** ([`psa`]) — the Parameter Set Architecture: a schema of
+//!   searchable parameters, value ranges and cross-parameter constraints
+//!   that decouples domain experts from search-agent configuration.
+//! - **PSS** ([`pss`]) — the Parameter Set Scheduler: derives agent
+//!   action spaces and environment configuration from a PsA schema.
+//! - **Agents** ([`agents`]) — Random Walker, Genetic Algorithm, Ant
+//!   Colony Optimization and Bayesian Optimization search agents.
+//! - **DSE** ([`dse`]) — the agent⇄environment loop, the paper's two
+//!   reward functions, the LIBRA-style network dollar-cost model, and
+//!   run history/convergence tracking.
+//! - **Runtime** ([`runtime`]) — the PJRT bridge that loads the
+//!   AOT-compiled JAX/Pallas batched cost model and GP surrogate
+//!   (`artifacts/*.hlo.txt`) plus a bit-equivalent pure-Rust fallback.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cosmic::prelude::*;
+//!
+//! let cluster = cosmic::sim::presets::system1();
+//! let model = cosmic::workload::models::presets::gpt3_13b().with_simulated_layers(4);
+//! let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).unwrap();
+//! let report = Simulator::new()
+//!     .run(&cluster, &model, &par, 1024, ExecutionMode::Training)
+//!     .unwrap();
+//! println!("iteration latency: {:.1} ms", report.latency_us / 1e3);
+//! ```
+
+pub mod agents;
+pub mod collective;
+pub mod compute;
+pub mod dse;
+pub mod harness;
+pub mod psa;
+pub mod util;
+pub mod pss;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod workload;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::collective::{
+        CollAlgo, CollectiveConfig, CollectiveKind, MultiDimPolicy, SchedulingPolicy,
+    };
+    pub use crate::compute::ComputeDevice;
+    pub use crate::dse::{DseConfig, DseRunner, Environment, Objective, WorkloadSpec};
+    pub use crate::psa::{DesignPoint, ParamDef, Schema, Stack};
+    pub use crate::pss::{Pss, SearchScope};
+    pub use crate::sim::{ClusterConfig, SimReport, Simulator};
+    pub use crate::topology::{DimKind, NetworkDim, Topology};
+    pub use crate::workload::{ExecutionMode, ModelConfig, Parallelization};
+}

@@ -1,0 +1,248 @@
+//! `cosmic` — the CLI leader for the COSMIC framework.
+//!
+//! Subcommands:
+//!
+//! - `simulate` — run the end-to-end simulator on one design point.
+//! - `search`   — run an agent-driven DSE (the paper's §6 experiments).
+//! - `space`    — report the PsA design-space cardinality (Table 1).
+//! - `runtime`  — probe the PJRT runtime and artifact status.
+//!
+//! Argument parsing is hand-rolled (`clap` is not vendored offline; see
+//! DESIGN.md §Substitutions).
+
+use cosmic::agents::AgentKind;
+use cosmic::dse::{DseConfig, DseRunner, Environment, Objective, WorkloadSpec};
+use cosmic::psa::{design_space_size, paper_table4_schema, space::exhaustive_search_years};
+use cosmic::pss::{Pss, SearchScope};
+use cosmic::sim::{presets, Simulator};
+use cosmic::workload::models::presets as models;
+use cosmic::workload::{ExecutionMode, Parallelization};
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return ExitCode::FAILURE;
+    };
+    let opts = parse_opts(&args[1..]);
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&opts),
+        "search" => cmd_search(&opts),
+        "space" => cmd_space(&opts),
+        "runtime" => cmd_runtime(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            print_usage();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "cosmic — full-stack co-design of distributed ML systems
+
+USAGE:
+  cosmic simulate [--system 1|2|3] [--model NAME] [--batch N]
+                  [--dp N --sp N --pp N --shard 0|1] [--layers N] [--mode train|prefill|decode]
+  cosmic search   [--system 1|2|3] [--model NAME] [--batch N] [--agent RW|GA|ACO|BO]
+                  [--scope full|workload|collective|network] [--steps N] [--seed N]
+                  [--objective bw|cost|latency]
+  cosmic space    [--npus N] [--dims N]
+  cosmic runtime
+
+MODELS: GPT3-175B GPT3-13B ViT-Base ViT-Large"
+    );
+}
+
+type Opts = HashMap<String, String>;
+
+fn parse_opts(args: &[String]) -> Opts {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let value = args.get(i + 1).cloned().unwrap_or_default();
+            map.insert(key.to_string(), value);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    map
+}
+
+fn opt_u64(opts: &Opts, key: &str, default: u64) -> u64 {
+    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn opt_str<'a>(opts: &'a Opts, key: &str, default: &'a str) -> &'a str {
+    opts.get(key).map(String::as_str).unwrap_or(default)
+}
+
+fn load_system(opts: &Opts) -> Result<cosmic::sim::ClusterConfig, String> {
+    let idx = opt_u64(opts, "system", 2) as usize;
+    presets::by_index(idx).ok_or_else(|| format!("no system preset {idx}"))
+}
+
+fn load_model(opts: &Opts) -> Result<cosmic::workload::ModelConfig, String> {
+    let name = opt_str(opts, "model", "GPT3-175B");
+    let layers = opt_u64(opts, "layers", 4);
+    models::by_name(name)
+        .map(|m| m.with_simulated_layers(layers))
+        .ok_or_else(|| format!("unknown model '{name}'"))
+}
+
+fn cmd_simulate(opts: &Opts) -> Result<(), String> {
+    let cluster = load_system(opts)?;
+    let model = load_model(opts)?;
+    let batch = opt_u64(opts, "batch", 2048);
+    let mode = match opt_str(opts, "mode", "train") {
+        "train" => ExecutionMode::Training,
+        "prefill" => ExecutionMode::InferencePrefill,
+        "decode" => ExecutionMode::InferenceDecode,
+        m => return Err(format!("unknown mode '{m}'")),
+    };
+    let par = Parallelization::derive(
+        cluster.npus(),
+        opt_u64(opts, "dp", 64),
+        opt_u64(opts, "sp", 4),
+        opt_u64(opts, "pp", 1),
+        opt_u64(opts, "shard", 1) != 0,
+    )?;
+    println!("system: {} ({} NPUs)", cluster.topology, cluster.npus());
+    println!("model:  {} (simulating {} layers)", model.name, model.simulated_layers);
+    println!("par:    {par}");
+    match Simulator::new().run(&cluster, &model, &par, batch, mode) {
+        Ok(r) => {
+            println!("latency:        {:>12.3} ms", r.latency_us / 1e3);
+            println!("compute:        {:>12.3} ms", r.compute_us / 1e3);
+            println!("comm blocking:  {:>12.3} ms", r.comm_blocking_us / 1e3);
+            println!("comm exposed:   {:>12.3} ms", r.comm_exposed_us / 1e3);
+            println!("memory/NPU:     {:>12.3} GB", r.memory.total() / 1e9);
+            println!("microbatches:   {:>12}", r.microbatches);
+            println!("cluster TFLOPs: {:>12.1}", r.achieved_tflops);
+            Ok(())
+        }
+        Err(e) => Err(format!("invalid design point: {e:?}")),
+    }
+}
+
+fn cmd_search(opts: &Opts) -> Result<(), String> {
+    let cluster = load_system(opts)?;
+    let model = load_model(opts)?;
+    let batch = opt_u64(opts, "batch", 2048);
+    let steps = opt_u64(opts, "steps", 300);
+    let seed = opt_u64(opts, "seed", 42);
+    let agent = AgentKind::from_name(opt_str(opts, "agent", "GA"))
+        .ok_or_else(|| "unknown agent".to_string())?;
+    let scope = match opt_str(opts, "scope", "full") {
+        "full" => SearchScope::FullStack,
+        "workload" => SearchScope::WorkloadOnly,
+        "collective" => SearchScope::CollectiveOnly,
+        "network" => SearchScope::NetworkOnly,
+        "workload+network" => SearchScope::WorkloadNetwork,
+        "collective+network" => SearchScope::CollectiveNetwork,
+        s => return Err(format!("unknown scope '{s}'")),
+    };
+    let objective = Objective::from_name(opt_str(opts, "objective", "bw"))
+        .ok_or_else(|| "unknown objective".to_string())?;
+
+    let npus = cluster.npus();
+    let baseline_par = Parallelization::derive(npus, npus.min(64), 1, 1, true)?;
+    let pss =
+        Pss::new(paper_table4_schema(npus, cluster.topology.num_dims()), cluster, baseline_par);
+    let mut env = Environment::new(pss, vec![WorkloadSpec::training(model, batch)], objective);
+
+    println!(
+        "search: agent={} scope={} objective={} steps={steps} seed={seed}",
+        agent.name(),
+        scope.name(),
+        objective.name()
+    );
+    let started = std::time::Instant::now();
+    let result = DseRunner::new(DseConfig::new(agent, steps, seed), scope).run(&mut env);
+    let elapsed = started.elapsed();
+    println!(
+        "done in {:.2}s  ({:.0} evals/s, {} invalid, {} cache hits)",
+        elapsed.as_secs_f64(),
+        env.evals as f64 / elapsed.as_secs_f64().max(1e-9),
+        result.invalid,
+        env.cache_hits
+    );
+    println!(
+        "best reward: {:.6e} (first reached at step {})",
+        result.best_reward, result.steps_to_peak
+    );
+    if !result.best_genome.is_empty() {
+        let point = env.pss.schema.decode(&result.best_genome)?;
+        let (best_cluster, best_par) = env.pss.materialize(&point)?;
+        println!("best design:");
+        println!("  topology:   {}", best_cluster.topology);
+        println!(
+            "  collective: {} chunks={} {} {}",
+            best_cluster.collectives.algo_notation(),
+            best_cluster.collectives.chunks,
+            best_cluster.collectives.scheduling.name(),
+            best_cluster.collectives.multidim.name()
+        );
+        println!("  workload:   {best_par}");
+    }
+    Ok(())
+}
+
+fn cmd_space(opts: &Opts) -> Result<(), String> {
+    let npus = opt_u64(opts, "npus", 1024);
+    let dims = opt_u64(opts, "dims", 4) as usize;
+    let schema = cosmic::psa::paper_table1_schema(npus, dims);
+    let points = design_space_size(&schema, npus);
+    println!("PsA design space for {npus} NPUs, {dims}D network (Table 1 schema):");
+    for p in &schema.params {
+        println!("  {:<24} [{:<10}] {:>8} points", p.name, p.stack.name(), p.cardinality());
+    }
+    println!("total: {points:.3e} potential designs");
+    println!(
+        "exhaustive search at 1 s/point: {:.3e} years",
+        exhaustive_search_years(points, 1.0)
+    );
+    Ok(())
+}
+
+fn cmd_runtime() -> Result<(), String> {
+    let dir = cosmic::runtime::default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    match cosmic::runtime::Runtime::cpu() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            let (cm, gp) = rt.load_models(&dir);
+            println!(
+                "cost_model:   {}",
+                if cm.is_xla() { "XLA artifact" } else { "rust fallback" }
+            );
+            println!(
+                "gp_surrogate: {}",
+                if gp.is_xla() { "XLA artifact" } else { "rust fallback" }
+            );
+            let out = cm
+                .evaluate(&cosmic::runtime::CostBatch::zeros())
+                .map_err(|e| e.to_string())?;
+            println!(
+                "smoke eval:   {} configs -> all-zero ok = {}",
+                out.len(),
+                out.iter().all(|&x| x == 0.0)
+            );
+            Ok(())
+        }
+        Err(e) => Err(format!("PJRT client unavailable: {e:#}")),
+    }
+}

@@ -1,0 +1,187 @@
+//! The paper's PsA schemas (Tables 1 and 4) as ready-made builders.
+
+use super::{Constraint, Domain, ParamDef, Schema, Stack};
+
+/// Canonical parameter names used throughout the crate (the PSS resolves
+/// design points into simulator inputs by these names).
+pub mod names {
+    pub const DP: &str = "DP";
+    pub const PP: &str = "PP";
+    pub const SP: &str = "SP";
+    pub const WEIGHT_SHARDED: &str = "Weight Sharded";
+    pub const SCHED_POLICY: &str = "Scheduling Policy";
+    pub const COLL_ALGO: &str = "Collective Algorithm";
+    pub const CHUNKS: &str = "Chunks per Collective";
+    pub const MULTIDIM_COLL: &str = "Multi-dim Collective";
+    pub const TOPOLOGY: &str = "Topology";
+    pub const NPUS_PER_DIM: &str = "NPUs per Dim";
+    pub const BW_PER_DIM: &str = "Bandwidth per Dim";
+}
+
+/// Table 1's schema: the motivation-section design space for a 4D network
+/// with 1,024 NPUs (`7.69e13` raw points).
+pub fn paper_table1_schema(npus: u64, dims: usize) -> Schema {
+    let max = npus as i64;
+    Schema::new(
+        vec![
+            ParamDef::scalar(names::DP, Stack::Workload, Domain::pow2(1, max)),
+            ParamDef::scalar(names::PP, Stack::Workload, Domain::pow2(1, max)),
+            ParamDef::scalar(names::SP, Stack::Workload, Domain::pow2(1, max)),
+            ParamDef::scalar(names::WEIGHT_SHARDED, Stack::Workload, Domain::Bool),
+            ParamDef::scalar(
+                names::SCHED_POLICY,
+                Stack::Collective,
+                Domain::cats(&["LIFO", "FIFO"]),
+            ),
+            ParamDef::multidim(
+                names::COLL_ALGO,
+                Stack::Collective,
+                Domain::cats(&["Ring", "Direct", "RHD", "DBT"]),
+                dims,
+            ),
+            ParamDef::scalar(
+                names::CHUNKS,
+                Stack::Collective,
+                Domain::Ints((1..=32).collect()),
+            ),
+            ParamDef::scalar(
+                names::MULTIDIM_COLL,
+                Stack::Collective,
+                Domain::cats(&["Baseline", "BlueConnect"]),
+            ),
+            ParamDef::multidim(
+                names::TOPOLOGY,
+                Stack::Network,
+                Domain::cats(&["Ring", "Switch", "FC"]),
+                dims,
+            ),
+            ParamDef::multidim(
+                names::NPUS_PER_DIM,
+                Stack::Network,
+                Domain::Ints(vec![4, 8, 16]),
+                dims,
+            ),
+            ParamDef::multidim(
+                names::BW_PER_DIM,
+                Stack::Network,
+                Domain::Ints(vec![100, 200, 300, 400, 500]),
+                dims,
+            ),
+        ],
+        vec![
+            Constraint::ProductDividesLimit {
+                params: vec![names::DP.into(), names::SP.into(), names::PP.into()],
+                limit: npus,
+            },
+            Constraint::MultiProductEq { param: names::NPUS_PER_DIM.into(), limit: npus },
+        ],
+    )
+}
+
+/// Table 4's schema: the evaluation PsA. Differences vs Table 1: DP/SP
+/// range to 2048, PP restricted to {1,2,4}, chunks to {2,4,8,16}, and
+/// bandwidth steps of 50 from 50..=500.
+pub fn paper_table4_schema(npus: u64, dims: usize) -> Schema {
+    Schema::new(
+        vec![
+            ParamDef::scalar(names::DP, Stack::Workload, Domain::pow2(1, 2048)),
+            ParamDef::scalar(names::PP, Stack::Workload, Domain::Ints(vec![1, 2, 4])),
+            ParamDef::scalar(names::SP, Stack::Workload, Domain::pow2(1, 2048)),
+            ParamDef::scalar(names::WEIGHT_SHARDED, Stack::Workload, Domain::Bool),
+            ParamDef::scalar(
+                names::SCHED_POLICY,
+                Stack::Collective,
+                Domain::cats(&["LIFO", "FIFO"]),
+            ),
+            ParamDef::multidim(
+                names::COLL_ALGO,
+                Stack::Collective,
+                Domain::cats(&["Ring", "Direct", "RHD", "DBT"]),
+                dims,
+            ),
+            ParamDef::scalar(names::CHUNKS, Stack::Collective, Domain::Ints(vec![2, 4, 8, 16])),
+            ParamDef::scalar(
+                names::MULTIDIM_COLL,
+                Stack::Collective,
+                Domain::cats(&["Baseline", "BlueConnect"]),
+            ),
+            ParamDef::multidim(
+                names::TOPOLOGY,
+                Stack::Network,
+                Domain::cats(&["Ring", "Switch", "FC"]),
+                dims,
+            ),
+            ParamDef::multidim(
+                names::NPUS_PER_DIM,
+                Stack::Network,
+                Domain::Ints(vec![4, 8, 16]),
+                dims,
+            ),
+            ParamDef::multidim(
+                names::BW_PER_DIM,
+                Stack::Network,
+                Domain::Ints((1..=10).map(|k| k * 50).collect()),
+                dims,
+            ),
+        ],
+        vec![
+            Constraint::ProductDividesLimit {
+                params: vec![names::DP.into(), names::SP.into(), names::PP.into()],
+                limit: npus,
+            },
+            Constraint::MultiProductEq { param: names::NPUS_PER_DIM.into(), limit: npus },
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_schema_has_all_knobs() {
+        let s = paper_table1_schema(1024, 4);
+        for n in [
+            names::DP,
+            names::PP,
+            names::SP,
+            names::WEIGHT_SHARDED,
+            names::SCHED_POLICY,
+            names::COLL_ALGO,
+            names::CHUNKS,
+            names::MULTIDIM_COLL,
+            names::TOPOLOGY,
+            names::NPUS_PER_DIM,
+            names::BW_PER_DIM,
+        ] {
+            assert!(s.param(n).is_some(), "missing {n}");
+        }
+        // 4 scalar workload + 1 + 4 + 1 + 1 + 4 + 4 + 4 slots
+        assert_eq!(s.genome_len(), 4 + 1 + 4 + 1 + 1 + 4 + 4 + 4);
+    }
+
+    #[test]
+    fn table1_cardinalities_match_paper() {
+        let s = paper_table1_schema(1024, 4);
+        assert_eq!(s.param(names::COLL_ALGO).unwrap().cardinality(), 256.0); // 4^4
+        assert_eq!(s.param(names::TOPOLOGY).unwrap().cardinality(), 81.0); // 3^4
+        assert_eq!(s.param(names::NPUS_PER_DIM).unwrap().cardinality(), 81.0);
+        assert_eq!(s.param(names::BW_PER_DIM).unwrap().cardinality(), 625.0); // 5^4
+        assert_eq!(s.param(names::CHUNKS).unwrap().cardinality(), 32.0);
+    }
+
+    #[test]
+    fn table4_restrictions() {
+        let s = paper_table4_schema(1024, 4);
+        assert_eq!(s.param(names::PP).unwrap().domain, Domain::Ints(vec![1, 2, 4]));
+        assert_eq!(s.param(names::CHUNKS).unwrap().domain, Domain::Ints(vec![2, 4, 8, 16]));
+        assert_eq!(s.param(names::BW_PER_DIM).unwrap().domain.cardinality(), 10);
+        assert_eq!(s.param(names::DP).unwrap().domain.cardinality(), 12); // 1..2048
+    }
+
+    #[test]
+    fn constraints_present() {
+        let s = paper_table4_schema(1024, 4);
+        assert_eq!(s.constraints.len(), 2);
+    }
+}

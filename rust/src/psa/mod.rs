@@ -1,0 +1,446 @@
+//! Parameter Set Architecture (PsA) — paper §4.
+//!
+//! The PsA is the paper's central abstraction: *"analogous to how an ISA
+//! defines the interface between software and hardware, the PsA defines
+//! the interaction between search agents and the underlying system"*. It
+//! is a schema with three components (§4.2):
+//!
+//! - **Parameter Set** — the searchable parameters, spanning the
+//!   workload, collective, network (and compute) stacks;
+//! - **Value Range** — the valid values of each parameter;
+//! - **Constraints** — cross-parameter dependencies (e.g.
+//!   `product(DP,SP,PP) ≤ NPUs`, `product(NPUs-per-dim) = NPUs`).
+//!
+//! Agents never see domain objects: they see a fixed-length integer
+//! *genome* (one index per parameter slot). [`Schema::decode`] maps a
+//! genome to a [`DesignPoint`]; the PSS (`crate::pss`) maps design points
+//! to simulator inputs. This is exactly the decoupling the paper claims:
+//! adding a parameter to the schema automatically widens every agent's
+//! action space without touching agent code.
+
+pub mod builders;
+pub mod space;
+
+pub use builders::{paper_table1_schema, paper_table4_schema};
+pub use space::{design_space_size, DesignSpace};
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Which design stack a parameter belongs to (paper Figure 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stack {
+    Workload,
+    Collective,
+    Network,
+    Compute,
+}
+
+impl Stack {
+    pub const ALL: [Stack; 4] = [Stack::Workload, Stack::Collective, Stack::Network, Stack::Compute];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stack::Workload => "workload",
+            Stack::Collective => "collective",
+            Stack::Network => "network",
+            Stack::Compute => "compute",
+        }
+    }
+}
+
+impl fmt::Display for Stack {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The value domain of one parameter (the schema's "Value Range").
+#[derive(Debug, Clone, PartialEq)]
+pub enum Domain {
+    /// An ordered list of integers (e.g. `{1, 2, 4, …, 1024}`).
+    Ints(Vec<i64>),
+    /// Categorical labels (e.g. `{LIFO, FIFO}` or `{Ring, Direct, …}`).
+    Cats(Vec<String>),
+    /// Boolean flag.
+    Bool,
+}
+
+impl Domain {
+    pub fn cats<S: AsRef<str>>(labels: &[S]) -> Self {
+        Domain::Cats(labels.iter().map(|s| s.as_ref().to_string()).collect())
+    }
+
+    /// Powers of two from `lo` to `hi` inclusive.
+    pub fn pow2(lo: i64, hi: i64) -> Self {
+        let mut v = Vec::new();
+        let mut x = lo.max(1);
+        while x <= hi {
+            v.push(x);
+            x *= 2;
+        }
+        Domain::Ints(v)
+    }
+
+    /// Number of admissible values.
+    pub fn cardinality(&self) -> usize {
+        match self {
+            Domain::Ints(v) => v.len(),
+            Domain::Cats(v) => v.len(),
+            Domain::Bool => 2,
+        }
+    }
+}
+
+/// A parameter definition: name, stack, domain, and multiplicity
+/// (`dims > 1` is the paper's "MultiDim" parameters — one slot per
+/// network dimension).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamDef {
+    pub name: String,
+    pub stack: Stack,
+    pub domain: Domain,
+    pub dims: usize,
+}
+
+impl ParamDef {
+    pub fn scalar(name: &str, stack: Stack, domain: Domain) -> Self {
+        Self { name: name.to_string(), stack, domain, dims: 1 }
+    }
+
+    pub fn multidim(name: &str, stack: Stack, domain: Domain, dims: usize) -> Self {
+        assert!(dims >= 1);
+        Self { name: name.to_string(), stack, domain, dims }
+    }
+
+    /// Total raw configurations this parameter contributes.
+    pub fn cardinality(&self) -> f64 {
+        (self.domain.cardinality() as f64).powi(self.dims as i32)
+    }
+}
+
+/// A concrete value assignment for one parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamValue {
+    Int(i64),
+    /// Categorical choice as (index, label).
+    Cat(usize, String),
+    Bool(bool),
+    MultiInt(Vec<i64>),
+    MultiCat(Vec<usize>),
+}
+
+impl ParamValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            ParamValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ParamValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_cat(&self) -> Option<usize> {
+        match self {
+            ParamValue::Cat(i, _) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_multi_int(&self) -> Option<&[i64]> {
+        match self {
+            ParamValue::MultiInt(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_multi_cat(&self) -> Option<&[usize]> {
+        match self {
+            ParamValue::MultiCat(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Cross-parameter constraints (the schema's third component).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Constraint {
+    /// `product(params…) ≤ limit` *and* the product divides `limit`
+    /// (the paper's `product(DP, SP, PP) ≤ NPUs`; divisibility is implied
+    /// by the residual-TP derivation).
+    ProductDividesLimit { params: Vec<String>, limit: u64 },
+    /// The product over a MultiInt parameter's entries equals `limit`
+    /// (the paper's `product(NPUs per Dim) = NPUs`).
+    MultiProductEq { param: String, limit: u64 },
+}
+
+/// A decoded design point: named parameter values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignPoint {
+    pub values: HashMap<String, ParamValue>,
+}
+
+impl DesignPoint {
+    pub fn get(&self, name: &str) -> Option<&ParamValue> {
+        self.values.get(name)
+    }
+
+    pub fn int(&self, name: &str) -> i64 {
+        self.values.get(name).and_then(|v| v.as_int()).unwrap_or_else(|| {
+            panic!("design point missing int param '{name}'")
+        })
+    }
+
+    pub fn boolean(&self, name: &str) -> bool {
+        self.values
+            .get(name)
+            .and_then(|v| v.as_bool())
+            .unwrap_or_else(|| panic!("design point missing bool param '{name}'"))
+    }
+
+    pub fn cat(&self, name: &str) -> usize {
+        self.values
+            .get(name)
+            .and_then(|v| v.as_cat())
+            .unwrap_or_else(|| panic!("design point missing cat param '{name}'"))
+    }
+
+    pub fn multi_int(&self, name: &str) -> &[i64] {
+        self.values
+            .get(name)
+            .and_then(|v| v.as_multi_int())
+            .unwrap_or_else(|| panic!("design point missing multi-int param '{name}'"))
+    }
+
+    pub fn multi_cat(&self, name: &str) -> &[usize] {
+        self.values
+            .get(name)
+            .and_then(|v| v.as_multi_cat())
+            .unwrap_or_else(|| panic!("design point missing multi-cat param '{name}'"))
+    }
+}
+
+/// The PsA schema: parameters + constraints, with genome encode/decode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schema {
+    pub params: Vec<ParamDef>,
+    pub constraints: Vec<Constraint>,
+}
+
+/// One genome slot: which parameter and which of its dims it indexes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    pub param: usize,
+    pub dim: usize,
+    pub cardinality: usize,
+}
+
+impl Schema {
+    pub fn new(params: Vec<ParamDef>, constraints: Vec<Constraint>) -> Self {
+        Self { params, constraints }
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamDef> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// The flattened genome layout: each MultiDim parameter contributes
+    /// `dims` slots.
+    pub fn slots(&self) -> Vec<Slot> {
+        let mut out = Vec::new();
+        for (pi, p) in self.params.iter().enumerate() {
+            for d in 0..p.dims {
+                out.push(Slot { param: pi, dim: d, cardinality: p.domain.cardinality() });
+            }
+        }
+        out
+    }
+
+    pub fn genome_len(&self) -> usize {
+        self.params.iter().map(|p| p.dims).sum()
+    }
+
+    /// Decode a genome (one domain index per slot) into a [`DesignPoint`].
+    /// Returns `Err` on length mismatch or out-of-range indices — agents
+    /// can never construct invalid *values*, only violate constraints.
+    pub fn decode(&self, genome: &[usize]) -> Result<DesignPoint, String> {
+        if genome.len() != self.genome_len() {
+            return Err(format!(
+                "genome length {} != schema slots {}",
+                genome.len(),
+                self.genome_len()
+            ));
+        }
+        let mut values = HashMap::new();
+        let mut idx = 0;
+        for p in &self.params {
+            let card = p.domain.cardinality();
+            let slice = &genome[idx..idx + p.dims];
+            for &g in slice {
+                if g >= card {
+                    return Err(format!("param '{}': index {g} out of range {card}", p.name));
+                }
+            }
+            let value = if p.dims == 1 {
+                match &p.domain {
+                    Domain::Ints(v) => ParamValue::Int(v[slice[0]]),
+                    Domain::Cats(v) => ParamValue::Cat(slice[0], v[slice[0]].clone()),
+                    Domain::Bool => ParamValue::Bool(slice[0] == 1),
+                }
+            } else {
+                match &p.domain {
+                    Domain::Ints(v) => {
+                        ParamValue::MultiInt(slice.iter().map(|&g| v[g]).collect())
+                    }
+                    Domain::Cats(_) => ParamValue::MultiCat(slice.to_vec()),
+                    Domain::Bool => {
+                        return Err(format!("param '{}': multi-dim bool unsupported", p.name))
+                    }
+                }
+            };
+            values.insert(p.name.clone(), value);
+            idx += p.dims;
+        }
+        Ok(DesignPoint { values })
+    }
+
+    /// Check the schema's constraints against a decoded point.
+    pub fn check_constraints(&self, point: &DesignPoint) -> Result<(), String> {
+        for c in &self.constraints {
+            match c {
+                Constraint::ProductDividesLimit { params, limit } => {
+                    let mut product: u64 = 1;
+                    for name in params {
+                        let v = point
+                            .get(name)
+                            .and_then(|v| v.as_int())
+                            .ok_or_else(|| format!("constraint references missing '{name}'"))?;
+                        product = product.saturating_mul(v.max(1) as u64);
+                    }
+                    if product > *limit {
+                        return Err(format!(
+                            "product({}) = {product} exceeds {limit}",
+                            params.join(", ")
+                        ));
+                    }
+                    if limit % product != 0 {
+                        return Err(format!(
+                            "product({}) = {product} does not divide {limit}",
+                            params.join(", ")
+                        ));
+                    }
+                }
+                Constraint::MultiProductEq { param, limit } => {
+                    let v = point
+                        .get(param)
+                        .and_then(|v| v.as_multi_int())
+                        .ok_or_else(|| format!("constraint references missing '{param}'"))?;
+                    let product: u64 = v.iter().map(|&x| x.max(1) as u64).product();
+                    if product != *limit {
+                        return Err(format!("product({param}) = {product} != {limit}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode + constraint-check in one step.
+    pub fn decode_valid(&self, genome: &[usize]) -> Result<DesignPoint, String> {
+        let p = self.decode(genome)?;
+        self.check_constraints(&p)?;
+        Ok(p)
+    }
+
+    /// Parameters belonging to `stack`.
+    pub fn stack_params(&self, stack: Stack) -> Vec<&ParamDef> {
+        self.params.iter().filter(|p| p.stack == stack).collect()
+    }
+
+    /// Slot indices (genome positions) belonging to `stack`.
+    pub fn stack_slots(&self, stack: Stack) -> Vec<usize> {
+        self.slots()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| self.params[s.param].stack == stack)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_schema() -> Schema {
+        Schema::new(
+            vec![
+                ParamDef::scalar("DP", Stack::Workload, Domain::pow2(1, 8)),
+                ParamDef::scalar("Sched", Stack::Collective, Domain::cats(&["LIFO", "FIFO"])),
+                ParamDef::scalar("Shard", Stack::Workload, Domain::Bool),
+                ParamDef::multidim("BW", Stack::Network, Domain::Ints(vec![50, 100]), 2),
+                ParamDef::multidim("NPUs", Stack::Network, Domain::Ints(vec![2, 4]), 2),
+            ],
+            vec![
+                Constraint::ProductDividesLimit { params: vec!["DP".into()], limit: 8 },
+                Constraint::MultiProductEq { param: "NPUs".into(), limit: 8 },
+            ],
+        )
+    }
+
+    #[test]
+    fn pow2_domain() {
+        assert_eq!(Domain::pow2(1, 1024).cardinality(), 11);
+        assert_eq!(Domain::pow2(2, 16), Domain::Ints(vec![2, 4, 8, 16]));
+    }
+
+    #[test]
+    fn genome_len_counts_multidim_slots() {
+        let s = toy_schema();
+        assert_eq!(s.genome_len(), 1 + 1 + 1 + 2 + 2);
+        assert_eq!(s.slots().len(), 7);
+    }
+
+    #[test]
+    fn decode_roundtrips_values() {
+        let s = toy_schema();
+        let p = s.decode(&[2, 0, 1, 1, 0, 1, 0]).unwrap();
+        assert_eq!(p.int("DP"), 4);
+        assert_eq!(p.cat("Sched"), 0);
+        assert!(p.boolean("Shard"));
+        assert_eq!(p.multi_int("BW"), &[100, 50]);
+        assert_eq!(p.multi_int("NPUs"), &[4, 2]);
+    }
+
+    #[test]
+    fn decode_rejects_bad_genomes() {
+        let s = toy_schema();
+        assert!(s.decode(&[0; 6]).is_err()); // wrong length
+        assert!(s.decode(&[9, 0, 0, 0, 0, 0, 0]).is_err()); // out of range
+    }
+
+    #[test]
+    fn constraints_enforced() {
+        let s = toy_schema();
+        // NPUs product = 4*2 = 8 -> ok; DP=4 divides 8 -> ok.
+        assert!(s.decode_valid(&[2, 0, 1, 1, 0, 1, 0]).is_ok());
+        // NPUs product = 2*2 = 4 != 8 -> constraint violation.
+        assert!(s.decode_valid(&[2, 0, 1, 1, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn stack_masking() {
+        let s = toy_schema();
+        assert_eq!(s.stack_params(Stack::Workload).len(), 2);
+        assert_eq!(s.stack_slots(Stack::Network), vec![3, 4, 5, 6]);
+        assert_eq!(s.stack_slots(Stack::Compute), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn param_cardinality_includes_dims() {
+        let s = toy_schema();
+        assert_eq!(s.param("BW").unwrap().cardinality(), 4.0); // 2^2
+        assert_eq!(s.param("DP").unwrap().cardinality(), 4.0); // {1,2,4,8}
+    }
+}

@@ -1,0 +1,292 @@
+//! Design-space cardinality accounting (paper §3.2, Table 1) and
+//! constraint-aware random sampling helpers shared by the agents.
+
+use super::builders::names;
+use super::{Constraint, Domain, Schema};
+use crate::util::Rng;
+use crate::workload::enumerate_parallelizations;
+
+/// A schema constraint compiled to raw genome-slot lookups, so validity
+/// probes skip building a `DesignPoint` (string-keyed map) entirely —
+/// the agents' rejection loops call this thousands of times per second
+/// (EXPERIMENTS.md §Perf iteration 3).
+#[derive(Debug, Clone)]
+enum FastConstraint {
+    /// product over (slot, value-table) pairs divides `limit`.
+    ProductDividesLimit { slots: Vec<(usize, Vec<i64>)>, limit: u64 },
+    /// product over the multi-dim param's slots equals `limit`.
+    MultiProductEq { slots: Vec<(usize, Vec<i64>)>, limit: u64 },
+}
+
+impl FastConstraint {
+    fn compile(schema: &Schema) -> Vec<FastConstraint> {
+        let slots = schema.slots();
+        let slot_of = |name: &str, dim: usize| -> Option<(usize, Vec<i64>)> {
+            for (i, s) in slots.iter().enumerate() {
+                let p = &schema.params[s.param];
+                if p.name == name && s.dim == dim {
+                    if let Domain::Ints(v) = &p.domain {
+                        return Some((i, v.clone()));
+                    }
+                }
+            }
+            None
+        };
+        schema
+            .constraints
+            .iter()
+            .filter_map(|c| match c {
+                Constraint::ProductDividesLimit { params, limit } => {
+                    let slots: Option<Vec<_>> =
+                        params.iter().map(|n| slot_of(n, 0)).collect();
+                    slots.map(|slots| FastConstraint::ProductDividesLimit {
+                        slots,
+                        limit: *limit,
+                    })
+                }
+                Constraint::MultiProductEq { param, limit } => {
+                    let p = schema.param(param)?;
+                    let slots: Option<Vec<_>> =
+                        (0..p.dims).map(|d| slot_of(param, d)).collect();
+                    slots.map(|slots| FastConstraint::MultiProductEq { slots, limit: *limit })
+                }
+            })
+            .collect()
+    }
+
+    fn holds(&self, genome: &[usize]) -> bool {
+        match self {
+            FastConstraint::ProductDividesLimit { slots, limit } => {
+                let mut product: u64 = 1;
+                for (slot, values) in slots {
+                    product = product.saturating_mul(values[genome[*slot]].max(1) as u64);
+                }
+                product <= *limit && limit % product == 0
+            }
+            FastConstraint::MultiProductEq { slots, limit } => {
+                let mut product: u64 = 1;
+                for (slot, values) in slots {
+                    product = product.saturating_mul(values[genome[*slot]].max(1) as u64);
+                }
+                product == *limit
+            }
+        }
+    }
+}
+
+/// A schema plus its genome layout, with sampling utilities. Agents hold
+/// one of these (built for them by the PSS).
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub schema: Schema,
+    /// Per-slot cardinalities (cached).
+    pub slot_cards: Vec<usize>,
+    /// Slots the current search scope may mutate; the rest are frozen to
+    /// the baseline genome (single-stack search, §6.1).
+    pub free_slots: Vec<usize>,
+    /// Baseline genome supplying values for frozen slots.
+    pub baseline: Vec<usize>,
+    /// Constraints compiled to raw-slot form (perf fast path).
+    fast_constraints: Vec<FastConstraint>,
+}
+
+impl DesignSpace {
+    pub fn new(schema: Schema, free_slots: Vec<usize>, baseline: Vec<usize>) -> Self {
+        let slot_cards = schema.slots().iter().map(|s| s.cardinality).collect();
+        assert_eq!(baseline.len(), schema.genome_len());
+        let fast_constraints = FastConstraint::compile(&schema);
+        Self { schema, slot_cards, free_slots, baseline, fast_constraints }
+    }
+
+    /// All slots free.
+    pub fn unconstrained(schema: Schema, baseline: Vec<usize>) -> Self {
+        let n = schema.genome_len();
+        Self::new(schema, (0..n).collect(), baseline)
+    }
+
+    /// Uniform random genome over the free slots (frozen slots keep the
+    /// baseline value). Does not constraint-check.
+    pub fn random_genome(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut g = self.baseline.clone();
+        for &s in &self.free_slots {
+            g[s] = rng.gen_range(self.slot_cards[s]);
+        }
+        g
+    }
+
+    /// Random *valid* genome: rejection-sample until the constraints hold
+    /// (bounded attempts — the paper's constraints keep acceptance high
+    /// because NPUs-per-dim products over {4,8,16} hit the target often).
+    pub fn random_valid_genome(&self, rng: &mut Rng, max_tries: usize) -> Option<Vec<usize>> {
+        for _ in 0..max_tries {
+            let g = self.random_genome(rng);
+            if self.is_valid(&g) {
+                return Some(g);
+            }
+        }
+        None
+    }
+
+    /// Mutate one free slot of `genome` to a random different value.
+    pub fn mutate_one(&self, genome: &[usize], rng: &mut Rng) -> Vec<usize> {
+        let mut g = genome.to_vec();
+        if self.free_slots.is_empty() {
+            return g;
+        }
+        let s = self.free_slots[rng.gen_range(self.free_slots.len())];
+        let card = self.slot_cards[s];
+        if card > 1 {
+            let mut v = rng.gen_range(card);
+            while v == g[s] {
+                v = rng.gen_range(card);
+            }
+            g[s] = v;
+        }
+        g
+    }
+
+    /// Is the genome valid under the schema constraints? Uses the
+    /// compiled raw-slot fast path (no `DesignPoint` allocation); the
+    /// result is identical to `schema.decode_valid(genome).is_ok()` —
+    /// see the `fast_path_matches_decode_valid` test.
+    pub fn is_valid(&self, genome: &[usize]) -> bool {
+        if genome.len() != self.slot_cards.len() {
+            return false;
+        }
+        for (g, card) in genome.iter().zip(&self.slot_cards) {
+            if g >= card {
+                return false;
+            }
+        }
+        self.fast_constraints.iter().all(|c| c.holds(genome))
+    }
+
+    /// Raw (unconstrained) cardinality of the free subspace.
+    pub fn free_cardinality(&self) -> f64 {
+        self.free_slots.iter().map(|&s| self.slot_cards[s] as f64).product()
+    }
+}
+
+/// The paper's Table 1 accounting: the workload triple is counted
+/// *constrained* (286 valid (DP,SP,PP) combos for 1,024 NPUs), everything
+/// else raw. Reproduces `7.69e13` for the Table 1 schema.
+pub fn design_space_size(schema: &Schema, npus: u64) -> f64 {
+    let pp_cap = match &schema.param(names::PP).map(|p| &p.domain) {
+        Some(Domain::Ints(v)) => *v.iter().max().unwrap_or(&1) as u64,
+        _ => npus,
+    };
+    let workload_combos = enumerate_parallelizations(npus, pp_cap, &[false]).len() as f64;
+    let mut total = workload_combos;
+    for p in &schema.params {
+        match p.name.as_str() {
+            names::DP | names::PP | names::SP => {} // folded into combos
+            _ => total *= p.cardinality(),
+        }
+    }
+    total
+}
+
+/// Exhaustive-search time estimate (paper: "2.44e6 years at 1 s/point").
+pub fn exhaustive_search_years(points: f64, secs_per_point: f64) -> f64 {
+    points * secs_per_point / (3600.0 * 24.0 * 365.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psa::paper_table1_schema;
+
+    #[test]
+    fn table1_total_matches_paper_769e13() {
+        let s = paper_table1_schema(1024, 4);
+        let n = design_space_size(&s, 1024);
+        // Paper: ~7.69e13. 286 * 2 * 2 * 256 * 32 * 2 * 81 * 81 * 625.
+        let expect = 286.0 * 2.0 * 2.0 * 256.0 * 32.0 * 2.0 * 81.0 * 81.0 * 625.0;
+        assert!((n - expect).abs() / expect < 1e-12, "n={n:.4e}");
+        assert!(n > 7.6e13 && n < 7.8e13, "n={n:.4e}");
+    }
+
+    #[test]
+    fn exhaustive_years_matches_paper() {
+        let s = paper_table1_schema(1024, 4);
+        let years = exhaustive_search_years(design_space_size(&s, 1024), 1.0);
+        assert!(years > 2.3e6 && years < 2.5e6, "years={years:.3e}");
+    }
+
+    fn space() -> DesignSpace {
+        let schema = paper_table1_schema(64, 2);
+        let baseline = vec![0; schema.genome_len()];
+        // Fix baseline to a valid NPUs-per-dim: need product = 64 -> [4,16]
+        let mut b = baseline;
+        // find NPUs per Dim slots: params order — index them via stack_slots
+        let slots = schema.slots();
+        let mut npu_slots = vec![];
+        for (i, s) in slots.iter().enumerate() {
+            if schema.params[s.param].name == names::NPUS_PER_DIM {
+                npu_slots.push(i);
+            }
+        }
+        b[npu_slots[0]] = 0; // 4
+        b[npu_slots[1]] = 2; // 16
+        DesignSpace::unconstrained(schema, b)
+    }
+
+    #[test]
+    fn random_valid_genome_respects_constraints() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(7);
+        let g = sp.random_valid_genome(&mut rng, 10_000).expect("should find valid");
+        assert!(sp.is_valid(&g));
+    }
+
+    #[test]
+    fn mutate_changes_exactly_one_slot() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(3);
+        let g = sp.baseline.clone();
+        let m = sp.mutate_one(&g, &mut rng);
+        let diff = g.iter().zip(&m).filter(|(a, b)| a != b).count();
+        assert_eq!(diff, 1);
+    }
+
+    #[test]
+    fn frozen_slots_stay_at_baseline() {
+        let schema = paper_table1_schema(64, 2);
+        let n = schema.genome_len();
+        let baseline = vec![0; n];
+        let free = vec![0, 1]; // only DP, PP free
+        let sp = DesignSpace::new(schema, free.clone(), baseline.clone());
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..20 {
+            let g = sp.random_genome(&mut rng);
+            for i in 0..n {
+                if !free.contains(&i) {
+                    assert_eq!(g[i], baseline[i], "slot {i} moved");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_decode_valid() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(99);
+        for _ in 0..2000 {
+            let g = sp.random_genome(&mut rng);
+            assert_eq!(
+                sp.is_valid(&g),
+                sp.schema.decode_valid(&g).is_ok(),
+                "fast path diverged on {g:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn free_cardinality_products_free_slots() {
+        let schema = paper_table1_schema(64, 2);
+        let n = schema.genome_len();
+        let sp = DesignSpace::new(schema.clone(), vec![0], vec![0; n]);
+        // slot 0 is DP with pow2(1,64) = 7 values
+        assert_eq!(sp.free_cardinality(), 7.0);
+    }
+}

@@ -1,0 +1,319 @@
+//! Parameter Set Scheduler (PSS) — paper §4.3.
+//!
+//! The PSS automates what would otherwise be manual, error-prone agent
+//! and environment configuration:
+//!
+//! - **Agent side** — it derives each agent's action space from the PsA
+//!   schema: genome layout, per-slot cardinalities, and which slots are
+//!   *free* under the current search scope (single-stack baselines freeze
+//!   the other stacks at the target system's values — §6.1).
+//! - **Environment side** — it materializes a decoded [`DesignPoint`]
+//!   into the simulator's inputs ([`ClusterConfig`] +
+//!   [`Parallelization`]), so the environment "receives design parameters
+//!   as input and estimates desired performance metrics".
+
+use crate::collective::{CollAlgo, CollectiveConfig, MultiDimPolicy, SchedulingPolicy};
+use crate::psa::builders::names;
+use crate::psa::{DesignPoint, DesignSpace, Domain, Schema, Stack};
+use crate::sim::presets::DIM_LATENCY_US;
+use crate::sim::ClusterConfig;
+use crate::topology::{DimKind, Topology};
+use crate::workload::Parallelization;
+
+/// Which stacks the agent may touch (paper §6.1's four scenarios, plus
+/// the §6.3 co-design pairings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SearchScope {
+    WorkloadOnly,
+    CollectiveOnly,
+    NetworkOnly,
+    FullStack,
+    /// §6.3 Experiment 1: workload + network, collectives fixed.
+    WorkloadNetwork,
+    /// §6.3 Experiment 2: collective + network, workload fixed.
+    CollectiveNetwork,
+    /// Figure 4(b): workload + network.
+    WorkloadCollective,
+}
+
+impl SearchScope {
+    pub fn stacks(&self) -> Vec<Stack> {
+        match self {
+            SearchScope::WorkloadOnly => vec![Stack::Workload],
+            SearchScope::CollectiveOnly => vec![Stack::Collective],
+            SearchScope::NetworkOnly => vec![Stack::Network],
+            SearchScope::FullStack => vec![Stack::Workload, Stack::Collective, Stack::Network],
+            SearchScope::WorkloadNetwork => vec![Stack::Workload, Stack::Network],
+            SearchScope::CollectiveNetwork => vec![Stack::Collective, Stack::Network],
+            SearchScope::WorkloadCollective => vec![Stack::Workload, Stack::Collective],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchScope::WorkloadOnly => "workload-only",
+            SearchScope::CollectiveOnly => "collective-only",
+            SearchScope::NetworkOnly => "network-only",
+            SearchScope::FullStack => "full-stack",
+            SearchScope::WorkloadNetwork => "workload+network",
+            SearchScope::CollectiveNetwork => "collective+network",
+            SearchScope::WorkloadCollective => "workload+collective",
+        }
+    }
+}
+
+/// The scheduler. Construct once per experiment from the schema and the
+/// baseline system; hand [`DesignSpace`]s to agents and materialize their
+/// proposals for the environment.
+#[derive(Debug, Clone)]
+pub struct Pss {
+    pub schema: Schema,
+    pub baseline_cluster: ClusterConfig,
+    pub baseline_par: Parallelization,
+}
+
+impl Pss {
+    pub fn new(schema: Schema, baseline_cluster: ClusterConfig, baseline_par: Parallelization) -> Self {
+        Self { schema, baseline_cluster, baseline_par }
+    }
+
+    /// Encode the baseline system into a genome (nearest domain value for
+    /// each knob). This genome seeds agents and supplies frozen-slot
+    /// values for single-stack scopes.
+    pub fn baseline_genome(&self) -> Vec<usize> {
+        let mut g = Vec::with_capacity(self.schema.genome_len());
+        for p in &self.schema.params {
+            for d in 0..p.dims {
+                g.push(self.baseline_slot_index(&p.name, &p.domain, d));
+            }
+        }
+        g
+    }
+
+    fn baseline_slot_index(&self, name: &str, domain: &Domain, dim: usize) -> usize {
+        let topo = &self.baseline_cluster.topology;
+        let coll = &self.baseline_cluster.collectives;
+        let par = &self.baseline_par;
+        match name {
+            names::DP => nearest_int(domain, par.dp as i64),
+            names::PP => nearest_int(domain, par.pp as i64),
+            names::SP => nearest_int(domain, par.sp as i64),
+            names::WEIGHT_SHARDED => par.weight_sharded as usize,
+            names::SCHED_POLICY => match coll.scheduling {
+                SchedulingPolicy::Lifo => 0,
+                SchedulingPolicy::Fifo => 1,
+            },
+            names::COLL_ALGO => {
+                let algo = coll.algorithms.get(dim).copied().unwrap_or(CollAlgo::Ring);
+                match algo {
+                    CollAlgo::Ring => 0,
+                    CollAlgo::Direct => 1,
+                    CollAlgo::Rhd => 2,
+                    CollAlgo::Dbt => 3,
+                }
+            }
+            names::CHUNKS => nearest_int(domain, coll.chunks as i64),
+            names::MULTIDIM_COLL => match coll.multidim {
+                MultiDimPolicy::Baseline => 0,
+                MultiDimPolicy::BlueConnect => 1,
+            },
+            names::TOPOLOGY => {
+                let kind = topo.dims.get(dim).map(|d| d.kind).unwrap_or(DimKind::Ring);
+                match kind {
+                    DimKind::Ring => 0,
+                    DimKind::Switch => 1,
+                    DimKind::FullyConnected => 2,
+                }
+            }
+            names::NPUS_PER_DIM => {
+                nearest_int(domain, topo.dims.get(dim).map(|d| d.npus as i64).unwrap_or(4))
+            }
+            names::BW_PER_DIM => nearest_int(
+                domain,
+                topo.dims.get(dim).map(|d| d.bandwidth_gbps as i64).unwrap_or(100),
+            ),
+            _ => 0,
+        }
+    }
+
+    /// Build the action space for `scope`: free slots are those of the
+    /// scope's stacks, the rest frozen at the baseline genome.
+    pub fn build_space(&self, scope: SearchScope) -> DesignSpace {
+        let mut free = Vec::new();
+        for stack in scope.stacks() {
+            free.extend(self.schema.stack_slots(stack));
+        }
+        free.sort_unstable();
+        DesignSpace::new(self.schema.clone(), free, self.baseline_genome())
+    }
+
+    /// Materialize a decoded design point into simulator inputs. The
+    /// compute device always comes from the baseline (the paper fixes the
+    /// compute knob per target system).
+    pub fn materialize(
+        &self,
+        point: &DesignPoint,
+    ) -> Result<(ClusterConfig, Parallelization), String> {
+        // --- network stack ---
+        let kinds: Vec<DimKind> = point
+            .multi_cat(names::TOPOLOGY)
+            .iter()
+            .map(|&i| match i {
+                0 => DimKind::Ring,
+                1 => DimKind::Switch,
+                _ => DimKind::FullyConnected,
+            })
+            .collect();
+        let npus_per_dim: Vec<u64> =
+            point.multi_int(names::NPUS_PER_DIM).iter().map(|&v| v as u64).collect();
+        let bw: Vec<f64> = point.multi_int(names::BW_PER_DIM).iter().map(|&v| v as f64).collect();
+        let lat: Vec<f64> = (0..kinds.len())
+            .map(|d| DIM_LATENCY_US.get(d).copied().unwrap_or(2.0))
+            .collect();
+        let topology = Topology::from_arrays(&kinds, &npus_per_dim, &bw, &lat);
+        let npus = topology.total_npus();
+
+        // --- collective stack ---
+        let scheduling = match point.cat(names::SCHED_POLICY) {
+            0 => SchedulingPolicy::Lifo,
+            _ => SchedulingPolicy::Fifo,
+        };
+        let algorithms: Vec<CollAlgo> = point
+            .multi_cat(names::COLL_ALGO)
+            .iter()
+            .map(|&i| match i {
+                0 => CollAlgo::Ring,
+                1 => CollAlgo::Direct,
+                2 => CollAlgo::Rhd,
+                _ => CollAlgo::Dbt,
+            })
+            .collect();
+        let chunks = point.int(names::CHUNKS) as u32;
+        let multidim = match point.cat(names::MULTIDIM_COLL) {
+            0 => MultiDimPolicy::Baseline,
+            _ => MultiDimPolicy::BlueConnect,
+        };
+        let collectives = CollectiveConfig::new(scheduling, algorithms, chunks, multidim);
+
+        // --- workload stack ---
+        let par = Parallelization::derive(
+            npus,
+            point.int(names::DP) as u64,
+            point.int(names::SP) as u64,
+            point.int(names::PP) as u64,
+            point.boolean(names::WEIGHT_SHARDED),
+        )?;
+
+        let cluster =
+            ClusterConfig { topology, collectives, compute: self.baseline_cluster.compute };
+        cluster.validate()?;
+        Ok((cluster, par))
+    }
+}
+
+/// Index of the closest value in an integer domain.
+fn nearest_int(domain: &Domain, target: i64) -> usize {
+    match domain {
+        Domain::Ints(v) => v
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &x)| (x - target).abs())
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+        Domain::Bool => (target != 0) as usize,
+        Domain::Cats(_) => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::psa::paper_table4_schema;
+    use crate::sim::presets;
+    use crate::util::Rng;
+
+    fn pss() -> Pss {
+        let cluster = presets::system2();
+        let par = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+        Pss::new(paper_table4_schema(1024, 4), cluster, par)
+    }
+
+    #[test]
+    fn baseline_genome_is_valid_and_roundtrips() {
+        let p = pss();
+        let g = p.baseline_genome();
+        let point = p.schema.decode_valid(&g).expect("baseline must satisfy constraints");
+        assert_eq!(point.int(names::DP), 64);
+        assert_eq!(point.int(names::SP), 4);
+        assert!(point.boolean(names::WEIGHT_SHARDED));
+        // Topology round-trip: [RI, FC, RI, SW] with [4,8,4,8].
+        let (cluster, par) = p.materialize(&point).unwrap();
+        assert_eq!(cluster.topology.notation(), "[RI, FC, RI, SW]");
+        assert_eq!(cluster.npus(), 1024);
+        assert_eq!(par.tp, 4);
+    }
+
+    #[test]
+    fn baseline_bandwidth_snaps_to_domain() {
+        let p = pss();
+        let g = p.baseline_genome();
+        let point = p.schema.decode(&g).unwrap();
+        // System 2 bw [375,175,150,100] snaps onto the 50-step grid.
+        let bw = point.multi_int(names::BW_PER_DIM);
+        assert_eq!(bw, &[350, 150, 150, 100]); // 375 is equidistant; nearest_int takes the lower
+    }
+
+    #[test]
+    fn scope_masks_free_slots() {
+        let p = pss();
+        let wl = p.build_space(SearchScope::WorkloadOnly);
+        let fs = p.build_space(SearchScope::FullStack);
+        assert_eq!(wl.free_slots.len(), 4); // DP, PP, SP, shard
+        assert!(fs.free_slots.len() > wl.free_slots.len());
+        let cn = p.build_space(SearchScope::CollectiveNetwork);
+        // collective: 1 + 4 + 1 + 1 = 7 slots; network: 4 + 4 + 4 = 12.
+        assert_eq!(cn.free_slots.len(), 19);
+    }
+
+    #[test]
+    fn materialized_random_points_simulate() {
+        use crate::sim::Simulator;
+        use crate::workload::models::presets as wl;
+        use crate::workload::ExecutionMode;
+        let p = pss();
+        let space = p.build_space(SearchScope::FullStack);
+        let mut rng = Rng::seed_from_u64(42);
+        let sim = Simulator::new();
+        let model = wl::gpt3_175b().with_simulated_layers(4);
+        let mut ok = 0;
+        for _ in 0..20 {
+            if let Some(g) = space.random_valid_genome(&mut rng, 5000) {
+                let point = p.schema.decode_valid(&g).unwrap();
+                if let Ok((cluster, par)) = p.materialize(&point) {
+                    if sim.run(&cluster, &model, &par, 2048, ExecutionMode::Training).is_ok() {
+                        ok += 1;
+                    }
+                }
+            }
+        }
+        assert!(ok > 0, "at least some sampled full-stack points must simulate");
+    }
+
+    #[test]
+    fn materialize_rejects_parallelization_overflow() {
+        let p = pss();
+        let mut g = p.baseline_genome();
+        // Crank DP to 2048 on a 1024-NPU cluster -> derive() must fail.
+        g[0] = 11; // DP = 2048 in pow2(1, 2048)
+        let point = p.schema.decode(&g).unwrap();
+        assert!(p.materialize(&point).is_err());
+    }
+
+    #[test]
+    fn nearest_int_picks_closest() {
+        let d = Domain::Ints(vec![50, 100, 150, 200]);
+        assert_eq!(nearest_int(&d, 160), 2);
+        assert_eq!(nearest_int(&d, 40), 0);
+        assert_eq!(nearest_int(&d, 1000), 3);
+    }
+}

@@ -1,0 +1,302 @@
+//! Pure-Rust twin of the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The batched analytical cost model (L1 Pallas kernel `roofline.py` +
+//! L2 graph `model.py::cost_model`) and the GP surrogate
+//! (`model.py::gp_surrogate`) are both simple dense math; this module
+//! implements the *identical* equations in Rust so that
+//!
+//! 1. the library works with no artifacts built (tests, offline), and
+//! 2. the XLA path can be validated bit-for-bit (to f32 tolerance)
+//!    against an independent implementation — `runtime::tests` and
+//!    `python/tests/test_kernel.py` share the same fixtures.
+
+/// Fixed artifact shapes (must match `python/compile/model.py`).
+pub const BATCH: usize = 256; // candidate configs per call
+pub const OPS: usize = 8; // operator classes per config
+pub const DIMS: usize = 4; // network dimensions
+pub const GP_TRAIN: usize = 64; // GP training points (padded)
+pub const GP_QUERY: usize = 64; // GP query points (padded)
+pub const GP_FEATURES: usize = 32; // normalized genome features (padded)
+
+/// Inputs to one batched cost-model call (row-major `[BATCH, …]`).
+#[derive(Debug, Clone)]
+pub struct CostBatch {
+    /// Per-op flops, `[BATCH * OPS]`.
+    pub flops: Vec<f32>,
+    /// Per-op HBM bytes, `[BATCH * OPS]`.
+    pub bytes: Vec<f32>,
+    /// Collective latency steps per dim, `[BATCH * DIMS]`.
+    pub steps: Vec<f32>,
+    /// Collective wire volume per dim (bytes), `[BATCH * DIMS]`.
+    pub volume: Vec<f32>,
+    /// Per-dim alpha (us), `[BATCH * DIMS]`.
+    pub alpha_us: Vec<f32>,
+    /// Per-dim beta (bytes/us), `[BATCH * DIMS]`.
+    pub beta: Vec<f32>,
+    /// Device peak (flops/us) — scalar broadcast.
+    pub peak_flops_us: f32,
+    /// Device memory bandwidth (bytes/us).
+    pub mem_bytes_us: f32,
+}
+
+impl CostBatch {
+    /// Zero-filled batch of the fixed artifact shape.
+    pub fn zeros() -> Self {
+        Self {
+            flops: vec![0.0; BATCH * OPS],
+            bytes: vec![0.0; BATCH * OPS],
+            steps: vec![0.0; BATCH * DIMS],
+            volume: vec![0.0; BATCH * DIMS],
+            alpha_us: vec![0.0; BATCH * DIMS],
+            beta: vec![1.0; BATCH * DIMS],
+            peak_flops_us: 1.0,
+            mem_bytes_us: 1.0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let checks = [
+            (self.flops.len(), BATCH * OPS, "flops"),
+            (self.bytes.len(), BATCH * OPS, "bytes"),
+            (self.steps.len(), BATCH * DIMS, "steps"),
+            (self.volume.len(), BATCH * DIMS, "volume"),
+            (self.alpha_us.len(), BATCH * DIMS, "alpha_us"),
+            (self.beta.len(), BATCH * DIMS, "beta"),
+        ];
+        for (got, want, name) in checks {
+            if got != want {
+                return Err(format!("{name}: len {got} != {want}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The analytical estimate the Pallas kernel computes, per candidate:
+///
+/// `total[i] = Σ_k max(flops[i,k]/peak, bytes[i,k]/membw)
+///           + Σ_d (steps[i,d]·alpha[i,d] + volume[i,d]/beta[i,d])`
+pub fn cost_model_ref(batch: &CostBatch) -> Vec<f32> {
+    let mut out = vec![0.0f32; BATCH];
+    for i in 0..BATCH {
+        let mut compute = 0.0f32;
+        for k in 0..OPS {
+            let f = batch.flops[i * OPS + k] / batch.peak_flops_us;
+            let b = batch.bytes[i * OPS + k] / batch.mem_bytes_us;
+            compute += f.max(b);
+        }
+        let mut comm = 0.0f32;
+        for d in 0..DIMS {
+            comm += batch.steps[i * DIMS + d] * batch.alpha_us[i * DIMS + d]
+                + batch.volume[i * DIMS + d] / batch.beta[i * DIMS + d];
+        }
+        out[i] = compute + comm;
+    }
+    out
+}
+
+/// GP surrogate math identical to `model.py::gp_surrogate`: RBF kernel,
+/// Cholesky solve, posterior mean/var at the queries. Padded rows are
+/// marked by `mask` (1.0 = real, 0.0 = padding); padding contributes only
+/// jitter to the diagonal.
+pub struct GpFallback {
+    pub lengthscale: f32,
+    pub noise: f32,
+}
+
+impl GpFallback {
+    /// `x_train: [GP_TRAIN * GP_FEATURES]`, `y: [GP_TRAIN]`,
+    /// `mask: [GP_TRAIN]`, `x_query: [GP_QUERY * GP_FEATURES]`.
+    /// Returns (mean `[GP_QUERY]`, var `[GP_QUERY]`).
+    pub fn posterior(
+        &self,
+        x_train: &[f32],
+        y: &[f32],
+        mask: &[f32],
+        x_query: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(x_train.len(), GP_TRAIN * GP_FEATURES);
+        assert_eq!(y.len(), GP_TRAIN);
+        assert_eq!(mask.len(), GP_TRAIN);
+        assert_eq!(x_query.len(), GP_QUERY * GP_FEATURES);
+        let n = GP_TRAIN;
+        let ls2 = 2.0 * self.lengthscale * self.lengthscale;
+
+        // Masked RBF kernel: padded rows decouple into pure-noise rows.
+        let mut k = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut d2 = 0.0f32;
+                for f in 0..GP_FEATURES {
+                    let diff = x_train[i * GP_FEATURES + f] - x_train[j * GP_FEATURES + f];
+                    d2 += diff * diff;
+                }
+                k[i * n + j] = (-d2 / ls2).exp() * mask[i] * mask[j];
+            }
+            k[i * n + i] += self.noise + 1e-6;
+            if mask[i] == 0.0 {
+                k[i * n + i] += 1.0; // keep padded rows well-conditioned
+            }
+        }
+        // Cholesky (f32, same as the f32 XLA path).
+        let mut l = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = k[i * n + j];
+                for t in 0..j {
+                    sum -= l[i * n + t] * l[j * n + t];
+                }
+                if i == j {
+                    l[i * n + i] = sum.max(1e-12).sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        // alpha = K^-1 (y * mask)
+        let ym: Vec<f32> = y.iter().zip(mask).map(|(a, m)| a * m).collect();
+        let mut w = vec![0.0f32; n];
+        for i in 0..n {
+            let mut sum = ym[i];
+            for t in 0..i {
+                sum -= l[i * n + t] * w[t];
+            }
+            w[i] = sum / l[i * n + i];
+        }
+        let mut alpha = vec![0.0f32; n];
+        for i in (0..n).rev() {
+            let mut sum = w[i];
+            for t in i + 1..n {
+                sum -= l[t * n + i] * alpha[t];
+            }
+            alpha[i] = sum / l[i * n + i];
+        }
+
+        let mut mean = vec![0.0f32; GP_QUERY];
+        let mut var = vec![0.0f32; GP_QUERY];
+        for q in 0..GP_QUERY {
+            let mut kq = vec![0.0f32; n];
+            for i in 0..n {
+                let mut d2 = 0.0f32;
+                for f in 0..GP_FEATURES {
+                    let diff = x_train[i * GP_FEATURES + f] - x_query[q * GP_FEATURES + f];
+                    d2 += diff * diff;
+                }
+                kq[i] = (-d2 / ls2).exp() * mask[i];
+            }
+            mean[q] = kq.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+            // v = L^-1 kq
+            let mut v = vec![0.0f32; n];
+            for i in 0..n {
+                let mut sum = kq[i];
+                for t in 0..i {
+                    sum -= l[i * n + t] * v[t];
+                }
+                v[i] = sum / l[i * n + i];
+            }
+            var[q] = (1.0 - v.iter().map(|x| x * x).sum::<f32>()).max(1e-9);
+        }
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_batch_costs_zero() {
+        let b = CostBatch::zeros();
+        let out = cost_model_ref(&b);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn roofline_max_is_respected() {
+        let mut b = CostBatch::zeros();
+        b.peak_flops_us = 10.0;
+        b.mem_bytes_us = 5.0;
+        b.flops[0] = 100.0; // 10 us compute
+        b.bytes[0] = 10.0; // 2 us memory -> max = 10
+        b.flops[OPS] = 10.0; // config 1: 1 us compute
+        b.bytes[OPS] = 100.0; // 20 us memory -> max = 20
+        let out = cost_model_ref(&b);
+        assert!((out[0] - 10.0).abs() < 1e-6);
+        assert!((out[1] - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn comm_term_is_alpha_beta() {
+        let mut b = CostBatch::zeros();
+        b.steps[0] = 3.0;
+        b.alpha_us[0] = 2.0;
+        b.volume[1] = 100.0;
+        b.beta[1] = 50.0;
+        let out = cost_model_ref(&b);
+        assert!((out[0] - (6.0 + 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let mut b = CostBatch::zeros();
+        assert!(b.validate().is_ok());
+        b.flops.pop();
+        assert!(b.validate().is_err());
+    }
+
+    fn toy_gp_inputs() -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut x_train = vec![0.0f32; GP_TRAIN * GP_FEATURES];
+        let mut y = vec![0.0f32; GP_TRAIN];
+        let mut mask = vec![0.0f32; GP_TRAIN];
+        // Three real points along feature 0: f(x) = x.
+        for (i, xv) in [0.0f32, 0.5, 1.0].iter().enumerate() {
+            x_train[i * GP_FEATURES] = *xv;
+            y[i] = *xv;
+            mask[i] = 1.0;
+        }
+        // Query at 0.25.
+        let mut x_query = vec![0.0f32; GP_QUERY * GP_FEATURES];
+        x_query[0] = 0.25;
+        (x_train, y, mask, x_query)
+    }
+
+    #[test]
+    fn gp_posterior_interpolates() {
+        let (xt, y, mask, xq) = toy_gp_inputs();
+        let gp = GpFallback { lengthscale: 0.3, noise: 1e-4 };
+        let (mean, var) = gp.posterior(&xt, &y, &mask, &xq);
+        assert!((mean[0] - 0.25).abs() < 0.1, "mean={}", mean[0]);
+        assert!(var[0] < 0.2);
+        // Unqueried padded rows produce prior-ish outputs, not NaN.
+        assert!(mean.iter().all(|m| m.is_finite()));
+        assert!(var.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn gp_padding_is_inert() {
+        // Same real points, different junk in padded x rows -> same
+        // posterior (mask zeroes them out of the kernel).
+        let (xt, y, mask, xq) = toy_gp_inputs();
+        let mut xt2 = xt.clone();
+        for i in 10..GP_TRAIN {
+            for f in 0..GP_FEATURES {
+                xt2[i * GP_FEATURES + f] = 0.77;
+            }
+        }
+        let gp = GpFallback { lengthscale: 0.3, noise: 1e-4 };
+        let (m1, v1) = gp.posterior(&xt, &y, &mask, &xq);
+        let (m2, v2) = gp.posterior(&xt2, &y, &mask, &xq);
+        assert!((m1[0] - m2[0]).abs() < 1e-5);
+        assert!((v1[0] - v2[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gp_matches_f64_reference_on_training_point() {
+        let (xt, y, mask, mut xq) = toy_gp_inputs();
+        xq[0] = 0.5; // exactly the second training point
+        let gp = GpFallback { lengthscale: 0.3, noise: 1e-6 };
+        let (mean, var) = gp.posterior(&xt, &y, &mask, &xq);
+        assert!((mean[0] - 0.5).abs() < 0.05, "mean={}", mean[0]);
+        assert!(var[0] < 0.05);
+    }
+}

@@ -1,0 +1,305 @@
+//! PJRT runtime bridge: load and execute the AOT-compiled JAX/Pallas
+//! artifacts from the Rust hot path.
+//!
+//! Build-time python (`python/compile/aot.py`) lowers two computations to
+//! **HLO text** (not serialized protos — jax ≥ 0.5 emits 64-bit ids the
+//! crate's XLA rejects; the text parser reassigns them):
+//!
+//! - `artifacts/cost_model.hlo.txt` — the batched analytical cost model
+//!   (L2 graph wrapping the L1 Pallas roofline kernel);
+//! - `artifacts/gp_surrogate.hlo.txt` — the BO agent's GP posterior.
+//!
+//! This module compiles them once on a `PjRtClient::cpu()` and exposes
+//! typed entry points. Every artifact has a pure-Rust twin in
+//! [`fallback`]; [`CostModel`] and [`GpSurrogate`] transparently fall
+//! back when artifacts are absent, and `tests` assert the two paths agree
+//! to f32 tolerance.
+
+pub mod fallback;
+
+pub use fallback::{cost_model_ref, CostBatch, GpFallback, BATCH, DIMS, GP_FEATURES, GP_QUERY, GP_TRAIN, OPS};
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("COSMIC_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A compiled XLA executable loaded from HLO text.
+pub struct XlaModule {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaModule {
+    /// Load HLO text at `path` and compile it for the CPU PJRT client.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO module")?;
+        Ok(Self { exe })
+    }
+
+    /// Execute with f32 literals; returns the decomposed output tuple.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // jax lowers with return_tuple=True: decompose the 1-level tuple.
+        Ok(result.to_tuple()?)
+    }
+}
+
+fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "literal shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+fn literal_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// The batched analytical cost model — XLA-backed when the artifact is
+/// present, pure-Rust otherwise. This is the DSE pre-filter hot path.
+pub enum CostModel {
+    Xla { module: XlaModule },
+    Fallback,
+}
+
+impl CostModel {
+    /// Try to load the artifact; fall back silently if missing.
+    pub fn load(client: Option<&xla::PjRtClient>, dir: &Path) -> Self {
+        let path = dir.join("cost_model.hlo.txt");
+        if let Some(client) = client {
+            if path.exists() {
+                match XlaModule::load(client, &path) {
+                    Ok(module) => return CostModel::Xla { module },
+                    Err(e) => eprintln!("cost_model artifact load failed ({e:#}); using fallback"),
+                }
+            }
+        }
+        CostModel::Fallback
+    }
+
+    pub fn is_xla(&self) -> bool {
+        matches!(self, CostModel::Xla { .. })
+    }
+
+    /// Evaluate the batch, returning one estimated cost (us) per config.
+    pub fn evaluate(&self, batch: &CostBatch) -> Result<Vec<f32>> {
+        batch.validate().map_err(anyhow::Error::msg)?;
+        match self {
+            CostModel::Fallback => Ok(cost_model_ref(batch)),
+            CostModel::Xla { module } => {
+                let inputs = vec![
+                    literal_2d(&batch.flops, BATCH, OPS)?,
+                    literal_2d(&batch.bytes, BATCH, OPS)?,
+                    literal_2d(&batch.steps, BATCH, DIMS)?,
+                    literal_2d(&batch.volume, BATCH, DIMS)?,
+                    literal_2d(&batch.alpha_us, BATCH, DIMS)?,
+                    literal_2d(&batch.beta, BATCH, DIMS)?,
+                    xla::Literal::scalar(batch.peak_flops_us),
+                    xla::Literal::scalar(batch.mem_bytes_us),
+                ];
+                let mut out = module.run_f32(&inputs)?;
+                anyhow::ensure!(!out.is_empty(), "cost model returned empty tuple");
+                let total = out.remove(0).to_vec::<f32>()?;
+                anyhow::ensure!(total.len() == BATCH, "bad output length {}", total.len());
+                Ok(total)
+            }
+        }
+    }
+}
+
+/// The GP surrogate — same dual-path structure. Implements the BO
+/// agent's [`crate::agents::bo::Surrogate`] trait so it can be slotted
+/// straight into [`crate::agents::BayesOpt::with_surrogate`].
+pub struct GpSurrogate {
+    backend: GpBackend,
+    lengthscale: f32,
+    noise: f32,
+    /// Fitted training set, padded to the artifact shape.
+    x_train: Vec<f32>,
+    y_train: Vec<f32>,
+    mask: Vec<f32>,
+    y_mean: f32,
+    fitted: bool,
+}
+
+enum GpBackend {
+    Xla(XlaModule),
+    Fallback,
+}
+
+impl GpSurrogate {
+    pub fn load(client: Option<&xla::PjRtClient>, dir: &Path, lengthscale: f32) -> Self {
+        let path = dir.join("gp_surrogate.hlo.txt");
+        let backend = match client {
+            Some(client) if path.exists() => match XlaModule::load(client, &path) {
+                Ok(m) => GpBackend::Xla(m),
+                Err(e) => {
+                    eprintln!("gp artifact load failed ({e:#}); using fallback");
+                    GpBackend::Fallback
+                }
+            },
+            _ => GpBackend::Fallback,
+        };
+        Self {
+            backend,
+            lengthscale,
+            noise: 1e-4,
+            x_train: vec![0.0; GP_TRAIN * GP_FEATURES],
+            y_train: vec![0.0; GP_TRAIN],
+            mask: vec![0.0; GP_TRAIN],
+            y_mean: 0.0,
+            fitted: false,
+        }
+    }
+
+    pub fn is_xla(&self) -> bool {
+        matches!(self.backend, GpBackend::Xla(_))
+    }
+
+    /// Pad a normalized feature vector to `GP_FEATURES`.
+    fn pad_features(q: &[f64]) -> Vec<f32> {
+        let mut out = vec![0.0f32; GP_FEATURES];
+        for (i, v) in q.iter().take(GP_FEATURES).enumerate() {
+            out[i] = *v as f32;
+        }
+        out
+    }
+
+    /// Posterior at a batch of queries (padded to `GP_QUERY`).
+    pub fn posterior(&self, queries: &[Vec<f64>]) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(self.fitted, "GP surrogate not fitted");
+        anyhow::ensure!(queries.len() <= GP_QUERY, "too many queries");
+        let mut xq = vec![0.0f32; GP_QUERY * GP_FEATURES];
+        for (i, q) in queries.iter().enumerate() {
+            xq[i * GP_FEATURES..(i + 1) * GP_FEATURES].copy_from_slice(&Self::pad_features(q));
+        }
+        let (mut mean, var) = match &self.backend {
+            GpBackend::Fallback => {
+                let gp = GpFallback { lengthscale: self.lengthscale, noise: self.noise };
+                gp.posterior(&self.x_train, &self.y_train, &self.mask, &xq)
+            }
+            GpBackend::Xla(module) => {
+                let inputs = vec![
+                    literal_2d(&self.x_train, GP_TRAIN, GP_FEATURES)?,
+                    literal_1d(&self.y_train),
+                    literal_1d(&self.mask),
+                    literal_2d(&xq, GP_QUERY, GP_FEATURES)?,
+                    xla::Literal::scalar(self.lengthscale),
+                    xla::Literal::scalar(self.noise),
+                ];
+                let out = module.run_f32(&inputs)?;
+                anyhow::ensure!(out.len() >= 2, "gp artifact must return (mean, var)");
+                (out[0].to_vec::<f32>()?, out[1].to_vec::<f32>()?)
+            }
+        };
+        for m in &mut mean {
+            *m += self.y_mean;
+        }
+        Ok((mean, var))
+    }
+}
+
+impl crate::agents::bo::Surrogate for GpSurrogate {
+    fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64]) -> bool {
+        if xs.is_empty() || xs.len() != ys.len() {
+            return false;
+        }
+        // Keep the most recent GP_TRAIN points (the BO agent already
+        // subsets best+recent before calling fit).
+        let start = xs.len().saturating_sub(GP_TRAIN);
+        let xs = &xs[start..];
+        let ys = &ys[start..];
+        self.y_mean = (ys.iter().sum::<f64>() / ys.len() as f64) as f32;
+        self.x_train.fill(0.0);
+        self.y_train.fill(0.0);
+        self.mask.fill(0.0);
+        for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+            self.x_train[i * GP_FEATURES..(i + 1) * GP_FEATURES]
+                .copy_from_slice(&Self::pad_features(x));
+            self.y_train[i] = *y as f32 - self.y_mean;
+            self.mask[i] = 1.0;
+        }
+        self.fitted = true;
+        true
+    }
+
+    fn predict(&self, q: &[f64]) -> (f64, f64) {
+        match self.posterior(std::slice::from_ref(&q.to_vec())) {
+            Ok((mean, var)) => (mean[0] as f64, var[0] as f64),
+            Err(_) => (0.0, 1.0),
+        }
+    }
+}
+
+/// Shared PJRT client handle. Creating a CPU client is cheap but not
+/// free; hold one per process.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load both artifacts from `dir` (falling back where missing).
+    pub fn load_models(&self, dir: &Path) -> (CostModel, GpSurrogate) {
+        (
+            CostModel::load(Some(&self.client), dir),
+            GpSurrogate::load(Some(&self.client), dir, 0.5),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::bo::Surrogate;
+
+    #[test]
+    fn fallback_cost_model_without_artifacts() {
+        let cm = CostModel::load(None, Path::new("/nonexistent"));
+        assert!(!cm.is_xla());
+        let out = cm.evaluate(&CostBatch::zeros()).unwrap();
+        assert_eq!(out.len(), BATCH);
+    }
+
+    #[test]
+    fn fallback_gp_fit_predict() {
+        let mut gp = GpSurrogate::load(None, Path::new("/nonexistent"), 0.3);
+        assert!(!gp.is_xla());
+        let xs = vec![vec![0.0; 4], vec![1.0; 4]];
+        let ys = [0.0, 1.0];
+        assert!(gp.fit(&xs, &ys));
+        let (m0, _) = gp.predict(&vec![0.0; 4]);
+        let (m1, _) = gp.predict(&vec![1.0; 4]);
+        assert!(m0 < m1, "m0={m0} m1={m1}");
+    }
+
+    #[test]
+    fn gp_unfitted_predict_is_prior() {
+        let gp = GpSurrogate::load(None, Path::new("/nonexistent"), 0.3);
+        let (m, v) = gp.predict(&vec![0.5; 4]);
+        assert_eq!((m, v), (0.0, 1.0));
+    }
+
+    #[test]
+    fn gp_fit_rejects_bad_shapes() {
+        let mut gp = GpSurrogate::load(None, Path::new("/nonexistent"), 0.3);
+        assert!(!gp.fit(&[], &[]));
+        assert!(!gp.fit(&[vec![0.0]], &[1.0, 2.0]));
+    }
+
+    // XLA-path tests live in rust/tests/xla_runtime.rs (they need the
+    // artifacts built by `make artifacts`).
+}

@@ -1,0 +1,163 @@
+//! Minimal discrete-event engine used by the simulator's network stage.
+//!
+//! A binary-heap event queue over `(time, seq, event)` with a monotonic
+//! sequence number for deterministic FIFO tie-breaking at equal
+//! timestamps. Time is `f64` microseconds; NaN times are rejected.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at an absolute simulation time.
+#[derive(Debug, Clone)]
+struct Scheduled<E> {
+    time_us: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time_us == other.time_us && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap; ties broken by insertion order.
+        other
+            .time_us
+            .partial_cmp(&self.time_us)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event queue.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now_us: f64,
+    next_seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now_us: 0.0, next_seq: 0 }
+    }
+
+    /// Current simulation time (time of the last popped event).
+    pub fn now_us(&self) -> f64 {
+        self.now_us
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute time `time_us`. Panics on NaN or on
+    /// scheduling into the past (a logic error in the caller).
+    pub fn schedule_at(&mut self, time_us: f64, event: E) {
+        assert!(!time_us.is_nan(), "NaN event time");
+        assert!(
+            time_us >= self.now_us,
+            "scheduling into the past: {time_us} < {}",
+            self.now_us
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { time_us, seq, event });
+    }
+
+    /// Schedule `event` `delay_us` from now.
+    pub fn schedule_in(&mut self, delay_us: f64, event: E) {
+        self.schedule_at(self.now_us + delay_us.max(0.0), event);
+    }
+
+    /// Pop the earliest event, advancing the clock to it.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|s| {
+            self.now_us = s.time_us;
+            (s.time_us, s.event)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, 1);
+        q.schedule_at(5.0, 2);
+        q.schedule_at(5.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_with_pops() {
+        let mut q = EventQueue::new();
+        q.schedule_in(10.0, ());
+        assert_eq!(q.now_us(), 0.0);
+        q.pop();
+        assert_eq!(q.now_us(), 10.0);
+        q.schedule_in(5.0, ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 15.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn rejects_past_scheduling() {
+        let mut q = EventQueue::new();
+        q.schedule_at(10.0, ());
+        q.pop();
+        q.schedule_at(5.0, ());
+    }
+
+    #[test]
+    fn negative_delay_clamps_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_in(-3.0, "x");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        assert!(q.is_empty());
+        q.schedule_in(1.0, ());
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

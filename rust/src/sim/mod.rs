@@ -1,0 +1,580 @@
+//! End-to-end distributed-ML simulator (the ASTRA-sim substrate).
+//!
+//! Given a cluster (topology + collective config + compute device), a
+//! model, a parallelization and a batch size, [`Simulator`] predicts the
+//! end-to-end iteration latency:
+//!
+//! 1. the WTG instantiates the symbolic trace (`workload::trace`);
+//! 2. the §5.4 memory constraint is checked (`workload::memory`);
+//! 3. per-microbatch forward/backward timelines are built: roofline
+//!    compute ops serialize on the compute stream, *blocking* collectives
+//!    (TP/SP) serialize with them at their multi-dimensional alpha-beta
+//!    cost;
+//! 4. microbatches compose into a 1F1B-style pipeline makespan;
+//! 5. *overlappable* gradient collectives (DP / ZeRO) are issued as the
+//!    backward pass retires layers and drain on a serial network resource
+//!    through the LIFO/FIFO [`ChunkScheduler`] — the exposed tail (what
+//!    the next iteration's forward must still wait for, layer by layer)
+//!    is added to the iteration latency;
+//! 6. latency and memory re-scale by the simulated-layer factor
+//!    (Table 2 footnote).
+
+pub mod engine;
+pub mod presets;
+
+pub use engine::EventQueue;
+
+use crate::collective::{
+    multidim_collective_time_us, CollectiveConfig, CollectiveKind,
+};
+use crate::compute::{ComputeDevice, MEM_LIMIT_BYTES};
+use crate::topology::Topology;
+use crate::workload::{
+    footprint, generate_trace, group_dim_costs, CommGroup, ExecutionMode, MemoryFootprint,
+    ModelConfig, Parallelization, TraceOp,
+};
+
+/// A complete cluster design point: the three non-workload stacks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub topology: Topology,
+    pub collectives: CollectiveConfig,
+    pub compute: ComputeDevice,
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.topology.validate()?;
+        self.collectives.validate(self.topology.num_dims())?;
+        self.compute.validate()?;
+        Ok(())
+    }
+
+    pub fn npus(&self) -> u64 {
+        self.topology.total_npus()
+    }
+}
+
+/// Why a design point was rejected.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Invalid {
+    /// Per-NPU memory footprint exceeds the §5.4 budget.
+    Memory { required_gb: f64, budget_gb: f64 },
+    /// Structural error (non-dividing parallelization, bad config...).
+    Config(String),
+}
+
+/// Simulation output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    /// End-to-end iteration latency (us), re-scaled to the full model.
+    pub latency_us: f64,
+    /// Pure compute time on the critical path (us, re-scaled).
+    pub compute_us: f64,
+    /// Blocking (TP/SP/P2P) communication on the critical path (us).
+    pub comm_blocking_us: f64,
+    /// Exposed (non-overlapped) gradient-sync tail (us).
+    pub comm_exposed_us: f64,
+    /// Per-NPU memory footprint.
+    pub memory: MemoryFootprint,
+    /// Microbatches in the pipeline schedule.
+    pub microbatches: u64,
+    /// Cluster-wide achieved TFLOP/s (all NPUs).
+    pub achieved_tflops: f64,
+}
+
+impl SimReport {
+    /// Fraction of the iteration spent on exposed communication.
+    pub fn comm_fraction(&self) -> f64 {
+        if self.latency_us <= 0.0 {
+            0.0
+        } else {
+            (self.comm_blocking_us + self.comm_exposed_us) / self.latency_us
+        }
+    }
+}
+
+/// The simulator. Holds no per-run mutable state: `run` is pure, so one
+/// instance may be shared across a DSE sweep (and across threads).
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    /// Per-NPU memory budget in bytes (paper: 24 GB).
+    pub mem_budget_bytes: f64,
+}
+
+impl Default for Simulator {
+    fn default() -> Self {
+        Self { mem_budget_bytes: MEM_LIMIT_BYTES }
+    }
+}
+
+/// One overlappable gradient collective pending on the network.
+#[derive(Debug, Clone, Copy)]
+struct GradJob {
+    layer: u64,
+    issue_us: f64,
+    duration_us: f64,
+}
+
+impl Simulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cost of one collective of `kind` over the communicator `group`.
+    fn collective_cost_us(
+        &self,
+        cluster: &ClusterConfig,
+        par: &Parallelization,
+        kind: CollectiveKind,
+        group: CommGroup,
+        bytes: f64,
+    ) -> f64 {
+        let strides = par.strides();
+        let (stride, size) = match group {
+            CommGroup::Tp => (strides.tp, par.tp),
+            CommGroup::Sp => (strides.sp, par.sp),
+            CommGroup::Dp => (strides.dp, par.dp),
+            // [TP, SP, DP, PP] layout makes DPxSP contiguous at SP's stride.
+            CommGroup::DpSp => (strides.sp, par.sp * par.dp),
+        };
+        if size <= 1 {
+            return 0.0;
+        }
+        let span = group_dim_costs(&cluster.topology, stride, size);
+        if span.is_empty() {
+            return 0.0;
+        }
+        let dims: Vec<_> = span.iter().map(|(c, _)| *c).collect();
+        let algos: Vec<_> = span.iter().map(|(_, d)| cluster.collectives.algorithms[*d]).collect();
+        multidim_collective_time_us(
+            kind,
+            cluster.collectives.multidim,
+            &algos,
+            &dims,
+            bytes,
+            cluster.collectives.chunks,
+        )
+    }
+
+    /// Point-to-point transfer between adjacent pipeline stages.
+    fn p2p_cost_us(&self, cluster: &ClusterConfig, par: &Parallelization, bytes: f64) -> f64 {
+        if par.pp <= 1 {
+            return 0.0;
+        }
+        let span = group_dim_costs(&cluster.topology, par.strides().pp, par.pp);
+        match span.first() {
+            Some((dim, _)) => dim.xfer_us(bytes),
+            None => 0.0,
+        }
+    }
+
+    /// Simulate one design point. Returns `Err(Invalid)` for rejected
+    /// configurations (the DSE maps those to zero reward).
+    pub fn run(
+        &self,
+        cluster: &ClusterConfig,
+        model: &ModelConfig,
+        par: &Parallelization,
+        batch: u64,
+        mode: ExecutionMode,
+    ) -> Result<SimReport, Invalid> {
+        cluster.validate().map_err(Invalid::Config)?;
+        par.validate(cluster.npus()).map_err(Invalid::Config)?;
+
+        // §5.4 memory constraint.
+        let mem = footprint(model, par, batch, mode);
+        if !mem.fits(self.mem_budget_bytes) {
+            return Err(Invalid::Memory {
+                required_gb: mem.total() / 1e9,
+                budget_gb: self.mem_budget_bytes / 1e9,
+            });
+        }
+
+        let trace = generate_trace(model, par, batch, mode).map_err(Invalid::Config)?;
+        let stage = &trace.stages[0];
+
+        // Per-run memo for collective costs: traces repeat the same
+        // (kind, group, bytes) collective once per layer, so a tiny
+        // linear-scan cache removes ~4x redundant alpha-beta walks
+        // (EXPERIMENTS.md §Perf iteration 1).
+        let mut memo: Vec<(CollectiveKind, CommGroup, f64, f64)> = Vec::with_capacity(8);
+        let mut coll_cost = |kind: CollectiveKind, group: CommGroup, bytes: f64| -> f64 {
+            for (k, g, b, cost) in memo.iter() {
+                if *k == kind && *g == group && *b == bytes {
+                    return *cost;
+                }
+            }
+            let cost = self.collective_cost_us(cluster, par, kind, group, bytes);
+            memo.push((kind, group, bytes, cost));
+            cost
+        };
+
+        // --- per-microbatch stage timelines ---
+        let mut f_compute = 0.0; // forward compute
+        let mut f_blocking = 0.0; // forward blocking comm
+        let mut p2p_bytes = 0.0;
+        let mut flops_per_micro = 0.0;
+        for op in &stage.forward {
+            match op {
+                TraceOp::Compute { flops, bytes, .. } => {
+                    f_compute += cluster.compute.op_time_us(*flops, *bytes);
+                    flops_per_micro += *flops;
+                }
+                TraceOp::Collective { kind, group, bytes, overlappable: false, .. } => {
+                    f_blocking += coll_cost(*kind, *group, *bytes);
+                }
+                TraceOp::Collective { .. } => {}
+                TraceOp::P2p { bytes } => p2p_bytes = *bytes,
+            }
+        }
+        let mut b_compute = 0.0;
+        let mut b_blocking = 0.0;
+        let mut grad_bytes: Vec<(u64, CollectiveKind, CommGroup, f64)> = Vec::new();
+        for op in &stage.backward {
+            match op {
+                TraceOp::Compute { flops, bytes, .. } => {
+                    b_compute += cluster.compute.op_time_us(*flops, *bytes);
+                    flops_per_micro += *flops;
+                }
+                TraceOp::Collective { kind, group, bytes, overlappable, layer } => {
+                    if *overlappable {
+                        grad_bytes.push((*layer, *kind, *group, *bytes));
+                    } else {
+                        b_blocking += coll_cost(*kind, *group, *bytes);
+                    }
+                }
+                TraceOp::P2p { .. } => {}
+            }
+        }
+
+        let f_micro = f_compute + f_blocking;
+        let b_micro = b_compute + b_blocking;
+        let p2p = self.p2p_cost_us(cluster, par, p2p_bytes);
+
+        // --- pipeline makespan (1F1B-style: fill + steady state) ---
+        let m = trace.microbatches as f64;
+        let pp = par.pp as f64;
+        let pipeline_us = match mode {
+            ExecutionMode::Training => {
+                (m + pp - 1.0) * (f_micro + b_micro) + 2.0 * (pp - 1.0) * p2p
+            }
+            _ => (m + pp - 1.0) * f_micro + (pp - 1.0) * p2p,
+        };
+
+        // --- overlappable gradient sync (once per iteration) ---
+        // The backward pass of the *last* microbatch retires layers in
+        // reverse order; each retirement issues that layer's gradient
+        // collective(s). They drain on a serial network resource under
+        // the LIFO/FIFO chunk scheduler; the next iteration's forward
+        // needs layer l's gradients after a slack of l/L * f_micro.
+        let layers = stage.layers.max(1);
+        let mut exposed_us = 0.0;
+        if !grad_bytes.is_empty() && matches!(mode, ExecutionMode::Training) {
+            let bwd_start = pipeline_us - b_micro;
+            let jobs: Vec<GradJob> = grad_bytes
+                .iter()
+                .map(|(layer, kind, group, bytes)| {
+                    let frac = (layers - layer) as f64 / layers as f64;
+                    GradJob {
+                        layer: *layer,
+                        issue_us: bwd_start + frac * b_compute,
+                        duration_us: coll_cost(*kind, *group, *bytes),
+                    }
+                })
+                .collect();
+            let completions =
+                drain_gradient_network(&jobs, cluster.collectives.scheduling.into(), cluster);
+            // Exposed tail: completion minus (iteration end + fwd slack).
+            for (layer, done_us) in completions {
+                let slack = layer as f64 / layers as f64 * f_micro;
+                let exposure = done_us - pipeline_us - slack;
+                if exposure > exposed_us {
+                    exposed_us = exposure;
+                }
+            }
+        }
+
+        let scale = trace.layer_scale;
+        let latency_us = (pipeline_us + exposed_us) * scale;
+        let compute_us = (f_compute + b_compute) * m * scale;
+        let comm_blocking_us = ((f_blocking + b_blocking) * m + 2.0 * (pp - 1.0) * p2p) * scale;
+        let total_flops = flops_per_micro * m * scale * cluster.npus() as f64;
+        let achieved_tflops =
+            if latency_us > 0.0 { total_flops / (latency_us * 1e6) } else { 0.0 };
+
+        Ok(SimReport {
+            latency_us,
+            compute_us,
+            comm_blocking_us,
+            comm_exposed_us: exposed_us * scale,
+            memory: mem,
+            microbatches: trace.microbatches,
+            achieved_tflops,
+        })
+    }
+}
+
+/// LIFO vs FIFO at the gradient network (narrowed from the collective
+/// scheduler's policy enum to keep this module self-contained).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DrainPolicy {
+    Lifo,
+    Fifo,
+}
+
+impl From<crate::collective::SchedulingPolicy> for DrainPolicy {
+    fn from(p: crate::collective::SchedulingPolicy) -> Self {
+        match p {
+            crate::collective::SchedulingPolicy::Lifo => DrainPolicy::Lifo,
+            crate::collective::SchedulingPolicy::Fifo => DrainPolicy::Fifo,
+        }
+    }
+}
+
+/// Drain of gradient collectives on a serial network resource. Jobs
+/// arrive at their issue times; whenever the link frees, the scheduler
+/// picks the next pending job per the policy. Returns per-layer
+/// completion times (a layer may have several collectives — ZeRO's
+/// RS+AG — completion is the max).
+///
+/// Implemented as a sorted sweep over arrival times rather than a
+/// general event heap: with one serial resource the next event is
+/// always either the next arrival or the current job's completion
+/// (EXPERIMENTS.md §Perf iteration 2 — removes the per-run heap).
+fn drain_gradient_network(
+    jobs: &[GradJob],
+    policy: DrainPolicy,
+    _cluster: &ClusterConfig,
+) -> Vec<(u64, f64)> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| jobs[a].issue_us.partial_cmp(&jobs[b].issue_us).unwrap());
+    let mut pending: Vec<usize> = Vec::with_capacity(jobs.len());
+    let mut done: Vec<(u64, f64)> = Vec::with_capacity(jobs.len());
+    let mut next_arrival = 0usize;
+    let mut now;
+    let mut busy_until = f64::NEG_INFINITY;
+    let mut current: Option<usize> = None;
+    loop {
+        // Advance to the next event: arrival or link-free.
+        let arrival_t = order.get(next_arrival).map(|&i| jobs[i].issue_us.max(0.0));
+        let free_t = current.map(|_| busy_until);
+        now = match (arrival_t, free_t) {
+            (Some(a), Some(f)) if a < f => {
+                pending.push(order[next_arrival]);
+                next_arrival += 1;
+                a
+            }
+            (_, Some(f)) => {
+                if let Some(i) = current.take() {
+                    done.push((jobs[i].layer, f));
+                }
+                f
+            }
+            (Some(a), None) => {
+                pending.push(order[next_arrival]);
+                next_arrival += 1;
+                a
+            }
+            (None, None) => break,
+        };
+        if current.is_none() && !pending.is_empty() {
+            let idx = match policy {
+                DrainPolicy::Fifo => 0,
+                DrainPolicy::Lifo => pending.len() - 1,
+            };
+            let i = pending.remove(idx);
+            current = Some(i);
+            busy_until = now + jobs[i].duration_us.max(0.0);
+        }
+    }
+    // Collapse to per-layer max completion (layer count is tiny; linear
+    // scan beats a HashMap here).
+    let mut out: Vec<(u64, f64)> = Vec::with_capacity(done.len());
+    for (layer, t) in done {
+        match out.iter_mut().find(|(l, _)| *l == layer) {
+            Some((_, e)) => {
+                if t > *e {
+                    *e = t;
+                }
+            }
+            None => out.push((layer, t)),
+        }
+    }
+    out.sort_by_key(|(l, _)| *l);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{CollAlgo, MultiDimPolicy, SchedulingPolicy};
+    use crate::topology::DimKind;
+    use crate::workload::models::presets as wl;
+
+    fn small_cluster(policy: SchedulingPolicy) -> ClusterConfig {
+        ClusterConfig {
+            topology: Topology::from_arrays(
+                &[DimKind::Ring, DimKind::Switch],
+                &[4, 16],
+                &[200.0, 100.0],
+                &[0.5, 1.0],
+            ),
+            collectives: CollectiveConfig::new(
+                policy,
+                vec![CollAlgo::Ring, CollAlgo::Rhd],
+                4,
+                MultiDimPolicy::Baseline,
+            ),
+            compute: ComputeDevice::new(100.0, 1000.0, 32.0),
+        }
+    }
+
+    fn par(npus: u64, dp: u64, sp: u64, pp: u64, ws: bool) -> Parallelization {
+        Parallelization::derive(npus, dp, sp, pp, ws).unwrap()
+    }
+
+    #[test]
+    fn valid_run_produces_positive_latency() {
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let r = Simulator::new()
+            .run(&c, &m, &par(64, 8, 1, 1, true), 64, ExecutionMode::Training)
+            .unwrap();
+        assert!(r.latency_us > 0.0);
+        assert!(r.compute_us > 0.0);
+        assert!(r.achieved_tflops > 0.0);
+        assert!(r.comm_fraction() >= 0.0 && r.comm_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn memory_violation_is_invalid() {
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let m = wl::gpt3_175b(); // full 96 layers, unsharded pure DP
+        let err = Simulator::new()
+            .run(&c, &m, &par(64, 64, 1, 1, false), 64, ExecutionMode::Training)
+            .unwrap_err();
+        assert!(matches!(err, Invalid::Memory { .. }));
+    }
+
+    #[test]
+    fn mismatched_parallelization_is_config_error() {
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let m = wl::vit_base();
+        let bad = Parallelization::derive(32, 32, 1, 1, false).unwrap();
+        let err = Simulator::new().run(&c, &m, &bad, 256, ExecutionMode::Training).unwrap_err();
+        assert!(matches!(err, Invalid::Config(_)));
+    }
+
+    #[test]
+    fn lifo_no_worse_than_fifo_on_gradient_tail() {
+        // LIFO finishes the last-issued (earliest-layer) gradients first,
+        // which is exactly what the next iteration needs first.
+        let m = wl::gpt3_13b().with_simulated_layers(8);
+        let p = par(64, 64, 1, 1, true);
+        let fifo = Simulator::new()
+            .run(&small_cluster(SchedulingPolicy::Fifo), &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        let lifo = Simulator::new()
+            .run(&small_cluster(SchedulingPolicy::Lifo), &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        assert!(
+            lifo.comm_exposed_us <= fifo.comm_exposed_us + 1e-9,
+            "lifo={} fifo={}",
+            lifo.comm_exposed_us,
+            fifo.comm_exposed_us
+        );
+    }
+
+    #[test]
+    fn more_bandwidth_is_not_slower() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let slow = small_cluster(SchedulingPolicy::Fifo);
+        let mut fast = slow.clone();
+        for d in &mut fast.topology.dims {
+            d.bandwidth_gbps *= 10.0;
+        }
+        let rs = Simulator::new().run(&slow, &m, &p, 64, ExecutionMode::Training).unwrap();
+        let rf = Simulator::new().run(&fast, &m, &p, 64, ExecutionMode::Training).unwrap();
+        assert!(rf.latency_us <= rs.latency_us + 1e-9);
+    }
+
+    #[test]
+    fn inference_faster_than_training() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 4, 1, 1, true);
+        let sim = Simulator::new();
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let train = sim.run(&c, &m, &p, 64, ExecutionMode::Training).unwrap();
+        let infer = sim.run(&c, &m, &p, 64, ExecutionMode::InferencePrefill).unwrap();
+        assert!(infer.latency_us < train.latency_us);
+    }
+
+    #[test]
+    fn latency_scales_with_batch() {
+        let m = wl::vit_large().with_simulated_layers(4);
+        let p = par(64, 16, 1, 1, true);
+        let sim = Simulator::new();
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let small = sim.run(&c, &m, &p, 1024, ExecutionMode::Training).unwrap();
+        let big = sim.run(&c, &m, &p, 4096, ExecutionMode::Training).unwrap();
+        assert!(big.latency_us > small.latency_us);
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 2, 1, true);
+        let c = small_cluster(SchedulingPolicy::Lifo);
+        let sim = Simulator::new();
+        let a = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        let b = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pipeline_reduces_memory_but_adds_fill() {
+        let m = wl::gpt3_175b().with_simulated_layers(8);
+        let sim = Simulator::new();
+        let c = ClusterConfig {
+            topology: Topology::from_arrays(
+                &[DimKind::Ring, DimKind::Switch, DimKind::Switch],
+                &[4, 16, 16],
+                &[200.0, 100.0, 50.0],
+                &[0.5, 1.0, 1.0],
+            ),
+            collectives: CollectiveConfig::new(
+                SchedulingPolicy::Fifo,
+                vec![CollAlgo::Ring, CollAlgo::Rhd, CollAlgo::Rhd],
+                4,
+                MultiDimPolicy::Baseline,
+            ),
+            compute: ComputeDevice::new(459.0, 2765.0, 32.0),
+        };
+        let no_pp = sim
+            .run(&c, &m, &par(1024, 16, 1, 1, true), 2048, ExecutionMode::Training)
+            .unwrap();
+        let with_pp = sim
+            .run(&c, &m, &par(1024, 16, 1, 4, true), 2048, ExecutionMode::Training)
+            .unwrap();
+        assert!(with_pp.memory.total() < no_pp.memory.total());
+        assert!(with_pp.microbatches > no_pp.microbatches);
+    }
+
+    #[test]
+    fn drain_network_fifo_orders_by_issue() {
+        let jobs = vec![
+            GradJob { layer: 3, issue_us: 0.0, duration_us: 10.0 },
+            GradJob { layer: 2, issue_us: 1.0, duration_us: 10.0 },
+            GradJob { layer: 1, issue_us: 2.0, duration_us: 10.0 },
+        ];
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let fifo = drain_gradient_network(&jobs, DrainPolicy::Fifo, &c);
+        // FIFO: layer 3 done at 10, layer 2 at 20, layer 1 at 30.
+        assert_eq!(fifo, vec![(1, 30.0), (2, 20.0), (3, 10.0)]);
+        let lifo = drain_gradient_network(&jobs, DrainPolicy::Lifo, &c);
+        // LIFO: 3 starts immediately (link idle), then newest-first: 1, 2.
+        assert_eq!(lifo, vec![(1, 20.0), (2, 30.0), (3, 10.0)]);
+    }
+}

@@ -1,0 +1,128 @@
+//! Table 3 baseline systems.
+//!
+//! Three target clusters differing in NPU count and real-world analog:
+//! - **System 1** — 512 Google TPUv5p devices.
+//! - **System 2** — the 4D 1,024-NPU cluster of Themis [43].
+//! - **System 3** — a 2,048-NPU NVIDIA H100 proxy.
+//!
+//! Table 3 gives per-dim topology kind, NPU count and bandwidth, plus the
+//! compute knob (peak TFLOPS, local memory bandwidth). Per-dim link
+//! latencies are not listed in the paper; we use 0.25/0.5/1.0/2.0 us
+//! (growing outward — intra-board to scale-out), consistent with the
+//! NVLink/IB-class fabrics the systems proxy.
+
+use super::ClusterConfig;
+use crate::collective::{CollAlgo, CollectiveConfig, MultiDimPolicy, SchedulingPolicy};
+use crate::compute::presets as compute;
+use crate::topology::{DimKind, Topology};
+
+/// Default per-dimension latencies (us), innermost first.
+pub const DIM_LATENCY_US: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
+
+/// System 1: 512 TPUv5p-like NPUs, `[RI, RI, RI, SW]`.
+pub fn system1() -> ClusterConfig {
+    ClusterConfig {
+        topology: Topology::from_arrays(
+            &[DimKind::Ring, DimKind::Ring, DimKind::Ring, DimKind::Switch],
+            &[4, 4, 4, 8],
+            &[200.0, 200.0, 200.0, 50.0],
+            &DIM_LATENCY_US,
+        ),
+        collectives: CollectiveConfig::new(
+            SchedulingPolicy::Fifo,
+            vec![CollAlgo::Ring, CollAlgo::Ring, CollAlgo::Ring, CollAlgo::Rhd],
+            2,
+            MultiDimPolicy::Baseline,
+        ),
+        compute: compute::system1(),
+    }
+}
+
+/// System 2: 1,024 NPUs, `[RI, FC, RI, SW]` (Themis-like 4D cluster).
+pub fn system2() -> ClusterConfig {
+    ClusterConfig {
+        topology: Topology::from_arrays(
+            &[DimKind::Ring, DimKind::FullyConnected, DimKind::Ring, DimKind::Switch],
+            &[4, 8, 4, 8],
+            &[375.0, 175.0, 150.0, 100.0],
+            &DIM_LATENCY_US,
+        ),
+        collectives: CollectiveConfig::new(
+            SchedulingPolicy::Fifo,
+            vec![CollAlgo::Ring, CollAlgo::Direct, CollAlgo::Ring, CollAlgo::Rhd],
+            2,
+            MultiDimPolicy::Baseline,
+        ),
+        compute: compute::system2(),
+    }
+}
+
+/// System 3: 2,048 H100-like NPUs, `[FC, SW, RI, RI]`.
+pub fn system3() -> ClusterConfig {
+    ClusterConfig {
+        topology: Topology::from_arrays(
+            &[DimKind::FullyConnected, DimKind::Switch, DimKind::Ring, DimKind::Ring],
+            &[8, 16, 4, 4],
+            &[900.0, 100.0, 50.0, 12.5],
+            &DIM_LATENCY_US,
+        ),
+        collectives: CollectiveConfig::new(
+            SchedulingPolicy::Fifo,
+            vec![CollAlgo::Direct, CollAlgo::Rhd, CollAlgo::Ring, CollAlgo::Ring],
+            2,
+            MultiDimPolicy::Baseline,
+        ),
+        compute: compute::system3(),
+    }
+}
+
+/// Look a system up by 1-based index as the paper numbers them.
+pub fn by_index(i: usize) -> Option<ClusterConfig> {
+    match i {
+        1 => Some(system1()),
+        2 => Some(system2()),
+        3 => Some(system3()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npu_counts_match_paper() {
+        assert_eq!(system1().npus(), 512);
+        assert_eq!(system2().npus(), 1024);
+        assert_eq!(system3().npus(), 2048);
+    }
+
+    #[test]
+    fn all_presets_validate() {
+        for i in 1..=3 {
+            by_index(i).unwrap().validate().unwrap();
+        }
+        assert!(by_index(0).is_none());
+        assert!(by_index(4).is_none());
+    }
+
+    #[test]
+    fn table3_topologies() {
+        assert_eq!(system1().topology.notation(), "[RI, RI, RI, SW]");
+        assert_eq!(system2().topology.notation(), "[RI, FC, RI, SW]");
+        assert_eq!(system3().topology.notation(), "[FC, SW, RI, RI]");
+    }
+
+    #[test]
+    fn table3_collective_algorithms() {
+        assert_eq!(system1().collectives.algo_notation(), "[RI, RI, RI, RHD]");
+        assert_eq!(system2().collectives.algo_notation(), "[RI, DI, RI, RHD]");
+        assert_eq!(system3().collectives.algo_notation(), "[DI, RHD, RI, RI]");
+    }
+
+    #[test]
+    fn table3_bandwidths() {
+        let bw: Vec<f64> = system3().topology.dims.iter().map(|d| d.bandwidth_gbps).collect();
+        assert_eq!(bw, vec![900.0, 100.0, 50.0, 12.5]);
+    }
+}

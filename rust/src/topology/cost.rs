@@ -1,0 +1,93 @@
+//! Alpha-beta link cost primitives shared by the collective cost model and
+//! the discrete-event simulator.
+//!
+//! Every message transfer over one dimension is modelled as
+//! `t = alpha + size / beta` where `alpha` is the per-hop latency of the
+//! dimension and `beta` its per-link bandwidth. Switch dimensions add one
+//! switch traversal (2 hops of latency); FullyConnected is a single direct
+//! hop; Ring hops are counted by the collective algorithm itself.
+
+use super::NetworkDim;
+
+/// Time (microseconds) to push `bytes` over one link of `dim`.
+///
+/// Bandwidth is GB/s = bytes/microsecond × 1e3, so
+/// `us = bytes / (bw_gbps * 1e3)`.
+pub fn link_time_us(dim: &NetworkDim, bytes: f64) -> f64 {
+    dim.latency_us + bytes / (dim.bandwidth_gbps * 1e3)
+}
+
+/// Per-dimension alpha/beta pair resolved from a [`NetworkDim`], with the
+/// topology-kind hop adjustments baked in. This is what the collective
+/// algorithms consume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DimCost {
+    /// Effective per-message latency (us) including switch traversal.
+    pub alpha_us: f64,
+    /// Link bandwidth in bytes per microsecond.
+    pub beta_bytes_per_us: f64,
+    /// NPUs along the dimension.
+    pub npus: u64,
+}
+
+impl DimCost {
+    pub fn from_dim(dim: &NetworkDim) -> Self {
+        let hop_mult = match dim.kind {
+            // Through a switch: NPU -> switch -> NPU = 2 latency hops.
+            super::DimKind::Switch => 2.0,
+            _ => 1.0,
+        };
+        Self {
+            alpha_us: dim.latency_us * hop_mult,
+            beta_bytes_per_us: dim.bandwidth_gbps * 1e3,
+            npus: dim.npus,
+        }
+    }
+
+    /// Serial transfer of `bytes` point-to-point along this dimension.
+    pub fn xfer_us(&self, bytes: f64) -> f64 {
+        self.alpha_us + bytes / self.beta_bytes_per_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{DimKind, NetworkDim};
+
+    #[test]
+    fn link_time_has_alpha_and_beta_terms() {
+        let d = NetworkDim::new(DimKind::Ring, 4, 100.0, 1.0);
+        // 100 GB/s = 1e5 bytes/us; 1e5 bytes -> 1us transfer + 1us latency.
+        let t = link_time_us(&d, 1e5);
+        assert!((t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_costs_alpha_only() {
+        let d = NetworkDim::new(DimKind::Ring, 4, 100.0, 0.7);
+        assert!((link_time_us(&d, 0.0) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_doubles_alpha() {
+        let ring = NetworkDim::new(DimKind::Ring, 8, 100.0, 1.0);
+        let sw = NetworkDim::new(DimKind::Switch, 8, 100.0, 1.0);
+        assert!((DimCost::from_dim(&ring).alpha_us - 1.0).abs() < 1e-12);
+        assert!((DimCost::from_dim(&sw).alpha_us - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dimcost_xfer_matches_link_time_for_nonswitch() {
+        let d = NetworkDim::new(DimKind::FullyConnected, 8, 250.0, 0.3);
+        let c = DimCost::from_dim(&d);
+        assert!((c.xfer_us(5e4) - link_time_us(&d, 5e4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_monotonicity() {
+        let slow = DimCost::from_dim(&NetworkDim::new(DimKind::Ring, 4, 50.0, 1.0));
+        let fast = DimCost::from_dim(&NetworkDim::new(DimKind::Ring, 4, 500.0, 1.0));
+        assert!(fast.xfer_us(1e6) < slow.xfer_us(1e6));
+    }
+}

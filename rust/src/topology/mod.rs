@@ -1,0 +1,333 @@
+//! Multi-dimensional network topology substrate (paper §2.3, Figure 3).
+//!
+//! COSMIC abstracts physical cluster fabrics with the multi-dimensional
+//! network representation of ASTRA-sim 2.0: a stack of *dimensions*, each
+//! one of three building blocks — **Ring (RI)**, **Switch (SW)**, or
+//! **FullyConnected (FC)** — with per-dimension link bandwidth and latency.
+//! A 3D torus is `[RI, RI, RI]`; a DGX-like pod is `[SW]` or `[FC, SW]`;
+//! the paper's System 2 is `[RI, FC, RI, SW]`.
+//!
+//! NPUs are addressed hierarchically: NPU `i`'s coordinate along dimension
+//! `d` is `(i / stride(d)) % npus(d)` where `stride(d)` is the product of
+//! the sizes of all lower dimensions. Collectives along a dimension involve
+//! the `npus(d)` peers that share all other coordinates.
+
+mod cost;
+
+pub use cost::{link_time_us, DimCost};
+
+use std::fmt;
+
+/// Network dimension building block (Figure 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DimKind {
+    /// Ring: each NPU has two neighbours; bisection = 2 links.
+    Ring,
+    /// Switch: all NPUs connect to a central crossbar; full bisection
+    /// through the switch, one switch hop of latency.
+    Switch,
+    /// FullyConnected: a dedicated link between every NPU pair.
+    FullyConnected,
+}
+
+impl DimKind {
+    /// Short name used in paper tables ("RI", "SW", "FC").
+    pub fn short(&self) -> &'static str {
+        match self {
+            DimKind::Ring => "RI",
+            DimKind::Switch => "SW",
+            DimKind::FullyConnected => "FC",
+        }
+    }
+
+    /// Parse the paper's short notation.
+    pub fn from_short(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "RI" | "RING" => Some(DimKind::Ring),
+            "SW" | "SWITCH" => Some(DimKind::Switch),
+            "FC" | "FULLYCONNECTED" => Some(DimKind::FullyConnected),
+            _ => None,
+        }
+    }
+
+    /// All building blocks, in the paper's canonical order.
+    pub const ALL: [DimKind; 3] = [DimKind::Ring, DimKind::Switch, DimKind::FullyConnected];
+
+    /// Number of unidirectional links per NPU this block requires along
+    /// one dimension of `n` NPUs. Used by the LIBRA-style dollar-cost
+    /// model (`dse::cost`).
+    pub fn links_per_npu(&self, n: u64) -> u64 {
+        match self {
+            DimKind::Ring => {
+                if n <= 1 {
+                    0
+                } else if n == 2 {
+                    1
+                } else {
+                    2
+                }
+            }
+            DimKind::Switch => 1,
+            DimKind::FullyConnected => n.saturating_sub(1),
+        }
+    }
+}
+
+impl fmt::Display for DimKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+/// One dimension of a multi-dimensional network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkDim {
+    pub kind: DimKind,
+    /// NPUs along this dimension (paper's "NPUs per Dim", {4, 8, 16}).
+    pub npus: u64,
+    /// Per-link bandwidth in GB/s (paper's "Bandwidth per Dim").
+    pub bandwidth_gbps: f64,
+    /// Per-hop link latency in microseconds.
+    pub latency_us: f64,
+}
+
+impl NetworkDim {
+    pub fn new(kind: DimKind, npus: u64, bandwidth_gbps: f64, latency_us: f64) -> Self {
+        Self { kind, npus, bandwidth_gbps, latency_us }
+    }
+}
+
+/// A full multi-dimensional topology: a stack of dimensions, innermost
+/// (dimension 0, fastest/closest) first — matching the paper's
+/// `[RI, RI, RI, SW]` notation where the leftmost entry is dim 0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub dims: Vec<NetworkDim>,
+}
+
+impl Topology {
+    pub fn new(dims: Vec<NetworkDim>) -> Self {
+        Self { dims }
+    }
+
+    /// Build from parallel arrays as the paper's tables give them.
+    pub fn from_arrays(kinds: &[DimKind], npus: &[u64], bw_gbps: &[f64], latency_us: &[f64]) -> Self {
+        assert_eq!(kinds.len(), npus.len());
+        assert_eq!(kinds.len(), bw_gbps.len());
+        assert_eq!(kinds.len(), latency_us.len());
+        Self {
+            dims: kinds
+                .iter()
+                .zip(npus)
+                .zip(bw_gbps)
+                .zip(latency_us)
+                .map(|(((k, n), b), l)| NetworkDim::new(*k, *n, *b, *l))
+                .collect(),
+        }
+    }
+
+    /// Total NPUs = product of per-dimension sizes.
+    pub fn total_npus(&self) -> u64 {
+        self.dims.iter().map(|d| d.npus).product()
+    }
+
+    pub fn num_dims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Stride of dimension `d`: product of sizes of dimensions `< d`.
+    pub fn stride(&self, d: usize) -> u64 {
+        self.dims[..d].iter().map(|x| x.npus).product()
+    }
+
+    /// Coordinate of `npu` along dimension `d`.
+    pub fn coord(&self, npu: u64, d: usize) -> u64 {
+        (npu / self.stride(d)) % self.dims[d].npus
+    }
+
+    /// Full coordinate vector of `npu`.
+    pub fn coords(&self, npu: u64) -> Vec<u64> {
+        (0..self.dims.len()).map(|d| self.coord(npu, d)).collect()
+    }
+
+    /// NPU id from a coordinate vector (inverse of [`coords`]).
+    pub fn npu_of(&self, coords: &[u64]) -> u64 {
+        assert_eq!(coords.len(), self.dims.len());
+        coords
+            .iter()
+            .enumerate()
+            .map(|(d, c)| {
+                assert!(*c < self.dims[d].npus, "coord out of range");
+                c * self.stride(d)
+            })
+            .sum()
+    }
+
+    /// The peer group of `npu` along dimension `d`: all NPUs sharing every
+    /// other coordinate. Sorted ascending; contains `npu` itself.
+    pub fn dim_group(&self, npu: u64, d: usize) -> Vec<u64> {
+        let stride = self.stride(d);
+        let base = npu - self.coord(npu, d) * stride;
+        (0..self.dims[d].npus).map(|c| base + c * stride).collect()
+    }
+
+    /// Aggregate injection bandwidth per NPU (GB/s): Σ over dims of
+    /// links_per_npu × link bw. Used for the BW/NPU reward denominator.
+    pub fn bw_per_npu(&self) -> f64 {
+        self.dims
+            .iter()
+            .map(|d| d.kind.links_per_npu(d.npus) as f64 * d.bandwidth_gbps)
+            .sum()
+    }
+
+    /// Sum of per-dimension link bandwidths — the paper's
+    /// `Σ (BW per Dim)` reward term (Table 4 allocates one bw value per
+    /// dim, so the sum is over dims, not links).
+    pub fn sum_bw_per_dim(&self) -> f64 {
+        self.dims.iter().map(|d| d.bandwidth_gbps).sum()
+    }
+
+    /// Paper-style notation, e.g. `[RI, FC, RI, SW]`.
+    pub fn notation(&self) -> String {
+        let inner: Vec<&str> = self.dims.iter().map(|d| d.kind.short()).collect();
+        format!("[{}]", inner.join(", "))
+    }
+
+    /// Sanity-check structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dims.is_empty() {
+            return Err("topology must have at least one dimension".into());
+        }
+        for (i, d) in self.dims.iter().enumerate() {
+            if d.npus < 2 {
+                return Err(format!("dim {i}: npus must be >= 2, got {}", d.npus));
+            }
+            if d.bandwidth_gbps <= 0.0 {
+                return Err(format!("dim {i}: bandwidth must be > 0"));
+            }
+            if d.latency_us < 0.0 {
+                return Err(format!("dim {i}: latency must be >= 0"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} ({} NPUs; bw {:?} GB/s)",
+            self.notation(),
+            self.total_npus(),
+            self.dims.iter().map(|d| d.bandwidth_gbps).collect::<Vec<_>>()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn torus3d() -> Topology {
+        Topology::from_arrays(
+            &[DimKind::Ring, DimKind::Ring, DimKind::Ring],
+            &[4, 4, 4],
+            &[200.0, 100.0, 50.0],
+            &[0.5, 1.0, 2.0],
+        )
+    }
+
+    #[test]
+    fn total_npus_is_product() {
+        assert_eq!(torus3d().total_npus(), 64);
+    }
+
+    #[test]
+    fn strides_are_cumulative_products() {
+        let t = torus3d();
+        assert_eq!(t.stride(0), 1);
+        assert_eq!(t.stride(1), 4);
+        assert_eq!(t.stride(2), 16);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let t = torus3d();
+        for npu in 0..t.total_npus() {
+            let c = t.coords(npu);
+            assert_eq!(t.npu_of(&c), npu);
+        }
+    }
+
+    #[test]
+    fn dim_group_contains_self_and_is_sorted() {
+        let t = torus3d();
+        for npu in [0u64, 17, 63] {
+            for d in 0..3 {
+                let g = t.dim_group(npu, d);
+                assert_eq!(g.len(), 4);
+                assert!(g.contains(&npu));
+                assert!(g.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn dim_group_members_share_other_coords() {
+        let t = torus3d();
+        let g = t.dim_group(37, 1);
+        for m in g {
+            assert_eq!(t.coord(m, 0), t.coord(37, 0));
+            assert_eq!(t.coord(m, 2), t.coord(37, 2));
+        }
+    }
+
+    #[test]
+    fn links_per_npu_by_kind() {
+        assert_eq!(DimKind::Ring.links_per_npu(4), 2);
+        assert_eq!(DimKind::Ring.links_per_npu(2), 1);
+        assert_eq!(DimKind::Switch.links_per_npu(16), 1);
+        assert_eq!(DimKind::FullyConnected.links_per_npu(8), 7);
+    }
+
+    #[test]
+    fn notation_matches_paper_style() {
+        let t = Topology::from_arrays(
+            &[DimKind::Ring, DimKind::FullyConnected, DimKind::Ring, DimKind::Switch],
+            &[4, 8, 4, 8],
+            &[375.0, 175.0, 150.0, 100.0],
+            &[0.5; 4],
+        );
+        assert_eq!(t.notation(), "[RI, FC, RI, SW]");
+        assert_eq!(t.total_npus(), 1024);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate() {
+        let mut t = torus3d();
+        t.dims[0].npus = 1;
+        assert!(t.validate().is_err());
+        let mut t = torus3d();
+        t.dims[1].bandwidth_gbps = 0.0;
+        assert!(t.validate().is_err());
+        assert!(torus3d().validate().is_ok());
+        assert!(Topology::new(vec![]).validate().is_err());
+    }
+
+    #[test]
+    fn short_roundtrip() {
+        for k in DimKind::ALL {
+            assert_eq!(DimKind::from_short(k.short()), Some(k));
+        }
+        assert_eq!(DimKind::from_short("bogus"), None);
+    }
+
+    #[test]
+    fn bw_per_npu_sums_links() {
+        let t = torus3d();
+        // Ring of 4 => 2 links/NPU each dim.
+        assert!((t.bw_per_npu() - (2.0 * 200.0 + 2.0 * 100.0 + 2.0 * 50.0)).abs() < 1e-9);
+        assert!((t.sum_bw_per_dim() - 350.0).abs() < 1e-9);
+    }
+}

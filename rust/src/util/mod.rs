@@ -1,0 +1,10 @@
+//! Small self-contained utilities standing in for crates that are not
+//! available in this offline build (see DESIGN.md §Substitutions):
+//! [`rng`] replaces `rand`/`rand_chacha`, [`prop`] replaces `proptest`,
+//! [`stats`] provides the summary statistics the bench harness prints.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,105 @@
+//! Lightweight property-testing harness (offline stand-in for `proptest`).
+//!
+//! [`check`] runs a property over `cases` random inputs drawn by the
+//! caller's generator; on failure it retries with a simple linear "shrink"
+//! (re-running the generator with smaller size hints is up to the caller —
+//! here we report the failing seed so the case is exactly reproducible).
+//!
+//! ```no_run
+//! use cosmic::util::prop::check;
+//! use cosmic::util::Rng;
+//!
+//! check("addition commutes", 100, |rng: &mut Rng| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     if a + b != b + a {
+//!         return Err(format!("{a} + {b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `property` on `cases` seeded inputs; panic (with the failing seed)
+/// on the first counterexample. Deterministic: seeds are `0..cases` mixed
+/// with a fixed stream constant, so failures reproduce exactly.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = case.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xC0531C1C;
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but collects all failures (useful when surveying a
+/// known-flaky invariant); returns failure descriptions.
+pub fn survey<F>(cases: u64, mut property: F) -> Vec<(u64, String)>
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut failures = Vec::new();
+    for case in 0..cases {
+        let seed = case.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xC0531C1C;
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(msg) = property(&mut rng) {
+            failures.push((case, msg));
+        }
+    }
+    failures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn survey_collects_failures() {
+        let fails = survey(10, |rng| {
+            if rng.gen_f64() < 2.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(fails.len(), 10);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("record", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("record", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,103 @@
+//! Summary statistics used by the bench harness and the DSE history
+//! reports (min/max/mean/percentiles/geomean over latency and reward
+//! series).
+
+/// Descriptive statistics over a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// Compute a [`Summary`]; returns `None` for an empty or all-NaN sample.
+pub fn summarize(xs: &[f64]) -> Option<Summary> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    Some(Summary {
+        n,
+        min: v[0],
+        max: v[n - 1],
+        mean,
+        p50: percentile_sorted(&v, 50.0),
+        p90: percentile_sorted(&v, 90.0),
+        p99: percentile_sorted(&v, 99.0),
+    })
+}
+
+/// Percentile by linear interpolation on a pre-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Geometric mean of strictly positive values (NaN/non-positive skipped).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite() && *x > 0.0).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn empty_and_nan_samples_are_none() {
+        assert!(summarize(&[]).is_none());
+        assert!(summarize(&[f64::NAN, f64::INFINITY]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert!(geomean(&[]).is_nan());
+        // Non-positive values are skipped, not propagated.
+        assert!((geomean(&[-1.0, 4.0, 4.0]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let s = summarize(&[5.0, 1.0, 3.0, 2.0, 4.0]).unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 3.0);
+    }
+}

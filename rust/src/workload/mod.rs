@@ -1,0 +1,15 @@
+//! Workload layer: models (Table 2), parallelization strategies
+//! (§2.1), the Workload Trace Generator (§4.4), and the per-NPU memory
+//! footprint model (§5.4).
+
+pub mod memory;
+pub mod models;
+pub mod parallel;
+pub mod trace;
+
+pub use memory::{footprint, MemoryFootprint};
+pub use models::ModelConfig;
+pub use parallel::{
+    enumerate_parallelizations, group_dim_costs, group_span, DimExtent, Parallelization,
+};
+pub use trace::{generate_trace, CommGroup, ExecutionMode, StageTrace, Trace, TraceOp};

@@ -1,0 +1,231 @@
+//! Target workload definitions (paper Table 2).
+//!
+//! Four transformer-based models: GPT3-175B, GPT3-13B, ViT-Base and
+//! ViT-Large. The paper's Table 2 rows are (layers, hidden dim, FFN dim,
+//! sequence length, attention heads). Like the paper (Table 2 footnote) we
+//! can simulate a reduced layer count and re-scale latency/memory in
+//! post-processing — see [`ModelConfig::with_simulated_layers`].
+
+
+/// Mixture-of-Experts configuration (paper §2.2: "All-to-All patterns
+/// occur when each NPU generates and transfers dedicated chunks for all
+/// other NPUs, such as gating functions in MoE models" [45]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeConfig {
+    /// Experts per MoE layer.
+    pub experts: u64,
+    /// Tokens route to the top-k experts.
+    pub top_k: u64,
+    /// Every `frequency`-th layer is an MoE layer (1 = all layers).
+    pub frequency: u64,
+}
+
+/// A transformer model as Table 2 parameterizes it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Number of transformer layers (Table 2 row 1).
+    pub layers: u64,
+    /// Hidden (model) dimension D (row 2).
+    pub hidden: u64,
+    /// Feed-forward dimension F (row 3).
+    pub ffn: u64,
+    /// Sequence length S (row 4).
+    pub seq: u64,
+    /// Attention heads H (row 5).
+    pub heads: u64,
+    /// Layers actually simulated (paper simulates 4 and re-scales).
+    pub simulated_layers: u64,
+    /// Optional Mixture-of-Experts extension (None = dense, Table 2).
+    pub moe: Option<MoeConfig>,
+}
+
+impl ModelConfig {
+    pub fn new(name: &str, layers: u64, hidden: u64, ffn: u64, seq: u64, heads: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            layers,
+            hidden,
+            ffn,
+            seq,
+            heads,
+            simulated_layers: layers,
+            moe: None,
+        }
+    }
+
+    /// Convert into a Mixture-of-Experts variant: every
+    /// `frequency`-th layer's MLP is replaced by `experts` experts with
+    /// top-`top_k` routing. Expert weights multiply the MLP parameter
+    /// count; the gating all-to-all is injected by the WTG.
+    pub fn with_moe(mut self, experts: u64, top_k: u64, frequency: u64) -> Self {
+        assert!(experts >= 2 && top_k >= 1 && frequency >= 1);
+        self.moe = Some(MoeConfig { experts, top_k, frequency });
+        self.name = format!("{}-MoE{}x{}", self.name, experts, top_k);
+        self
+    }
+
+    /// Fraction of layers that are MoE layers.
+    pub fn moe_layer_fraction(&self) -> f64 {
+        match self.moe {
+            Some(m) => 1.0 / m.frequency as f64,
+            None => 0.0,
+        }
+    }
+
+    /// Simulate only `n` layers; latency/memory re-scale by
+    /// [`Self::layer_scale`] in post-processing (Table 2 footnote).
+    pub fn with_simulated_layers(mut self, n: u64) -> Self {
+        self.simulated_layers = n.min(self.layers).max(1);
+        self
+    }
+
+    /// Post-processing re-scale factor: full layers / simulated layers.
+    pub fn layer_scale(&self) -> f64 {
+        self.layers as f64 / self.simulated_layers as f64
+    }
+
+    /// Parameters of one transformer layer: attention (QKV + out
+    /// projection) + MLP (up + down) + layernorms.
+    pub fn params_per_layer(&self) -> u64 {
+        let d = self.hidden;
+        let f = self.ffn;
+        let attn = 4 * d * d + 4 * d; // Wq,Wk,Wv,Wo + biases
+        let mlp = 2 * d * f + d + f; // up/down + biases
+        let norm = 4 * d; // 2 layernorms (gamma, beta)
+        // MoE layers replicate the MLP per expert (averaged over the
+        // frequency so total_params stays a simple product).
+        let mlp = match self.moe {
+            Some(m) => {
+                let dense_layers = m.frequency - 1;
+                (mlp * (dense_layers + m.experts)) / m.frequency
+            }
+            None => mlp,
+        };
+        attn + mlp + norm
+    }
+
+    /// Total model parameters (transformer body; embeddings excluded as
+    /// they do not participate in the per-layer collectives we model).
+    pub fn total_params(&self) -> u64 {
+        self.layers * self.params_per_layer()
+    }
+
+    /// FLOPs of one layer's forward pass at global batch `b`:
+    /// QKV (6·b·s·d²) + attention scores/context (4·b·s²·d)
+    /// + output projection (2·b·s·d²) + MLP (4·b·s·d·f).
+    pub fn layer_fwd_flops(&self, batch: u64) -> f64 {
+        let b = batch as f64;
+        let s = self.seq as f64;
+        let d = self.hidden as f64;
+        let f = self.ffn as f64;
+        6.0 * b * s * d * d + 4.0 * b * s * s * d + 2.0 * b * s * d * d + 4.0 * b * s * d * f
+    }
+
+    /// Backward is the standard 2× forward.
+    pub fn layer_bwd_flops(&self, batch: u64) -> f64 {
+        2.0 * self.layer_fwd_flops(batch)
+    }
+}
+
+/// Table 2 presets.
+pub mod presets {
+    use super::ModelConfig;
+
+    pub fn gpt3_175b() -> ModelConfig {
+        ModelConfig::new("GPT3-175B", 96, 12288, 49152, 2048, 96)
+    }
+
+    pub fn gpt3_13b() -> ModelConfig {
+        ModelConfig::new("GPT3-13B", 40, 5140, 20560, 2048, 40)
+    }
+
+    pub fn vit_base() -> ModelConfig {
+        ModelConfig::new("ViT-Base", 12, 768, 3072, 256, 12)
+    }
+
+    pub fn vit_large() -> ModelConfig {
+        ModelConfig::new("ViT-Large", 24, 1024, 4096, 256, 16)
+    }
+
+    /// All four Table 2 workloads.
+    pub fn all() -> Vec<ModelConfig> {
+        vec![gpt3_175b(), gpt3_13b(), vit_base(), vit_large()]
+    }
+
+    /// Look a preset up by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        all().into_iter().find(|m| m.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt3_175b_param_count_in_range() {
+        // 96 layers of 12288-hidden, 4x FFN: body params ~173B. The famous
+        // 175B includes embeddings; we exclude them, so expect 165-180B.
+        let m = presets::gpt3_175b();
+        let p = m.total_params() as f64;
+        assert!(p > 1.6e11 && p < 1.85e11, "params = {p:.3e}");
+    }
+
+    #[test]
+    fn gpt3_13b_param_count_in_range() {
+        let m = presets::gpt3_13b();
+        let p = m.total_params() as f64;
+        assert!(p > 1.0e10 && p < 1.5e10, "params = {p:.3e}");
+    }
+
+    #[test]
+    fn vit_base_params_near_86m() {
+        // ViT-Base is ~86M with embeddings; transformer body ~85M.
+        let p = presets::vit_base().total_params() as f64;
+        assert!(p > 7.0e7 && p < 9.5e7, "params = {p:.3e}");
+    }
+
+    #[test]
+    fn layer_scale_roundtrips() {
+        let m = presets::gpt3_175b().with_simulated_layers(4);
+        assert_eq!(m.simulated_layers, 4);
+        assert!((m.layer_scale() - 24.0).abs() < 1e-12);
+        // Scaling never below one simulated layer.
+        let m = presets::vit_base().with_simulated_layers(0);
+        assert_eq!(m.simulated_layers, 1);
+    }
+
+    #[test]
+    fn fwd_flops_matches_6nd_rule_of_thumb() {
+        // Standard estimate: fwd flops/token ~ 2 * params (plus attention
+        // quadratic term). Check we are within 2x of 2*params*tokens.
+        let m = presets::gpt3_175b();
+        let batch = 1;
+        let per_layer = m.layer_fwd_flops(batch);
+        let total = per_layer * m.layers as f64;
+        let rule = 2.0 * m.total_params() as f64 * (batch * m.seq) as f64;
+        assert!(total > rule * 0.8 && total < rule * 2.5, "total={total:.3e} rule={rule:.3e}");
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd() {
+        let m = presets::vit_large();
+        assert_eq!(m.layer_bwd_flops(8), 2.0 * m.layer_fwd_flops(8));
+    }
+
+    #[test]
+    fn by_name_finds_presets() {
+        assert!(presets::by_name("gpt3-175b").is_some());
+        assert!(presets::by_name("ViT-Base").is_some());
+        assert!(presets::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn table2_values() {
+        let m = presets::gpt3_13b();
+        assert_eq!((m.layers, m.hidden, m.ffn, m.seq, m.heads), (40, 5140, 20560, 2048, 40));
+        let v = presets::vit_large();
+        assert_eq!((v.layers, v.hidden, v.ffn, v.seq, v.heads), (24, 1024, 4096, 256, 16));
+    }
+}

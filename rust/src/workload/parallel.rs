@@ -1,0 +1,291 @@
+//! Parallelization strategies and their mapping onto the physical
+//! topology (paper §2.1, Figure 1).
+//!
+//! The paper's workload knobs are DP, PP, SP and a weight-sharding flag
+//! (Table 1/4); **TP is the residual** `NPUs / (DP·SP·PP)` — Table 6 lists
+//! all four with their product equal to the NPU count, and the Table 1
+//! constraint is `product(DP, SP, PP) ≤ NPUs`.
+//!
+//! Rank layout (innermost → outermost): **[TP, SP, DP, PP]**, ordered by
+//! communication intensity — TP all-reduces every layer (most bytes, most
+//! frequent), SP gathers activations, DP reduces gradients once per layer
+//! per iteration, PP only passes boundary activations. Mapping the most
+//! intense group innermost places it on the fastest network dimensions.
+//!
+//! [`group_span`] computes which topology dimensions (and what sub-extent
+//! of each) a communicator group covers, which is what the collective cost
+//! model consumes.
+
+use crate::topology::{DimCost, Topology};
+
+/// A parallelization strategy (the paper's "Workload Knob" row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Parallelization {
+    pub dp: u64,
+    pub sp: u64,
+    pub pp: u64,
+    /// TP — derived, stored for convenience: `npus / (dp·sp·pp)`.
+    pub tp: u64,
+    /// ZeRO-style weight sharding over the (DP×SP) group ({0, 1}).
+    pub weight_sharded: bool,
+}
+
+impl Parallelization {
+    /// Build from the searched knobs, deriving TP from the NPU count.
+    /// Fails if `dp·sp·pp` does not divide `npus` (the Table 1 constraint
+    /// `product(DP,SP,PP) ≤ NPUs` plus divisibility).
+    pub fn derive(npus: u64, dp: u64, sp: u64, pp: u64, weight_sharded: bool) -> Result<Self, String> {
+        if dp == 0 || sp == 0 || pp == 0 {
+            return Err("parallel degrees must be >= 1".into());
+        }
+        let denom = dp * sp * pp;
+        if denom > npus {
+            return Err(format!("product(DP,SP,PP) = {denom} exceeds NPUs = {npus}"));
+        }
+        if npus % denom != 0 {
+            return Err(format!("DP*SP*PP = {denom} does not divide NPUs = {npus}"));
+        }
+        Ok(Self { dp, sp, pp, tp: npus / denom, weight_sharded })
+    }
+
+    pub fn npus(&self) -> u64 {
+        self.dp * self.sp * self.pp * self.tp
+    }
+
+    /// Rank-layout strides, innermost first: [TP, SP, DP, PP].
+    pub fn strides(&self) -> ParallelStrides {
+        ParallelStrides {
+            tp: 1,
+            sp: self.tp,
+            dp: self.tp * self.sp,
+            pp: self.tp * self.sp * self.dp,
+        }
+    }
+
+    pub fn validate(&self, npus: u64) -> Result<(), String> {
+        if self.npus() != npus {
+            return Err(format!(
+                "parallelization covers {} NPUs but topology has {npus}",
+                self.npus()
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Parallelization {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "DP={} PP={} SP={} TP={} shard={}",
+            self.dp, self.pp, self.sp, self.tp, self.weight_sharded as u8
+        )
+    }
+}
+
+/// Strides of each parallelism axis in the flattened rank space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelStrides {
+    pub tp: u64,
+    pub sp: u64,
+    pub dp: u64,
+    pub pp: u64,
+}
+
+/// One topology dimension's share of a communicator group: the group has
+/// `extent` distinct coordinates along topology dimension `dim`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimExtent {
+    pub dim: usize,
+    pub extent: u64,
+}
+
+/// Which topology dimensions a communicator group of `size` members with
+/// rank-space `stride` spans, and the extent within each.
+///
+/// Both the parallel degrees and the per-dim NPU counts are powers of two
+/// in the paper's PsA (Tables 1/4), so group boundaries always align with
+/// (sub-)dimension boundaries: a group occupying rank interval
+/// `[stride, stride·size)` in multiplicative stride space intersects
+/// topology dim `d` (spanning `[S_d, S_d·n_d)`) with extent
+/// `min(stride·size, S_d·n_d) / max(stride, S_d)` when positive.
+pub fn group_span(topo: &Topology, stride: u64, size: u64) -> Vec<DimExtent> {
+    let mut spans = Vec::new();
+    if size <= 1 {
+        return spans;
+    }
+    let glo = stride;
+    let ghi = stride * size;
+    for (d, dim) in topo.dims.iter().enumerate() {
+        let slo = topo.stride(d);
+        let shi = slo * dim.npus;
+        let lo = glo.max(slo);
+        let hi = ghi.min(shi);
+        if hi > lo {
+            let extent = hi / lo;
+            if extent > 1 {
+                spans.push(DimExtent { dim: d, extent });
+            }
+        }
+    }
+    spans
+}
+
+/// Resolve a group span into per-dimension [`DimCost`]s (alpha/beta with
+/// the *extent* as the group size along that dimension). The paired
+/// second element is the topology dim index, used to pick the searched
+/// per-dim collective algorithm.
+pub fn group_dim_costs(topo: &Topology, stride: u64, size: u64) -> Vec<(DimCost, usize)> {
+    group_span(topo, stride, size)
+        .into_iter()
+        .map(|e| {
+            let mut c = DimCost::from_dim(&topo.dims[e.dim]);
+            c.npus = e.extent;
+            (c, e.dim)
+        })
+        .collect()
+}
+
+/// Enumerate all valid (DP, SP, PP) power-of-two triples for `npus` NPUs
+/// given per-axis caps — the generator behind the paper's "286 options"
+/// (Table 1) and the workload-only search space.
+pub fn enumerate_parallelizations(
+    npus: u64,
+    pp_cap: u64,
+    weight_shard_options: &[bool],
+) -> Vec<Parallelization> {
+    let mut out = Vec::new();
+    let mut dp = 1;
+    while dp <= npus {
+        let mut sp = 1;
+        while dp * sp <= npus {
+            let mut pp = 1;
+            while pp <= pp_cap && dp * sp * pp <= npus {
+                if npus % (dp * sp * pp) == 0 {
+                    for &ws in weight_shard_options {
+                        if let Ok(p) = Parallelization::derive(npus, dp, sp, pp, ws) {
+                            out.push(p);
+                        }
+                    }
+                }
+                pp *= 2;
+            }
+            sp *= 2;
+        }
+        dp *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::DimKind;
+
+    fn topo_1024() -> Topology {
+        Topology::from_arrays(
+            &[DimKind::Ring, DimKind::FullyConnected, DimKind::Ring, DimKind::Switch],
+            &[4, 8, 4, 8],
+            &[375.0, 175.0, 150.0, 100.0],
+            &[0.5, 0.5, 0.5, 0.5],
+        )
+    }
+
+    #[test]
+    fn derive_computes_tp_residual() {
+        let p = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+        assert_eq!(p.tp, 4); // Table 5, Perf-per-BW/NPU column
+        assert_eq!(p.npus(), 1024);
+    }
+
+    #[test]
+    fn derive_rejects_overflow_and_nondivisible() {
+        assert!(Parallelization::derive(1024, 2048, 1, 1, false).is_err());
+        assert!(Parallelization::derive(1024, 3, 1, 1, false).is_err());
+        assert!(Parallelization::derive(0, 1, 0, 1, false).is_err());
+    }
+
+    #[test]
+    fn strides_follow_tp_sp_dp_pp_order() {
+        let p = Parallelization::derive(1024, 2, 8, 1, true).unwrap(); // TP=64
+        let s = p.strides();
+        assert_eq!(s.tp, 1);
+        assert_eq!(s.sp, 64);
+        assert_eq!(s.dp, 512);
+        assert_eq!(s.pp, 1024);
+    }
+
+    #[test]
+    fn tp64_spans_first_two_dims_like_table6_expr1() {
+        // Table 6 Expr 1: TP=64 on NPUs-per-dim [16,4,4,4]-like layouts —
+        // the TP group should exactly cover the innermost dims.
+        let topo = Topology::from_arrays(
+            &[DimKind::Ring, DimKind::FullyConnected, DimKind::Ring, DimKind::FullyConnected],
+            &[16, 4, 4, 4],
+            &[50.0; 4],
+            &[0.5; 4],
+        );
+        let p = Parallelization::derive(1024, 2, 8, 1, true).unwrap();
+        assert_eq!(p.tp, 64);
+        let span = group_span(&topo, p.strides().tp, p.tp);
+        assert_eq!(span, vec![DimExtent { dim: 0, extent: 16 }, DimExtent { dim: 1, extent: 4 }]);
+    }
+
+    #[test]
+    fn partial_dim_extent() {
+        // Group of 2 with stride 1 inside a dim of 4: extent 2 on dim 0.
+        let topo = topo_1024();
+        let span = group_span(&topo, 1, 2);
+        assert_eq!(span, vec![DimExtent { dim: 0, extent: 2 }]);
+        // Group of 8 with stride 2: covers rest of dim0 (extent 2) and
+        // half of dim1 (extent 4).
+        let span = group_span(&topo, 2, 8);
+        assert_eq!(
+            span,
+            vec![DimExtent { dim: 0, extent: 2 }, DimExtent { dim: 1, extent: 4 }]
+        );
+    }
+
+    #[test]
+    fn group_of_one_spans_nothing() {
+        assert!(group_span(&topo_1024(), 1, 1).is_empty());
+    }
+
+    #[test]
+    fn spans_product_equals_group_size() {
+        let topo = topo_1024();
+        for (stride, size) in [(1u64, 4u64), (1, 64), (4, 8), (32, 32), (1, 1024), (128, 8)] {
+            let span = group_span(&topo, stride, size);
+            let product: u64 = span.iter().map(|e| e.extent).product();
+            assert_eq!(product, size, "stride={stride} size={size}");
+        }
+    }
+
+    #[test]
+    fn group_dim_costs_carry_extent_not_full_dim() {
+        let topo = topo_1024();
+        let costs = group_dim_costs(&topo, 1, 2);
+        assert_eq!(costs.len(), 1);
+        assert_eq!(costs[0].0.npus, 2);
+        assert_eq!(costs[0].1, 0);
+    }
+
+    #[test]
+    fn enumerate_matches_paper_286_count() {
+        // Table 1: DP, SP in {1..1024}, PP in {1..1024}, product <= 1024
+        // gives 286 (DP,PP,SP) combos. With pp_cap=1024 and one shard
+        // option we should get exactly 286.
+        let all = enumerate_parallelizations(1024, 1024, &[false]);
+        assert_eq!(all.len(), 286);
+    }
+
+    #[test]
+    fn enumerate_respects_pp_cap() {
+        // Table 4 restricts PP to {1, 2, 4}.
+        let all = enumerate_parallelizations(1024, 4, &[false, true]);
+        assert!(all.iter().all(|p| p.pp <= 4));
+        assert!(all.iter().any(|p| p.weight_sharded));
+        // every entry covers all NPUs
+        assert!(all.iter().all(|p| p.npus() == 1024));
+    }
+}

@@ -1,0 +1,219 @@
+//! Property-based tests over the simulator and PsA invariants
+//! (via the in-crate `util::prop` harness — see DESIGN.md
+//! §Substitutions for why not `proptest`).
+
+use cosmic::collective::{
+    collective_time_us, multidim_collective_time_us, CollAlgo, CollectiveKind, MultiDimPolicy,
+};
+use cosmic::psa::paper_table4_schema;
+use cosmic::pss::{Pss, SearchScope};
+use cosmic::sim::{presets, Simulator};
+use cosmic::topology::{DimCost, DimKind, NetworkDim, Topology};
+use cosmic::util::prop::check;
+use cosmic::util::Rng;
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{footprint, group_span, ExecutionMode, Parallelization};
+
+fn random_topology(rng: &mut Rng) -> Topology {
+    let dims = 1 + rng.gen_range(4);
+    let kinds = [DimKind::Ring, DimKind::Switch, DimKind::FullyConnected];
+    Topology::new(
+        (0..dims)
+            .map(|_| {
+                NetworkDim::new(
+                    *rng.choose(&kinds),
+                    [2u64, 4, 8, 16][rng.gen_range(4)],
+                    [50.0, 100.0, 200.0, 400.0][rng.gen_range(4)],
+                    0.1 + rng.gen_f64() * 2.0,
+                )
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn prop_collective_cost_nonnegative_and_monotone_in_bytes() {
+    check("collective cost monotone", 300, |rng| {
+        let dim = DimCost::from_dim(&NetworkDim::new(
+            DimKind::Ring,
+            [2u64, 4, 8, 16, 32][rng.gen_range(5)],
+            50.0 + rng.gen_f64() * 450.0,
+            rng.gen_f64() * 2.0,
+        ));
+        let algo = *rng.choose(&CollAlgo::ALL);
+        let kind = *rng.choose(&CollectiveKind::ALL);
+        let bytes = rng.gen_f64() * 1e9;
+        let t1 = collective_time_us(algo, kind, &dim, bytes);
+        let t2 = collective_time_us(algo, kind, &dim, bytes * 2.0);
+        if t1 < 0.0 || t2 < 0.0 {
+            return Err(format!("negative cost: {t1} {t2}"));
+        }
+        if t2 + 1e-9 < t1 {
+            return Err(format!("not monotone in bytes: {t1} -> {t2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_blueconnect_never_slower_than_baseline() {
+    check("blueconnect <= baseline", 300, |rng| {
+        let topo = random_topology(rng);
+        let dims: Vec<DimCost> = topo.dims.iter().map(DimCost::from_dim).collect();
+        let algos: Vec<CollAlgo> =
+            (0..dims.len()).map(|_| *rng.choose(&CollAlgo::ALL)).collect();
+        let kind = *rng.choose(&CollectiveKind::ALL);
+        let bytes = 1e3 + rng.gen_f64() * 1e9;
+        let chunks = 1 + rng.gen_range(32) as u32;
+        let base = multidim_collective_time_us(
+            kind,
+            MultiDimPolicy::Baseline,
+            &algos,
+            &dims,
+            bytes,
+            chunks,
+        );
+        let bc = multidim_collective_time_us(
+            kind,
+            MultiDimPolicy::BlueConnect,
+            &algos,
+            &dims,
+            bytes,
+            chunks,
+        );
+        if bc > base + 1e-6 {
+            return Err(format!("blueconnect {bc} > baseline {base} (chunks={chunks})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_span_product_equals_group_size() {
+    check("group span covers group", 500, |rng| {
+        let topo = random_topology(rng);
+        let total = topo.total_npus();
+        // stride and size as random powers of two with stride*size <= total
+        let log_total = 63 - total.leading_zeros();
+        let ls = rng.gen_range(log_total as usize + 1) as u32;
+        let remaining = log_total - ls;
+        let lg = rng.gen_range(remaining as usize + 1) as u32 + 1;
+        let stride = 1u64 << ls;
+        let size = (1u64 << lg).min(total / stride.max(1)).max(1);
+        if stride * size > total || size < 2 {
+            return Ok(()); // skip degenerate draw
+        }
+        let span = group_span(&topo, stride, size);
+        let product: u64 = span.iter().map(|e| e.extent).product();
+        if product != size {
+            return Err(format!(
+                "{} stride={stride} size={size}: span product {product}",
+                topo.notation()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_monotone_in_sharding_and_tp() {
+    check("memory monotone", 200, |rng| {
+        let model = wl::all()[rng.gen_range(4)].clone();
+        let npus = [64u64, 256, 1024][rng.gen_range(3)];
+        let dp = 1u64 << rng.gen_range(5);
+        let sp = 1u64 << rng.gen_range(3);
+        if dp * sp > npus {
+            return Ok(());
+        }
+        let batch = (dp * 4).max(256);
+        let dense = Parallelization::derive(npus, dp, sp, 1, false).map_err(|e| e)?;
+        let shard = Parallelization::derive(npus, dp, sp, 1, true).map_err(|e| e)?;
+        let fd = footprint(&model, &dense, batch, ExecutionMode::Training).total();
+        let fs = footprint(&model, &shard, batch, ExecutionMode::Training).total();
+        if fs > fd + 1e-6 {
+            return Err(format!("sharded {fs:.3e} > dense {fd:.3e} ({})", model.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_latency_positive_and_bw_monotone() {
+    let sim = Simulator::new();
+    check("simulator sanity", 60, |rng| {
+        let mut cluster = presets::by_index(1 + rng.gen_range(3)).unwrap();
+        let npus = cluster.npus();
+        let model = wl::all()[rng.gen_range(4)].clone().with_simulated_layers(2);
+        let dp = (1u64 << rng.gen_range(7)).min(npus);
+        let par = match Parallelization::derive(npus, dp, 1, 1, true) {
+            Ok(p) => p,
+            Err(_) => return Ok(()),
+        };
+        let batch = 2048;
+        let r1 = match sim.run(&cluster, &model, &par, batch, ExecutionMode::Training) {
+            Ok(r) => r,
+            Err(_) => return Ok(()), // invalid points are allowed
+        };
+        if !(r1.latency_us > 0.0 && r1.latency_us.is_finite()) {
+            return Err(format!("bad latency {}", r1.latency_us));
+        }
+        // Doubling every link bandwidth must not hurt.
+        for d in &mut cluster.topology.dims {
+            d.bandwidth_gbps *= 2.0;
+        }
+        let r2 = sim.run(&cluster, &model, &par, batch, ExecutionMode::Training).unwrap();
+        if r2.latency_us > r1.latency_us + 1e-6 {
+            return Err(format!("more bw slower: {} -> {}", r1.latency_us, r2.latency_us));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decoded_points_satisfy_constraints_and_materialize() {
+    let pss = Pss::new(
+        paper_table4_schema(1024, 4),
+        presets::system2(),
+        Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+    );
+    let space = pss.build_space(SearchScope::FullStack);
+    check("valid genomes materialize", 200, |rng| {
+        let mut local = Rng::seed_from_u64(rng.next_u64());
+        let Some(g) = space.random_valid_genome(&mut local, 500) else {
+            return Ok(());
+        };
+        let point = space.schema.decode_valid(&g).map_err(|e| e)?;
+        let (cluster, par) = pss.materialize(&point).map_err(|e| e)?;
+        if cluster.npus() != par.npus() {
+            return Err(format!("npus mismatch: {} vs {}", cluster.npus(), par.npus()));
+        }
+        cluster.validate().map_err(|e| e)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reward_zero_iff_invalid() {
+    use cosmic::dse::{Environment, Objective, WorkloadSpec};
+    let pss = Pss::new(
+        paper_table4_schema(1024, 4),
+        presets::system2(),
+        Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+    );
+    let env = Environment::new(
+        pss,
+        vec![WorkloadSpec::training(wl::gpt3_13b().with_simulated_layers(2), 2048)],
+        Objective::PerfPerBwPerNpu,
+    );
+    let space = env.pss.build_space(SearchScope::FullStack);
+    check("reward zero iff invalid", 150, |rng| {
+        let mut local = Rng::seed_from_u64(rng.next_u64());
+        let g = space.random_genome(&mut local);
+        let out = env.evaluate_uncached(&g);
+        match (out.reward == 0.0, out.invalid_reason.is_some()) {
+            (true, false) => Err("zero reward but no invalid reason".into()),
+            (false, true) => Err("positive reward with invalid reason".into()),
+            _ => Ok(()),
+        }
+    });
+}

@@ -1,0 +1,151 @@
+//! Cross-language integration: the AOT-compiled JAX/Pallas artifacts,
+//! executed through the PJRT CPU client from Rust, must agree with the
+//! pure-Rust fallback implementations to f32 tolerance.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent
+//! so `cargo test` works on a fresh checkout).
+
+use cosmic::agents::bo::Surrogate;
+use cosmic::runtime::{
+    cost_model_ref, CostBatch, CostModel, GpSurrogate, Runtime, BATCH, DIMS, GP_FEATURES, OPS,
+};
+use cosmic::util::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> Option<PathBuf> {
+    for candidate in ["artifacts", "../artifacts"] {
+        let p = Path::new(candidate);
+        if p.join("cost_model.hlo.txt").exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+fn random_batch(seed: u64) -> CostBatch {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut b = CostBatch::zeros();
+    for v in b.flops.iter_mut().chain(b.bytes.iter_mut()) {
+        *v = (rng.gen_f64() * 1e6) as f32;
+    }
+    for v in b.steps.iter_mut() {
+        *v = (rng.gen_f64() * 64.0) as f32;
+    }
+    for v in b.volume.iter_mut() {
+        *v = (rng.gen_f64() * 1e6) as f32;
+    }
+    for v in b.alpha_us.iter_mut() {
+        *v = (rng.gen_f64() * 10.0 + 0.01) as f32;
+    }
+    for v in b.beta.iter_mut() {
+        *v = (rng.gen_f64() * 1e5 + 1.0) as f32;
+    }
+    b.peak_flops_us = 4.59e8;
+    b.mem_bytes_us = 2.765e6;
+    b
+}
+
+#[test]
+fn cost_model_xla_matches_fallback() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let cm = CostModel::load(Some(&rt.client), &dir);
+    assert!(cm.is_xla(), "artifact present but not loaded as XLA");
+    for seed in [1u64, 7, 42] {
+        let batch = random_batch(seed);
+        let xla_out = cm.evaluate(&batch).expect("xla evaluate");
+        let ref_out = cost_model_ref(&batch);
+        assert_eq!(xla_out.len(), BATCH);
+        for i in 0..BATCH {
+            let (a, b) = (xla_out[i], ref_out[i]);
+            let rel = (a - b).abs() / b.abs().max(1e-3);
+            assert!(rel < 1e-4, "seed {seed} config {i}: xla={a} ref={b}");
+        }
+    }
+}
+
+#[test]
+fn cost_model_xla_handles_zero_batch() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let cm = CostModel::load(Some(&rt.client), &dir);
+    let out = cm.evaluate(&CostBatch::zeros()).unwrap();
+    assert!(out.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn gp_surrogate_xla_matches_fallback() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let mut gp_xla = GpSurrogate::load(Some(&rt.client), &dir, 0.4);
+    let mut gp_rust = GpSurrogate::load(None, &dir, 0.4);
+    assert!(gp_xla.is_xla());
+    assert!(!gp_rust.is_xla());
+
+    let mut rng = Rng::seed_from_u64(9);
+    let n = 12;
+    let xs: Vec<Vec<f64>> =
+        (0..n).map(|_| (0..GP_FEATURES).map(|_| rng.gen_f64()).collect()).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x.iter().sum::<f64>() / GP_FEATURES as f64).collect();
+    assert!(gp_xla.fit(&xs, &ys));
+    assert!(gp_rust.fit(&xs, &ys));
+
+    for _ in 0..10 {
+        let q: Vec<f64> = (0..GP_FEATURES).map(|_| rng.gen_f64()).collect();
+        let (mx, vx) = gp_xla.predict(&q);
+        let (mr, vr) = gp_rust.predict(&q);
+        assert!((mx - mr).abs() < 1e-3, "mean: xla={mx} rust={mr}");
+        assert!((vx - vr).abs() < 1e-3, "var: xla={vx} rust={vr}");
+    }
+}
+
+#[test]
+fn bo_agent_runs_with_xla_surrogate() {
+    use cosmic::agents::{Agent, BayesOpt};
+    use cosmic::psa::paper_table4_schema;
+    use cosmic::pss::{Pss, SearchScope};
+    use cosmic::sim::presets;
+    use cosmic::workload::Parallelization;
+
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let gp = GpSurrogate::load(Some(&rt.client), &dir, 0.4);
+    assert!(gp.is_xla());
+
+    let pss = Pss::new(
+        paper_table4_schema(1024, 4),
+        presets::system2(),
+        Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+    );
+    let space = pss.build_space(SearchScope::FullStack);
+    let mut bo = BayesOpt::new(space, 16, 3).with_surrogate(Box::new(gp));
+    bo.init_points = 4;
+    for step in 0..8 {
+        let proposals = bo.ask();
+        assert!(!proposals.is_empty(), "step {step}");
+        let results: Vec<_> =
+            proposals.into_iter().map(|g| (g, 0.1 * (step as f64 + 1.0))).collect();
+        bo.tell(&results);
+    }
+}
+
+#[test]
+fn batch_constants_are_consistent() {
+    // Shape contract sanity (mirrors python/tests/test_model.py).
+    assert_eq!(BATCH, 256);
+    assert_eq!(OPS, 8);
+    assert_eq!(DIMS, 4);
+    assert_eq!(GP_FEATURES, 32);
+}
