@@ -1,0 +1,100 @@
+//! Fidelity gap: `Analytical` vs `FlowLevel` network backends on the
+//! Table 5 configurations (the three Table 3 systems running GPT3-175B
+//! full-stack training points).
+//!
+//! Three questions, printed as paper-style tables:
+//! 1. How close is the flow-level rung to the analytical one on an
+//!    *uncongested* fabric? (Acceptance: within 5%.)
+//! 2. How much latency does the analytical model hide when the switch
+//!    dims are oversubscribed or the fabric carries co-tenant traffic?
+//! 3. What does the PsA "Network Fidelity" knob cost/buy inside a DSE —
+//!    screen analytically, re-rank the finalists under contention.
+
+use cosmic::agents::AgentKind;
+use cosmic::dse::{DseConfig, DseRunner, Objective, WorkloadSpec};
+use cosmic::harness::{make_env_with_fidelity, median_baseline_par, print_table};
+use cosmic::netsim::{FidelityMode, FlowLevelConfig};
+use cosmic::pss::SearchScope;
+use cosmic::sim::{presets, Simulator};
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, Parallelization};
+use std::time::Instant;
+
+fn main() {
+    let started = Instant::now();
+    let model = wl::gpt3_175b().with_simulated_layers(4);
+
+    // --- 1 & 2: backend gap on the Table 3 systems ---
+    let mut rows = Vec::new();
+    for sys in 1..=3usize {
+        let cluster = presets::by_index(sys).unwrap();
+        let spec = WorkloadSpec::training(model.clone(), 2048);
+        let par: Parallelization = median_baseline_par(&cluster, &spec);
+        let run = |sim: &Simulator| {
+            sim.run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+                .expect("Table 5 config must simulate")
+                .latency_us
+        };
+        let analytical = run(&Simulator::new());
+        let flow = run(&Simulator::new().with_fidelity(FidelityMode::FlowLevel));
+        let oversub =
+            run(&Simulator::new().with_flow_config(FlowLevelConfig::oversubscribed(4.0)));
+        let tenant = run(&Simulator::new().with_flow_config(
+            FlowLevelConfig::default().with_background_load(0.3),
+        ));
+        let gap = (flow - analytical).abs() / analytical * 100.0;
+        assert!(
+            gap < 5.0,
+            "system {sys}: uncongested flow-level diverged {gap:.2}% from analytical"
+        );
+        rows.push(vec![
+            format!("System {sys}"),
+            format!("{:.1}", analytical / 1e3),
+            format!("{:.1} ({gap:+.2}%)", flow / 1e3),
+            format!("{:.1} ({:+.1}%)", oversub / 1e3, (oversub / analytical - 1.0) * 100.0),
+            format!("{:.1} ({:+.1}%)", tenant / 1e3, (tenant / analytical - 1.0) * 100.0),
+        ]);
+    }
+    print_table(
+        "Fidelity gap — GPT3-175B iteration latency (ms)",
+        &["system", "analytical", "flow (uncongested)", "flow (4:1 oversub)", "flow (30% tenant)"],
+        &rows,
+    );
+
+    // --- 3: PsA fidelity knob inside a DSE + finalist re-ranking ---
+    let mut env = make_env_with_fidelity(
+        presets::system2(),
+        vec![WorkloadSpec::training(wl::gpt3_175b().with_simulated_layers(4), 2048)],
+        Objective::PerfPerBwPerNpu,
+    )
+    .with_flow_config(FlowLevelConfig::oversubscribed(4.0));
+    let r = DseRunner::new(DseConfig::new(AgentKind::Ga, 400, 21), SearchScope::FullStack)
+        .run(&mut env);
+    let screened = env.evaluate_with(&r.best_genome, FidelityMode::Analytical);
+    let reranked = env.evaluate_with(&r.best_genome, FidelityMode::FlowLevel);
+    let lat = |o: &cosmic::dse::StepOutcome| -> f64 {
+        o.reports.iter().map(|rep| rep.latency_us).sum()
+    };
+    print_table(
+        "DSE finalist under the fidelity knob (System 2, GA, 400 steps)",
+        &["quantity", "value"],
+        &[
+            vec!["best reward (search)".into(), format!("{:.4e}", r.best_reward)],
+            vec!["steps to peak".into(), format!("{}", r.steps_to_peak)],
+            vec![
+                "latency @ analytical screen (ms)".into(),
+                format!("{:.2}", lat(&screened) / 1e3),
+            ],
+            vec![
+                "latency @ flow-level 4:1 rerank (ms)".into(),
+                format!("{:.2}", lat(&reranked) / 1e3),
+            ],
+            vec![
+                "congestion penalty hidden from screen".into(),
+                format!("{:+.1}%", (lat(&reranked) / lat(&screened).max(1e-9) - 1.0) * 100.0),
+            ],
+        ],
+    );
+
+    println!("\ntotal wall time: {:.2}s", started.elapsed().as_secs_f64());
+}

@@ -62,6 +62,34 @@ fn main() {
     });
     println!("  (random valid genomes):                {:>10.1} us/point  ({:.0} points/s)", t * 1e6, 1.0 / t);
 
+    // Batch evaluation: serial loop vs the thread-fanned evaluate_batch
+    // (both on cold caches so every genome is a real evaluation).
+    let serial_env = make_env(
+        presets::system2(),
+        vec![WorkloadSpec::training(model.clone(), 2048)],
+        Objective::PerfPerBwPerNpu,
+    );
+    let t0 = Instant::now();
+    for g in &genomes {
+        black_box(serial_env.evaluate(g));
+    }
+    let t_serial = t0.elapsed().as_secs_f64();
+    let batch_env = make_env(
+        presets::system2(),
+        vec![WorkloadSpec::training(model.clone(), 2048)],
+        Objective::PerfPerBwPerNpu,
+    );
+    let t0 = Instant::now();
+    black_box(batch_env.evaluate_batch(&genomes));
+    let t_batch = t0.elapsed().as_secs_f64();
+    println!(
+        "evaluate_batch ({} genomes):            serial {:.3}s vs batch {:.3}s = {:.2}x speedup",
+        genomes.len(),
+        t_serial,
+        t_batch,
+        t_serial / t_batch.max(1e-9)
+    );
+
     // --- L2/L1: XLA cost model vs fallback ---
     let mut batch = CostBatch::zeros();
     let mut rng = Rng::seed_from_u64(2);

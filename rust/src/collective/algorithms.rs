@@ -173,6 +173,15 @@ fn beta_volume_factor(algo: CollAlgo, kind: CollectiveKind, n: u64) -> f64 {
     }
 }
 
+/// The raw alpha-beta terms of one collective phase over an `n`-NPU
+/// group: `(latency steps, wire-volume multiple of the per-NPU buffer)`.
+/// Phase time is `steps * alpha + volume * S / beta`. Exposed for the
+/// `netsim` phase planner, which needs the two terms separately to apply
+/// congestion to the bandwidth term only.
+pub fn alpha_beta_terms(algo: CollAlgo, kind: CollectiveKind, n: u64) -> (f64, f64) {
+    (alpha_steps(algo, kind, n), beta_volume_factor(algo, kind, n))
+}
+
 /// Time (microseconds) for a collective of `bytes` per-NPU payload over a
 /// group of `dim.npus` NPUs on one dimension, using `algo`.
 ///

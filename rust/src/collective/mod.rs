@@ -18,8 +18,10 @@ pub mod algorithms;
 pub mod multidim;
 pub mod scheduler;
 
-pub use algorithms::{collective_time_us, CollAlgo, CollectiveKind};
-pub use multidim::{multidim_collective_time_us, MultiDimPolicy};
+pub use algorithms::{alpha_beta_terms, collective_time_us, CollAlgo, CollectiveKind};
+pub use multidim::{
+    compose_phases, multidim_collective_time_us, phase_plan, MultiDimPolicy, PhaseSpec,
+};
 pub use scheduler::{ChunkScheduler, SchedulingPolicy};
 
 

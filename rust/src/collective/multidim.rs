@@ -17,7 +17,7 @@
 //! chunks pipeline through the phase sequence, so total time is
 //! `sum(phases for one chunk) + (chunks-1) * bottleneck_phase`.
 
-use super::algorithms::{collective_time_us, CollAlgo, CollectiveKind};
+use super::algorithms::{alpha_beta_terms, CollAlgo, CollectiveKind};
 use crate::topology::{DimCost, Topology};
 
 /// Multi-dimensional composition policy.
@@ -46,45 +46,68 @@ impl MultiDimPolicy {
     }
 }
 
-/// Phase list for one chunk of an all-reduce over `dims` (subset of the
-/// topology's dimensions that the communicating group spans), with the
-/// per-dimension algorithm choice. Returns per-phase durations in us.
-fn allreduce_phases(
-    algos: &[CollAlgo],
-    dims: &[DimCost],
-    chunk_bytes: f64,
-) -> Vec<f64> {
-    // Hierarchical schedule: RS inward over dims 0..D, then AG outward.
-    // After the RS on dim d (size n_d), the live shard shrinks by n_d.
-    let mut phases = Vec::with_capacity(dims.len() * 2);
-    let mut size = chunk_bytes;
-    for (d, dim) in dims.iter().enumerate() {
-        phases.push(collective_time_us(algos[d], CollectiveKind::ReduceScatter, dim, size));
-        size /= dim.npus as f64;
-    }
-    for (d, dim) in dims.iter().enumerate().rev() {
-        size *= dim.npus as f64;
-        phases.push(collective_time_us(algos[d], CollectiveKind::AllGather, dim, size));
-    }
-    phases
+/// One per-dimension phase of a multi-dimensional collective, with the
+/// latency and bandwidth terms kept separate so alternative network
+/// backends (`crate::netsim`) can re-rate the bandwidth term under
+/// congestion while reusing the exact same schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseSpec {
+    /// Index into the `dims`/`algos` arrays this phase runs on.
+    pub span_dim: usize,
+    /// Total latency debt of the phase (alpha steps × per-hop alpha), us.
+    pub alpha_us: f64,
+    /// Bytes crossing the per-NPU link during the phase.
+    pub wire_bytes: f64,
 }
 
-fn one_sided_phases(
+fn phase_of(
+    algo: CollAlgo,
+    kind: CollectiveKind,
+    dim: &DimCost,
+    span_dim: usize,
+    bytes: f64,
+) -> PhaseSpec {
+    if dim.npus <= 1 || bytes <= 0.0 {
+        return PhaseSpec { span_dim, alpha_us: 0.0, wire_bytes: 0.0 };
+    }
+    let (steps, volume) = alpha_beta_terms(algo, kind, dim.npus);
+    PhaseSpec { span_dim, alpha_us: steps * dim.alpha_us, wire_bytes: volume * bytes }
+}
+
+/// The per-dimension phase schedule for one chunk of a multi-dimensional
+/// collective over `dims` (the dimensions the communicating group spans,
+/// innermost first), with the per-dimension algorithm choice.
+pub fn phase_plan(
     kind: CollectiveKind,
     algos: &[CollAlgo],
     dims: &[DimCost],
     chunk_bytes: f64,
-) -> Vec<f64> {
+) -> Vec<PhaseSpec> {
+    assert_eq!(algos.len(), dims.len(), "one algorithm per spanned dimension");
     match kind {
-        CollectiveKind::AllReduce => allreduce_phases(algos, dims, chunk_bytes),
+        CollectiveKind::AllReduce => {
+            // Hierarchical schedule: RS inward over dims 0..D, then AG
+            // outward. After the RS on dim d the live shard shrinks by n_d.
+            let mut phases = Vec::with_capacity(dims.len() * 2);
+            let mut size = chunk_bytes;
+            for (d, dim) in dims.iter().enumerate() {
+                phases.push(phase_of(algos[d], CollectiveKind::ReduceScatter, dim, d, size));
+                size /= dim.npus as f64;
+            }
+            for (d, dim) in dims.iter().enumerate().rev() {
+                size *= dim.npus as f64;
+                phases.push(phase_of(algos[d], CollectiveKind::AllGather, dim, d, size));
+            }
+            phases
+        }
         CollectiveKind::ReduceScatter => {
             let mut size = chunk_bytes;
             dims.iter()
                 .enumerate()
                 .map(|(d, dim)| {
-                    let t = collective_time_us(algos[d], kind, dim, size);
+                    let p = phase_of(algos[d], kind, dim, d, size);
                     size /= dim.npus as f64;
-                    t
+                    p
                 })
                 .collect()
         }
@@ -97,7 +120,7 @@ fn one_sided_phases(
                 .rev()
                 .map(|(d, dim)| {
                     size *= dim.npus as f64;
-                    collective_time_us(algos[d], kind, dim, size)
+                    phase_of(algos[d], kind, dim, d, size)
                 })
                 .collect()
         }
@@ -105,8 +128,44 @@ fn one_sided_phases(
             // Personalized exchange phase per dimension on the full chunk.
             dims.iter()
                 .enumerate()
-                .map(|(d, dim)| collective_time_us(algos[d], kind, dim, chunk_bytes))
+                .map(|(d, dim)| phase_of(algos[d], kind, dim, d, chunk_bytes))
                 .collect()
+        }
+    }
+}
+
+fn one_sided_phases(
+    kind: CollectiveKind,
+    algos: &[CollAlgo],
+    dims: &[DimCost],
+    chunk_bytes: f64,
+) -> Vec<f64> {
+    phase_plan(kind, algos, dims, chunk_bytes)
+        .iter()
+        .map(|p| p.alpha_us + p.wire_bytes / dims[p.span_dim].beta_bytes_per_us)
+        .collect()
+}
+
+/// Compose per-phase durations into the collective's total time under a
+/// multi-dim policy, with `chunks` pipelined pieces (each phase duration
+/// must already be the *per-chunk* time).
+pub fn compose_phases(policy: MultiDimPolicy, phases: &[f64], chunks: u32) -> f64 {
+    let chunks = chunks.max(1) as f64;
+    let first: f64 = phases.iter().sum();
+    let bottleneck = phases.iter().cloned().fold(0.0, f64::max);
+    match policy {
+        // Baseline: chunks pipeline through strictly sequential phases —
+        // classic pipeline makespan: one full pass plus (chunks-1) times
+        // the bottleneck stage.
+        MultiDimPolicy::Baseline => first + (chunks - 1.0) * bottleneck,
+        // BlueConnect decomposes the collective so each dimension's
+        // RS/AG stream runs *concurrently* on its own links (not merely
+        // pipelined): steady state is chunks x the bottleneck dimension,
+        // and the fill/drain is the largest single non-bottleneck phase
+        // (they overlap each other), not their sum.
+        MultiDimPolicy::BlueConnect => {
+            let fill = phases.iter().cloned().filter(|p| *p < bottleneck).fold(0.0, f64::max);
+            bottleneck * chunks + fill
         }
     }
 }
@@ -131,27 +190,7 @@ pub fn multidim_collective_time_us(
     let chunks = chunks.max(1);
     let chunk_bytes = bytes / chunks as f64;
     let phases = one_sided_phases(kind, algos, dims, chunk_bytes);
-    let first: f64 = phases.iter().sum();
-    let bottleneck = phases.iter().cloned().fold(0.0, f64::max);
-    match policy {
-        // Baseline: chunks pipeline through strictly sequential phases —
-        // classic pipeline makespan: one full pass plus (chunks-1) times
-        // the bottleneck stage.
-        MultiDimPolicy::Baseline => first + (chunks as f64 - 1.0) * bottleneck,
-        // BlueConnect decomposes the collective so each dimension's
-        // RS/AG stream runs *concurrently* on its own links (not merely
-        // pipelined): steady state is chunks x the bottleneck dimension,
-        // and the fill/drain is the largest single non-bottleneck phase
-        // (they overlap each other), not their sum.
-        MultiDimPolicy::BlueConnect => {
-            let fill = phases
-                .iter()
-                .cloned()
-                .filter(|p| *p < bottleneck)
-                .fold(0.0, f64::max);
-            bottleneck * chunks as f64 + fill
-        }
-    }
+    compose_phases(policy, &phases, chunks)
 }
 
 /// Convenience: resolve the [`DimCost`]s for a contiguous span of topology
@@ -321,6 +360,31 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert_eq!(c[0].npus, 8);
         assert_eq!(c[1].npus, 4);
+    }
+
+    #[test]
+    fn phase_plan_durations_recompose_to_total() {
+        let dims = dims2();
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        for kind in CollectiveKind::ALL {
+            for chunks in [1u32, 4] {
+                let plan = phase_plan(kind, &algos, &dims, GB / chunks as f64);
+                let durations: Vec<f64> = plan
+                    .iter()
+                    .map(|p| p.alpha_us + p.wire_bytes / dims[p.span_dim].beta_bytes_per_us)
+                    .collect();
+                for policy in MultiDimPolicy::ALL {
+                    let composed = compose_phases(policy, &durations, chunks);
+                    let direct =
+                        multidim_collective_time_us(kind, policy, &algos, &dims, GB, chunks);
+                    assert!(
+                        (composed - direct).abs() < 1e-6,
+                        "{kind} {} chunks={chunks}: {composed} vs {direct}",
+                        policy.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -16,10 +16,16 @@ pub use cost::{network_cost, network_cost_per_npu};
 pub use reward::{reward_from_report, Objective};
 
 use crate::agents::{Agent, AgentKind};
+use crate::netsim::{FidelityMode, FlowLevelConfig};
 use crate::pss::{Pss, SearchScope};
-use crate::sim::{SimReport, Simulator};
-use crate::workload::{ExecutionMode, ModelConfig};
+use crate::sim::{ClusterConfig, SimReport, Simulator};
+use crate::util::parallel_map;
+use crate::workload::{ExecutionMode, ModelConfig, Parallelization};
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// One workload the environment optimizes for (Table 6 Expr 1 optimizes
 /// an ensemble of all four Table 2 models at once).
@@ -44,25 +50,44 @@ impl WorkloadSpec {
     }
 }
 
+/// Cache shard count (power of two; shards are `Mutex`-guarded so batch
+/// evaluation threads hit disjoint locks).
+const CACHE_SHARDS: usize = 16;
+
+/// The memoized result of one evaluation: everything needed to replay
+/// the outcome except the (large) per-workload reports, which are
+/// re-materialized on demand for the final best point.
+#[derive(Debug, Clone)]
+struct CachedEval {
+    reward: f64,
+    invalid_reason: Option<String>,
+}
+
 /// The environment side of the loop (PSS "Environment Side
 /// Configuration"): cost model + action/observation spaces + constraints.
 pub struct Environment {
     pub pss: Pss,
+    /// The default (analytical-fidelity) simulator.
     pub simulator: Simulator,
+    /// The flow-level twin, used when a genome's PsA fidelity knob (or a
+    /// caller via [`Environment::evaluate_with`]) asks for congestion.
+    flow_simulator: Simulator,
     pub workloads: Vec<WorkloadSpec>,
     pub objective: Objective,
-    /// Memoized evaluations keyed by genome — the DSE hot-path cache.
-    cache: HashMap<Vec<usize>, f64>,
-    pub evals: u64,
-    pub cache_hits: u64,
-    pub invalid: u64,
+    /// Sharded memo of evaluations keyed by genome — the DSE hot-path
+    /// cache, safe to consult from `evaluate_batch` worker threads.
+    cache: Vec<Mutex<HashMap<Vec<usize>, CachedEval>>>,
+    evals: AtomicU64,
+    cache_hits: AtomicU64,
+    invalid: AtomicU64,
 }
 
 /// Outcome of evaluating one genome.
 #[derive(Debug, Clone)]
 pub struct StepOutcome {
     pub reward: f64,
-    /// Reports per workload (empty if the point was invalid).
+    /// Reports per workload (empty if the point was invalid *or* served
+    /// from the memo cache — see [`RunResult::best_reports`]).
     pub reports: Vec<SimReport>,
     pub invalid_reason: Option<String>,
 }
@@ -73,34 +98,127 @@ impl Environment {
         Self {
             pss,
             simulator: Simulator::new(),
+            flow_simulator: Simulator::new().with_fidelity(FidelityMode::FlowLevel),
             workloads,
             objective,
-            cache: HashMap::new(),
-            evals: 0,
-            cache_hits: 0,
-            invalid: 0,
+            cache: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            evals: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            invalid: AtomicU64::new(0),
+        }
+    }
+
+    /// Reconfigure the flow-level twin's fabric (oversubscription /
+    /// background load) — builder style.
+    pub fn with_flow_config(mut self, config: FlowLevelConfig) -> Self {
+        let mut sim = Simulator::new().with_flow_config(config);
+        sim.mem_budget_bytes = self.simulator.mem_budget_bytes;
+        self.flow_simulator = sim;
+        self
+    }
+
+    /// Genomes evaluated (cache misses).
+    pub fn evals(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    /// Evaluations served from the memo cache.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Evaluations that scored zero (constraint/memory/config rejects).
+    pub fn invalid(&self) -> u64 {
+        self.invalid.load(Ordering::Relaxed)
+    }
+
+    fn shard_of(&self, genome: &[usize]) -> usize {
+        let mut h = DefaultHasher::new();
+        genome.hash(&mut h);
+        (h.finish() as usize) % self.cache.len()
+    }
+
+    fn cache_lookup(&self, genome: &[usize]) -> Option<StepOutcome> {
+        let shard = self.cache[self.shard_of(genome)].lock().unwrap();
+        shard.get(genome).map(|hit| {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+            StepOutcome {
+                reward: hit.reward,
+                reports: Vec::new(),
+                invalid_reason: hit.invalid_reason.clone(),
+            }
+        })
+    }
+
+    fn cache_store(&self, genome: &[usize], outcome: &StepOutcome) {
+        let mut shard = self.cache[self.shard_of(genome)].lock().unwrap();
+        if shard
+            .insert(
+                genome.to_vec(),
+                CachedEval {
+                    reward: outcome.reward,
+                    invalid_reason: outcome.invalid_reason.clone(),
+                },
+            )
+            .is_none()
+        {
+            self.evals.fetch_add(1, Ordering::Relaxed);
+            if outcome.reward == 0.0 {
+                self.invalid.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 
     /// Evaluate a genome end to end: decode → constraint-check →
     /// materialize → simulate each workload → reward. Invalid points
-    /// score 0 (the paper discards them).
-    pub fn evaluate(&mut self, genome: &[usize]) -> StepOutcome {
-        if let Some(&r) = self.cache.get(genome) {
-            self.cache_hits += 1;
-            return StepOutcome { reward: r, reports: Vec::new(), invalid_reason: None };
+    /// score 0 (the paper discards them). Repeat lookups are served from
+    /// the memo cache with their full outcome (reward *and* invalid
+    /// reason) — only the reports are elided.
+    pub fn evaluate(&self, genome: &[usize]) -> StepOutcome {
+        if let Some(hit) = self.cache_lookup(genome) {
+            return hit;
         }
         let outcome = self.evaluate_uncached(genome);
-        self.cache.insert(genome.to_vec(), outcome.reward);
-        self.evals += 1;
-        if outcome.reward == 0.0 {
-            self.invalid += 1;
-        }
+        self.cache_store(genome, &outcome);
         outcome
     }
 
+    /// Evaluate a batch of genomes, fanning cache misses out across OS
+    /// threads (the agents' `ask()` batches are embarrassingly parallel;
+    /// the simulator is pure). Order is preserved.
+    pub fn evaluate_batch(&self, genomes: &[Vec<usize>]) -> Vec<StepOutcome> {
+        let mut out: Vec<Option<StepOutcome>> =
+            genomes.iter().map(|g| self.cache_lookup(g)).collect();
+        // Deduplicate misses so a batch with repeats evaluates once.
+        let mut miss_positions: HashMap<&[usize], Vec<usize>> = HashMap::new();
+        for (i, g) in genomes.iter().enumerate() {
+            if out[i].is_none() {
+                miss_positions.entry(g.as_slice()).or_default().push(i);
+            }
+        }
+        let mut misses: Vec<(&[usize], Vec<usize>)> = miss_positions.into_iter().collect();
+        // HashMap order is nondeterministic; restore batch order.
+        misses.sort_by_key(|(_, positions)| positions[0]);
+        let results = parallel_map(&misses, |(g, _)| self.evaluate_uncached(g));
+        for ((g, positions), outcome) in misses.iter().zip(results.into_iter()) {
+            self.cache_store(g, &outcome);
+            // The first occurrence carries the full outcome (as a serial
+            // evaluate would); later duplicates mirror cache hits.
+            for &i in positions.iter().skip(1) {
+                out[i] = Some(StepOutcome {
+                    reward: outcome.reward,
+                    reports: Vec::new(),
+                    invalid_reason: outcome.invalid_reason.clone(),
+                });
+            }
+            out[positions[0]] = Some(outcome);
+        }
+        out.into_iter().map(|o| o.expect("batch slot unfilled")).collect()
+    }
+
     /// Evaluation without the memo cache (used by the bench harness to
-    /// time the true hot path).
+    /// time the true hot path). Honors the genome's PsA fidelity knob
+    /// when the schema carries one.
     pub fn evaluate_uncached(&self, genome: &[usize]) -> StepOutcome {
         let point = match self.pss.schema.decode_valid(genome) {
             Ok(p) => p,
@@ -114,10 +232,47 @@ impl Environment {
                 return StepOutcome { reward: 0.0, reports: Vec::new(), invalid_reason: Some(e) }
             }
         };
+        let sim = match self.pss.fidelity_of(&point) {
+            FidelityMode::FlowLevel => &self.flow_simulator,
+            FidelityMode::Analytical => &self.simulator,
+        };
+        self.simulate_point(sim, &cluster, &par)
+    }
+
+    /// Evaluate a genome at an explicitly chosen fidelity, bypassing the
+    /// cache and the genome's own fidelity knob — the re-ranking hook:
+    /// screen with [`FidelityMode::Analytical`], then re-score finalists
+    /// with [`FidelityMode::FlowLevel`].
+    pub fn evaluate_with(&self, genome: &[usize], fidelity: FidelityMode) -> StepOutcome {
+        let point = match self.pss.schema.decode_valid(genome) {
+            Ok(p) => p,
+            Err(e) => {
+                return StepOutcome { reward: 0.0, reports: Vec::new(), invalid_reason: Some(e) }
+            }
+        };
+        let (cluster, par) = match self.pss.materialize(&point) {
+            Ok(x) => x,
+            Err(e) => {
+                return StepOutcome { reward: 0.0, reports: Vec::new(), invalid_reason: Some(e) }
+            }
+        };
+        let sim = match fidelity {
+            FidelityMode::FlowLevel => &self.flow_simulator,
+            FidelityMode::Analytical => &self.simulator,
+        };
+        self.simulate_point(sim, &cluster, &par)
+    }
+
+    fn simulate_point(
+        &self,
+        sim: &Simulator,
+        cluster: &ClusterConfig,
+        par: &Parallelization,
+    ) -> StepOutcome {
         let mut reports = Vec::with_capacity(self.workloads.len());
         let mut total_latency_us = 0.0;
         for w in &self.workloads {
-            match self.simulator.run(&cluster, &w.model, &par, w.batch, w.mode) {
+            match sim.run(cluster, &w.model, par, w.batch, w.mode) {
                 Ok(rep) => {
                     total_latency_us += rep.latency_us * w.weight;
                     reports.push(rep);
@@ -163,6 +318,9 @@ pub struct RunResult {
     pub history: Vec<StepRecord>,
     pub best_reward: f64,
     pub best_genome: Vec<usize>,
+    /// Per-workload reports of the best design, re-materialized after
+    /// the run (cache hits during the search elide reports).
+    pub best_reports: Vec<SimReport>,
     /// Step at which the final best was first reached (paper §6.4 quotes
     /// RW 652 / GA 440 / ACO 297 / BO 680 on their setup).
     pub steps_to_peak: u64,
@@ -213,21 +371,28 @@ impl DseRunner {
     }
 
     /// Run with a caller-constructed agent (custom hyper-parameters or an
-    /// XLA-backed BO surrogate).
+    /// XLA-backed BO surrogate). Each `ask()` batch is evaluated through
+    /// [`Environment::evaluate_batch`], so population agents fan out
+    /// across cores.
     pub fn run_with_agent(&self, env: &mut Environment, agent: &mut dyn Agent) -> RunResult {
         let mut history = Vec::with_capacity(self.config.steps as usize);
         let mut best_reward = 0.0f64;
         let mut best_genome: Vec<usize> = Vec::new();
         let mut steps_to_peak = 0u64;
         let mut step = 0u64;
-        let evals0 = env.evals;
-        let invalid0 = env.invalid;
+        let evals0 = env.evals();
+        let invalid0 = env.invalid();
 
-        'outer: loop {
+        loop {
             let proposals = agent.ask();
-            let mut results = Vec::with_capacity(proposals.len());
-            for g in proposals {
-                let out = env.evaluate(&g);
+            // Never evaluate past the step budget: the tail of an
+            // over-full final batch is dropped (the agent is told only
+            // the rewards of what actually ran, as before).
+            let remaining = (self.config.steps - step) as usize;
+            let take = proposals.len().min(remaining);
+            let outcomes = env.evaluate_batch(&proposals[..take]);
+            let mut results = Vec::with_capacity(take);
+            for (g, out) in proposals[..take].iter().zip(outcomes.iter()) {
                 step += 1;
                 if out.reward > best_reward {
                     best_reward = out.reward;
@@ -235,23 +400,31 @@ impl DseRunner {
                     steps_to_peak = step;
                 }
                 history.push(StepRecord { step, reward: out.reward, best_so_far: best_reward });
-                results.push((g, out.reward));
-                if step >= self.config.steps {
-                    agent.tell(&results);
-                    break 'outer;
-                }
+                results.push((g.clone(), out.reward));
             }
             agent.tell(&results);
+            if step >= self.config.steps {
+                break;
+            }
         }
+
+        // Re-materialize the winning design's reports (cache hits elide
+        // them during the search).
+        let best_reports = if best_genome.is_empty() {
+            Vec::new()
+        } else {
+            env.evaluate_uncached(&best_genome).reports
+        };
 
         RunResult {
             agent: agent.name(),
             history,
             best_reward,
             best_genome,
+            best_reports,
             steps_to_peak,
-            evals: env.evals - evals0,
-            invalid: env.invalid - invalid0,
+            evals: env.evals() - evals0,
+            invalid: env.invalid() - invalid0,
         }
     }
 }
@@ -290,7 +463,7 @@ mod tests {
 
     #[test]
     fn baseline_genome_evaluates_positive() {
-        let mut env = make_env(Objective::PerfPerBwPerNpu);
+        let env = make_env(Objective::PerfPerBwPerNpu);
         let g = env.pss.baseline_genome();
         let out = env.evaluate(&g);
         assert!(out.reward > 0.0, "baseline should be valid: {:?}", out.invalid_reason);
@@ -299,23 +472,68 @@ mod tests {
 
     #[test]
     fn cache_hits_on_repeat() {
-        let mut env = make_env(Objective::PerfPerBwPerNpu);
+        let env = make_env(Objective::PerfPerBwPerNpu);
         let g = env.pss.baseline_genome();
         env.evaluate(&g);
-        let evals = env.evals;
+        let evals = env.evals();
         env.evaluate(&g);
-        assert_eq!(env.evals, evals);
-        assert_eq!(env.cache_hits, 1);
+        assert_eq!(env.evals(), evals);
+        assert_eq!(env.cache_hits(), 1);
     }
 
     #[test]
     fn invalid_genome_rewards_zero() {
-        let mut env = make_env(Objective::PerfPerBwPerNpu);
+        let env = make_env(Objective::PerfPerBwPerNpu);
         let mut g = env.pss.baseline_genome();
         g[0] = 11; // DP=2048 > NPUs
         let out = env.evaluate(&g);
         assert_eq!(out.reward, 0.0);
         assert!(out.invalid_reason.is_some());
+    }
+
+    #[test]
+    fn cache_hit_preserves_invalid_reason() {
+        // Regression: a hit used to return `invalid_reason: None`, so
+        // repeated lookups of a rejected point silently looked valid.
+        let env = make_env(Objective::PerfPerBwPerNpu);
+        let mut g = env.pss.baseline_genome();
+        g[0] = 11; // DP=2048 > NPUs
+        let first = env.evaluate(&g);
+        let second = env.evaluate(&g);
+        assert_eq!(env.cache_hits(), 1);
+        assert_eq!(first.reward, second.reward);
+        assert!(second.invalid_reason.is_some(), "hit dropped the invalid reason");
+    }
+
+    #[test]
+    fn evaluate_batch_matches_serial_and_dedups() {
+        let serial_env = make_env(Objective::PerfPerBwPerNpu);
+        let batch_env = make_env(Objective::PerfPerBwPerNpu);
+        let space = serial_env.pss.build_space(SearchScope::FullStack);
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        let mut genomes: Vec<Vec<usize>> = (0..24)
+            .filter_map(|_| space.random_valid_genome(&mut rng, 500))
+            .collect();
+        assert!(genomes.len() > 4);
+        let dup = genomes[0].clone();
+        genomes.push(dup); // duplicate inside one batch
+        let serial: Vec<f64> = genomes.iter().map(|g| serial_env.evaluate(g).reward).collect();
+        let batch: Vec<f64> =
+            batch_env.evaluate_batch(&genomes).iter().map(|o| o.reward).collect();
+        assert_eq!(serial, batch);
+        // Duplicates must not cost extra evaluations.
+        let unique: std::collections::HashSet<&Vec<usize>> = genomes.iter().collect();
+        assert_eq!(batch_env.evals(), unique.len() as u64);
+    }
+
+    #[test]
+    fn runner_materializes_best_reports() {
+        let mut env = make_env(Objective::PerfPerBwPerNpu);
+        let cfg = DseConfig::new(AgentKind::Ga, 40, 42);
+        let result = DseRunner::new(cfg, SearchScope::FullStack).run(&mut env);
+        assert!(result.best_reward > 0.0);
+        assert_eq!(result.best_reports.len(), env.workloads.len());
+        assert!(result.best_reports[0].latency_us > 0.0);
     }
 
     #[test]
@@ -368,7 +586,7 @@ mod tests {
             WorkloadSpec::training(wl::vit_base().with_simulated_layers(4), 1024),
             WorkloadSpec::training(wl::vit_large().with_simulated_layers(4), 1024),
         ];
-        let mut env = Environment::new(pss, w, Objective::PerfPerBwPerNpu);
+        let env = Environment::new(pss, w, Objective::PerfPerBwPerNpu);
         let g = env.pss.baseline_genome();
         let out = env.evaluate(&g);
         assert_eq!(out.reports.len(), 2, "{:?}", out.invalid_reason);

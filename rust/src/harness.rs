@@ -64,6 +64,25 @@ pub fn make_env(
     Environment::new(pss, workloads, objective)
 }
 
+/// Like [`make_env`], but with the netsim "Network Fidelity" knob in the
+/// schema, so agents search the simulation-fidelity axis too (analytical
+/// screening vs flow-level contention — see `crate::netsim`).
+pub fn make_env_with_fidelity(
+    cluster: ClusterConfig,
+    workloads: Vec<WorkloadSpec>,
+    objective: Objective,
+) -> Environment {
+    let npus = cluster.npus();
+    let dims = cluster.topology.num_dims();
+    let baseline = median_baseline_par(&cluster, &workloads[0]);
+    let pss = Pss::new(
+        crate::psa::with_fidelity_param(paper_table4_schema(npus, dims)),
+        cluster,
+        baseline,
+    );
+    Environment::new(pss, workloads, objective)
+}
+
 /// Outcome of one scoped search, with the quantities the paper reports.
 #[derive(Debug, Clone)]
 pub struct ScopedResult {

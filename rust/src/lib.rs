@@ -7,6 +7,14 @@
 //! - **Substrates** ([`topology`], [`collective`], [`compute`],
 //!   [`workload`], [`sim`]) — an ASTRA-sim-like end-to-end distributed-ML
 //!   simulator built from scratch.
+//! - **Netsim** ([`netsim`]) — the pluggable network backend: a
+//!   discrete-event core plus a flow-level max-min contention model
+//!   behind the [`netsim::NetworkBackend`] trait, so the simulator can
+//!   run at *analytical* fidelity (fast, congestion-blind) or
+//!   *flow-level* fidelity (congestion-aware: switch oversubscription,
+//!   background traffic, contending gradient collectives). Select with
+//!   `Simulator::with_backend` / `with_fidelity`, or let agents search
+//!   it via the PsA "Network Fidelity" knob.
 //! - **PsA** ([`psa`]) — the Parameter Set Architecture: a schema of
 //!   searchable parameters, value ranges and cross-parameter constraints
 //!   that decouples domain experts from search-agent configuration.
@@ -33,6 +41,15 @@
 //!     .run(&cluster, &model, &par, 1024, ExecutionMode::Training)
 //!     .unwrap();
 //! println!("iteration latency: {:.1} ms", report.latency_us / 1e3);
+//!
+//! // Same design point under flow-level contention (4:1 oversubscribed
+//! // switch fabric):
+//! use cosmic::netsim::FlowLevelConfig;
+//! let congested = Simulator::new()
+//!     .with_flow_config(FlowLevelConfig::oversubscribed(4.0))
+//!     .run(&cluster, &model, &par, 1024, ExecutionMode::Training)
+//!     .unwrap();
+//! println!("under congestion:  {:.1} ms", congested.latency_us / 1e3);
 //! ```
 
 pub mod agents;
@@ -40,6 +57,7 @@ pub mod collective;
 pub mod compute;
 pub mod dse;
 pub mod harness;
+pub mod netsim;
 pub mod psa;
 pub mod util;
 pub mod pss;
@@ -55,6 +73,7 @@ pub mod prelude {
     };
     pub use crate::compute::ComputeDevice;
     pub use crate::dse::{DseConfig, DseRunner, Environment, Objective, WorkloadSpec};
+    pub use crate::netsim::{FidelityMode, FlowLevelConfig, NetworkBackend};
     pub use crate::psa::{DesignPoint, ParamDef, Schema, Stack};
     pub use crate::pss::{Pss, SearchScope};
     pub use crate::sim::{ClusterConfig, SimReport, Simulator};

@@ -176,9 +176,9 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
     println!(
         "done in {:.2}s  ({:.0} evals/s, {} invalid, {} cache hits)",
         elapsed.as_secs_f64(),
-        env.evals as f64 / elapsed.as_secs_f64().max(1e-9),
+        env.evals() as f64 / elapsed.as_secs_f64().max(1e-9),
         result.invalid,
-        env.cache_hits
+        env.cache_hits()
     );
     println!(
         "best reward: {:.6e} (first reached at step {})",

@@ -1,0 +1,507 @@
+//! Pluggable network backends: the simulation-fidelity ladder.
+//!
+//! [`NetworkBackend`] is the seam between the end-to-end simulator and
+//! the network model. Two rungs ship today:
+//!
+//! - [`Analytical`] — the closed-form alpha-beta path: collectives see
+//!   ideal per-dimension bandwidth, and overlappable gradient
+//!   collectives drain serially through the LIFO/FIFO scheduler. This
+//!   reproduces the original simulator's numbers bit for bit.
+//! - [`FlowLevel`] — the congestion-aware rung: per-phase bandwidth is
+//!   re-rated by the fabric's oversubscription/background load
+//!   ([`FlowLevelConfig`]), and concurrent overlappable collectives are
+//!   simulated as event-driven flow chains sharing each dimension's
+//!   capacity max-min fairly ([`super::flow::FlowSim`]).
+//!
+//! A packet-level rung (per-message queueing, adaptive routing) is the
+//! natural next step and would slot in behind the same trait.
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::fabric::FlowLevelConfig;
+use super::flow::{FlowSim, FlowSpec};
+use crate::collective::{
+    compose_phases, phase_plan, CollAlgo, CollectiveKind, MultiDimPolicy, SchedulingPolicy,
+};
+use crate::topology::{DimCost, Topology};
+
+/// Which network model rung to simulate with — the PsA "Network
+/// Fidelity" knob (see `psa::builders::with_fidelity_param`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FidelityMode {
+    /// Closed-form alpha-beta costs; fastest, congestion-blind.
+    Analytical,
+    /// Flow-level max-min contention; slower, congestion-aware.
+    FlowLevel,
+}
+
+impl FidelityMode {
+    pub const ALL: [FidelityMode; 2] = [FidelityMode::Analytical, FidelityMode::FlowLevel];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FidelityMode::Analytical => "Analytical",
+            FidelityMode::FlowLevel => "FlowLevel",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "analytical" | "analytic" => Some(FidelityMode::Analytical),
+            "flowlevel" | "flow-level" | "flow" => Some(FidelityMode::FlowLevel),
+            _ => None,
+        }
+    }
+
+    /// The default backend instance for this rung.
+    pub fn default_backend(&self) -> Arc<dyn NetworkBackend> {
+        match self {
+            FidelityMode::Analytical => Arc::new(Analytical),
+            FidelityMode::FlowLevel => Arc::new(FlowLevel::default()),
+        }
+    }
+}
+
+impl fmt::Display for FidelityMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One multi-dimensional collective resolved against the topology: the
+/// communicator's per-dimension extents (`span`, innermost first, each
+/// with its topology dimension index) plus the collective-stack knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveCall<'a> {
+    pub kind: CollectiveKind,
+    pub policy: MultiDimPolicy,
+    /// One algorithm per spanned dimension (same order as `span`).
+    pub algos: &'a [CollAlgo],
+    /// `(alpha/beta with the group extent as npus, topology dim index)`.
+    pub span: &'a [(DimCost, usize)],
+    pub topology: &'a Topology,
+    /// Per-NPU payload bytes.
+    pub bytes: f64,
+    pub chunks: u32,
+}
+
+/// One overlappable collective competing for the network during the
+/// gradient-sync drain.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapCall<'a> {
+    /// Layer index (completion times are collapsed per layer).
+    pub layer: u64,
+    /// Absolute issue time (us).
+    pub issue_us: f64,
+    pub call: CollectiveCall<'a>,
+}
+
+/// The network model behind the simulator. Implementations must be
+/// stateless with respect to a single `run` (they may be shared across
+/// threads by a DSE sweep).
+pub trait NetworkBackend: fmt::Debug + Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn fidelity(&self) -> FidelityMode;
+
+    /// Time (us) of one blocking multi-dimensional collective.
+    fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64;
+
+    /// Drain concurrently-issued overlappable collectives; returns
+    /// `(layer, completion time)` pairs, one per distinct layer
+    /// (completion is the max over the layer's collectives), sorted by
+    /// layer.
+    ///
+    /// Every job must reference the *same* topology (one drain = one
+    /// cluster's network); implementations may resolve the fabric from
+    /// any one job.
+    fn drain_overlapped(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+    ) -> Vec<(u64, f64)>;
+}
+
+/// Collapse per-job completions into per-layer maxima, sorted by layer.
+fn collapse_per_layer(pairs: impl IntoIterator<Item = (u64, f64)>) -> Vec<(u64, f64)> {
+    let mut out: Vec<(u64, f64)> = Vec::new();
+    for (layer, t) in pairs {
+        match out.iter_mut().find(|(l, _)| *l == layer) {
+            Some((_, e)) => {
+                if t > *e {
+                    *e = t;
+                }
+            }
+            None => out.push((layer, t)),
+        }
+    }
+    out.sort_by_key(|(l, _)| *l);
+    out
+}
+
+/// Serial drain of jobs on one network resource: jobs arrive at their
+/// issue times; whenever the resource frees, the scheduler picks the
+/// next pending job per the policy (the original simulator's model).
+///
+/// Implemented as a sorted sweep over arrival times rather than a
+/// general event heap: with one serial resource the next event is
+/// always either the next arrival or the current job's completion.
+pub fn serial_drain(
+    jobs: &[(u64, f64, f64)], // (layer, issue_us, duration_us)
+    policy: SchedulingPolicy,
+) -> Vec<(u64, f64)> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by(|&a, &b| jobs[a].1.partial_cmp(&jobs[b].1).unwrap());
+    let mut pending: Vec<usize> = Vec::with_capacity(jobs.len());
+    let mut done: Vec<(u64, f64)> = Vec::with_capacity(jobs.len());
+    let mut next_arrival = 0usize;
+    let mut now;
+    let mut busy_until = f64::NEG_INFINITY;
+    let mut current: Option<usize> = None;
+    loop {
+        // Advance to the next event: arrival or resource-free.
+        let arrival_t = order.get(next_arrival).map(|&i| jobs[i].1.max(0.0));
+        let free_t = current.map(|_| busy_until);
+        now = match (arrival_t, free_t) {
+            (Some(a), Some(f)) if a < f => {
+                pending.push(order[next_arrival]);
+                next_arrival += 1;
+                a
+            }
+            (_, Some(f)) => {
+                if let Some(i) = current.take() {
+                    done.push((jobs[i].0, f));
+                }
+                f
+            }
+            (Some(a), None) => {
+                pending.push(order[next_arrival]);
+                next_arrival += 1;
+                a
+            }
+            (None, None) => break,
+        };
+        if current.is_none() && !pending.is_empty() {
+            let idx = match policy {
+                SchedulingPolicy::Fifo => 0,
+                SchedulingPolicy::Lifo => pending.len() - 1,
+            };
+            let i = pending.remove(idx);
+            current = Some(i);
+            busy_until = now + jobs[i].2.max(0.0);
+        }
+    }
+    collapse_per_layer(done)
+}
+
+/// The closed-form alpha-beta backend (the original simulator path).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Analytical;
+
+impl Analytical {
+    fn call_time_us(call: &CollectiveCall<'_>) -> f64 {
+        let dims: Vec<DimCost> = call.span.iter().map(|(c, _)| *c).collect();
+        crate::collective::multidim_collective_time_us(
+            call.kind,
+            call.policy,
+            call.algos,
+            &dims,
+            call.bytes,
+            call.chunks,
+        )
+    }
+}
+
+impl NetworkBackend for Analytical {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn fidelity(&self) -> FidelityMode {
+        FidelityMode::Analytical
+    }
+
+    fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {
+        Self::call_time_us(call)
+    }
+
+    fn drain_overlapped(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+    ) -> Vec<(u64, f64)> {
+        // Jobs repeat the same collective once per layer; memoize
+        // durations across the drain. The key covers every input the
+        // cost depends on: span identity (algos are built alongside the
+        // span, so the pointer covers both), kind, bytes, chunking and
+        // composition policy.
+        type MemoKey = (CollectiveKind, u64, usize, u32, MultiDimPolicy);
+        let mut memo: Vec<(MemoKey, f64)> = Vec::with_capacity(4);
+        let mut duration = |call: &CollectiveCall<'_>| -> f64 {
+            let key: MemoKey = (
+                call.kind,
+                call.bytes.to_bits(),
+                call.span.as_ptr() as usize,
+                call.chunks,
+                call.policy,
+            );
+            for (k, d) in memo.iter() {
+                if *k == key {
+                    return *d;
+                }
+            }
+            let d = Self::call_time_us(call);
+            memo.push((key, d));
+            d
+        };
+        let tuples: Vec<(u64, f64, f64)> =
+            jobs.iter().map(|j| (j.layer, j.issue_us, duration(&j.call))).collect();
+        serial_drain(&tuples, policy)
+    }
+}
+
+/// The congestion-aware flow-level backend.
+///
+/// Blocking collectives reuse the analytical phase schedule with each
+/// phase's bandwidth term re-rated by the fabric's effective capacity
+/// (oversubscription + background load) — identical to [`Analytical`]
+/// when the fabric is uncongested. Overlappable gradient collectives are
+/// simulated as concurrent flow chains (one flow per phase, plus a
+/// steady-state chunk tail on the bottleneck phase) sharing each
+/// dimension's capacity max-min fairly, so contention between layers'
+/// gradient syncs — invisible to the serial analytical drain — shapes
+/// the exposed tail.
+#[derive(Debug, Clone, Default)]
+pub struct FlowLevel {
+    pub config: FlowLevelConfig,
+}
+
+impl FlowLevel {
+    pub fn new(config: FlowLevelConfig) -> Self {
+        Self { config }
+    }
+
+    /// The per-chunk phase schedule of one collective (the analytical
+    /// plan — congestion does not change *what* is sent, only how fast).
+    fn chunk_plan(call: &CollectiveCall<'_>) -> Vec<crate::collective::PhaseSpec> {
+        let dims: Vec<DimCost> = call.span.iter().map(|(c, _)| *c).collect();
+        phase_plan(call.kind, call.algos, &dims, call.bytes / call.chunks.max(1) as f64)
+    }
+
+    /// Duration of one phase at the congested rate of its dimension.
+    fn congested_time(&self, call: &CollectiveCall<'_>, p: &crate::collective::PhaseSpec) -> f64 {
+        let (cost, topo_dim) = call.span[p.span_dim];
+        let rate = self.config.effective_rate(
+            cost.beta_bytes_per_us,
+            call.topology.dims[topo_dim].kind,
+            topo_dim,
+        );
+        if p.wire_bytes > 0.0 { p.alpha_us + p.wire_bytes / rate } else { p.alpha_us }
+    }
+
+    /// Build the flow chain of one overlappable collective: one flow per
+    /// phase of the first chunk, then a tail flow on the bottleneck
+    /// phase carrying the remaining `chunks-1` pipelined pieces — alone
+    /// on the fabric this reproduces the Baseline pipeline makespan
+    /// exactly.
+    fn chain_of(&self, call: &CollectiveCall<'_>) -> Vec<FlowSpec> {
+        let chunks = call.chunks.max(1);
+        let plan = Self::chunk_plan(call);
+        let mut specs: Vec<FlowSpec> = plan
+            .iter()
+            .map(|p| FlowSpec {
+                uses: vec![call.span[p.span_dim].1],
+                bytes: p.wire_bytes,
+                latency_us: p.alpha_us,
+            })
+            .collect();
+        if chunks > 1 && !plan.is_empty() {
+            let (bi, _) = plan
+                .iter()
+                .map(|p| self.congested_time(call, p))
+                .enumerate()
+                .fold((0, f64::NEG_INFINITY), |acc, (i, t)| if t > acc.1 { (i, t) } else { acc });
+            specs.push(FlowSpec {
+                uses: vec![call.span[plan[bi].span_dim].1],
+                bytes: (chunks - 1) as f64 * plan[bi].wire_bytes,
+                latency_us: (chunks - 1) as f64 * plan[bi].alpha_us,
+            });
+        }
+        specs
+    }
+}
+
+impl NetworkBackend for FlowLevel {
+    fn name(&self) -> &'static str {
+        "flow-level"
+    }
+
+    fn fidelity(&self) -> FidelityMode {
+        FidelityMode::FlowLevel
+    }
+
+    fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {
+        if call.span.is_empty() || call.bytes <= 0.0 {
+            return 0.0;
+        }
+        let phases: Vec<f64> =
+            Self::chunk_plan(call).iter().map(|p| self.congested_time(call, p)).collect();
+        compose_phases(call.policy, &phases, call.chunks)
+    }
+
+    fn drain_overlapped(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        _policy: SchedulingPolicy,
+    ) -> Vec<(u64, f64)> {
+        // In the flow-level model the network multiplexes: every pending
+        // collective transmits at once at its max-min share, so the
+        // LIFO/FIFO admission policy is moot.
+        let Some(first) = jobs.first() else { return Vec::new() };
+        let caps = self.config.dim_capacities(first.call.topology);
+        let chains: Vec<(f64, Vec<FlowSpec>)> = jobs
+            .iter()
+            .map(|j| (j.issue_us.max(0.0), self.chain_of(&j.call)))
+            .collect();
+        let results = FlowSim::new(caps).run(&chains);
+        collapse_per_layer(
+            jobs.iter().zip(results.iter()).map(|(j, r)| (j.layer, r.finish_us)),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::DimKind;
+
+    fn topo() -> Topology {
+        Topology::from_arrays(
+            &[DimKind::Ring, DimKind::Switch],
+            &[4, 8],
+            &[200.0, 100.0],
+            &[0.5, 1.0],
+        )
+    }
+
+    fn span_of(topo: &Topology) -> Vec<(DimCost, usize)> {
+        topo.dims
+            .iter()
+            .enumerate()
+            .map(|(d, nd)| (DimCost::from_dim(nd), d))
+            .collect()
+    }
+
+    fn call<'a>(
+        topo: &'a Topology,
+        span: &'a [(DimCost, usize)],
+        algos: &'a [CollAlgo],
+        bytes: f64,
+        chunks: u32,
+    ) -> CollectiveCall<'a> {
+        CollectiveCall {
+            kind: CollectiveKind::AllReduce,
+            policy: MultiDimPolicy::Baseline,
+            algos,
+            span,
+            topology: topo,
+            bytes,
+            chunks,
+        }
+    }
+
+    #[test]
+    fn uncongested_flow_level_equals_analytical() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let flow = FlowLevel::default();
+        for chunks in [1u32, 2, 8] {
+            let c = call(&topo, &span, &algos, 64e6, chunks);
+            let a = Analytical.collective_time_us(&c);
+            let f = flow.collective_time_us(&c);
+            assert!((a - f).abs() < 1e-6 * a.max(1.0), "chunks={chunks}: {a} vs {f}");
+        }
+    }
+
+    #[test]
+    fn oversubscription_strictly_slows_switch_collectives() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 64e6, 4);
+        let fair = FlowLevel::default().collective_time_us(&c);
+        let congested = FlowLevel::new(FlowLevelConfig::oversubscribed(4.0))
+            .collective_time_us(&c);
+        assert!(congested > fair * 1.01, "congested={congested} fair={fair}");
+    }
+
+    #[test]
+    fn background_load_slows_every_dim() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Ring];
+        let c = call(&topo, &span, &algos, 64e6, 2);
+        let idle = FlowLevel::default().collective_time_us(&c);
+        let busy = FlowLevel::new(FlowLevelConfig::default().with_background_load(0.5))
+            .collective_time_us(&c);
+        assert!(busy > idle * 1.2, "busy={busy} idle={idle}");
+    }
+
+    #[test]
+    fn single_job_drain_matches_serial_drain_uncongested() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 16e6, 1);
+        let job = OverlapCall { layer: 0, issue_us: 10.0, call: c };
+        let serial = Analytical.drain_overlapped(&[job], SchedulingPolicy::Fifo);
+        let flow = FlowLevel::default().drain_overlapped(&[job], SchedulingPolicy::Fifo);
+        assert_eq!(serial.len(), 1);
+        assert_eq!(flow.len(), 1);
+        assert!(
+            (serial[0].1 - flow[0].1).abs() < 1e-6 * serial[0].1,
+            "serial={} flow={}",
+            serial[0].1,
+            flow[0].1
+        );
+    }
+
+    #[test]
+    fn concurrent_jobs_finish_no_earlier_than_alone() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 16e6, 1);
+        let flow = FlowLevel::default();
+        let job0 = OverlapCall { layer: 0, issue_us: 0.0, call: c };
+        let alone = flow.drain_overlapped(&[job0], SchedulingPolicy::Fifo);
+        let jobs: Vec<OverlapCall> = (0..4)
+            .map(|l| OverlapCall { layer: l, issue_us: 0.0, call: c })
+            .collect();
+        let together = flow.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        let last = together.iter().map(|(_, t)| *t).fold(0.0, f64::max);
+        assert!(last >= alone[0].1 - 1e-9, "last={last} alone={}", alone[0].1);
+    }
+
+    #[test]
+    fn serial_drain_fifo_vs_lifo_order() {
+        let jobs = vec![(3u64, 0.0, 10.0), (2, 1.0, 10.0), (1, 2.0, 10.0)];
+        let fifo = serial_drain(&jobs, SchedulingPolicy::Fifo);
+        // FIFO: layer 3 done at 10, layer 2 at 20, layer 1 at 30.
+        assert_eq!(fifo, vec![(1, 30.0), (2, 20.0), (3, 10.0)]);
+        let lifo = serial_drain(&jobs, SchedulingPolicy::Lifo);
+        // LIFO: 3 starts immediately (resource idle), then newest: 1, 2.
+        assert_eq!(lifo, vec![(1, 20.0), (2, 30.0), (3, 10.0)]);
+    }
+
+    #[test]
+    fn fidelity_mode_roundtrips() {
+        for m in FidelityMode::ALL {
+            assert_eq!(FidelityMode::from_name(m.name()), Some(m));
+            assert_eq!(m.default_backend().fidelity(), m);
+        }
+        assert_eq!(FidelityMode::from_name("bogus"), None);
+    }
+}

@@ -1,4 +1,4 @@
-//! Minimal discrete-event engine used by the simulator's network stage.
+//! Minimal discrete-event engine: the `netsim` simulation core.
 //!
 //! A binary-heap event queue over `(time, seq, event)` with a monotonic
 //! sequence number for deterministic FIFO tie-breaking at equal

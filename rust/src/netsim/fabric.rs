@@ -1,0 +1,157 @@
+//! Fabric capacity model for the flow-level backend.
+//!
+//! The analytical cost model credits every dimension its full nominal
+//! per-NPU link bandwidth. Real fabrics fall short of that in two ways
+//! the `FlowLevel` backend can express:
+//!
+//! - **Oversubscription** — a Switch dimension whose crossbar (or leaf/
+//!   spine uplinks) serves only `1/k` of the sum of its edge links. When
+//!   all NPUs of the dimension drive at once — exactly what collectives
+//!   do — each sees `bw / k`.
+//! - **Background load** — a fraction of every link consumed by
+//!   co-tenant traffic (other jobs, storage, control plane), modelled as
+//!   a uniform utilization the simulated job cannot claim.
+
+use crate::topology::{DimKind, Topology};
+
+/// Congestion parameters of the flow-level fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowLevelConfig {
+    /// Oversubscription factor applied to every Switch dimension
+    /// (`>= 1`; 1.0 = full bisection, the analytical assumption).
+    pub switch_oversubscription: f64,
+    /// Fraction of every link's bandwidth consumed by co-tenant traffic
+    /// (`0.0..1.0`).
+    pub background_load: f64,
+    /// Optional per-dimension oversubscription override, outermost
+    /// entries may be omitted (falls back to the kind-based default).
+    pub per_dim_oversubscription: Option<Vec<f64>>,
+}
+
+impl Default for FlowLevelConfig {
+    fn default() -> Self {
+        Self {
+            switch_oversubscription: 1.0,
+            background_load: 0.0,
+            per_dim_oversubscription: None,
+        }
+    }
+}
+
+impl FlowLevelConfig {
+    /// An oversubscribed variant (factor applied to Switch dims).
+    pub fn oversubscribed(factor: f64) -> Self {
+        Self { switch_oversubscription: factor.max(1.0), ..Self::default() }
+    }
+
+    /// A multi-tenant variant: `load` of every link is already in use.
+    pub fn with_background_load(mut self, load: f64) -> Self {
+        self.background_load = load.clamp(0.0, 0.95);
+        self
+    }
+
+    /// The oversubscription factor of topology dimension `dim_idx`.
+    pub fn oversubscription(&self, kind: DimKind, dim_idx: usize) -> f64 {
+        self.per_dim_oversubscription
+            .as_ref()
+            .and_then(|v| v.get(dim_idx))
+            .copied()
+            .unwrap_or(match kind {
+                DimKind::Switch => self.switch_oversubscription,
+                _ => 1.0,
+            })
+            .max(1.0)
+    }
+
+    /// Effective per-NPU service rate (bytes/us) on a dimension whose
+    /// nominal link rate is `nominal_bytes_per_us`.
+    pub fn effective_rate(
+        &self,
+        nominal_bytes_per_us: f64,
+        kind: DimKind,
+        dim_idx: usize,
+    ) -> f64 {
+        let over = self.oversubscription(kind, dim_idx);
+        nominal_bytes_per_us * (1.0 - self.background_load.clamp(0.0, 0.95)) / over
+    }
+
+    /// Per-dimension capacities (bytes/us, per NPU lane) for the whole
+    /// topology — the resource table of the flow simulator.
+    pub fn dim_capacities(&self, topo: &Topology) -> Vec<f64> {
+        topo.dims
+            .iter()
+            .enumerate()
+            .map(|(d, nd)| self.effective_rate(nd.bandwidth_gbps * 1e3, nd.kind, d))
+            .collect()
+    }
+
+    /// True when this config cannot slow any transfer down (the
+    /// flow-level model then matches the analytical one on single
+    /// uncontended collectives).
+    pub fn is_uncongested(&self) -> bool {
+        self.background_load <= 0.0
+            && self.switch_oversubscription <= 1.0
+            && self
+                .per_dim_oversubscription
+                .as_ref()
+                .map(|v| v.iter().all(|&x| x <= 1.0))
+                .unwrap_or(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{DimKind, NetworkDim};
+
+    fn topo() -> Topology {
+        Topology::new(vec![
+            NetworkDim::new(DimKind::Ring, 4, 200.0, 0.5),
+            NetworkDim::new(DimKind::Switch, 8, 100.0, 1.0),
+        ])
+    }
+
+    #[test]
+    fn default_is_uncongested_and_nominal() {
+        let cfg = FlowLevelConfig::default();
+        assert!(cfg.is_uncongested());
+        let caps = cfg.dim_capacities(&topo());
+        assert!((caps[0] - 200e3).abs() < 1e-6);
+        assert!((caps[1] - 100e3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn oversubscription_hits_switch_dims_only() {
+        let cfg = FlowLevelConfig::oversubscribed(4.0);
+        assert!(!cfg.is_uncongested());
+        let caps = cfg.dim_capacities(&topo());
+        assert!((caps[0] - 200e3).abs() < 1e-6, "ring untouched");
+        assert!((caps[1] - 25e3).abs() < 1e-6, "switch divided by 4");
+    }
+
+    #[test]
+    fn background_load_scales_every_dim() {
+        let cfg = FlowLevelConfig::default().with_background_load(0.5);
+        let caps = cfg.dim_capacities(&topo());
+        assert!((caps[0] - 100e3).abs() < 1e-6);
+        assert!((caps[1] - 50e3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_dim_override_wins() {
+        let cfg = FlowLevelConfig {
+            per_dim_oversubscription: Some(vec![2.0]),
+            ..FlowLevelConfig::default()
+        };
+        assert_eq!(cfg.oversubscription(DimKind::Ring, 0), 2.0);
+        // Dim 1 falls back to the kind default.
+        assert_eq!(cfg.oversubscription(DimKind::Switch, 1), 1.0);
+    }
+
+    #[test]
+    fn factors_below_one_clamp_to_one() {
+        let cfg = FlowLevelConfig::oversubscribed(0.5);
+        assert_eq!(cfg.switch_oversubscription, 1.0);
+        assert_eq!(cfg.oversubscription(DimKind::Switch, 3), 1.0);
+    }
+}

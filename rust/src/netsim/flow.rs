@@ -1,0 +1,309 @@
+//! Flow-level network simulation: max-min fair bandwidth sharing driven
+//! by the discrete-event engine.
+//!
+//! The model is the classic fluid approximation used by flow-level
+//! simulators (htsim's flow mode, MAD-Max's contention model): a *flow*
+//! crosses a set of resources (here: topology dimensions), every active
+//! flow receives its max-min fair rate, and rates are recomputed at each
+//! flow start/finish event. Flows compose into *chains* — one flow per
+//! collective phase, executed in sequence — so a multi-dimensional
+//! collective is a chain of per-dimension flows, and concurrent
+//! collectives contend wherever their chains occupy the same dimension
+//! at the same time.
+
+use super::engine::EventQueue;
+
+/// One flow of a chain: a data transfer over a set of resources, paid
+/// after a fixed latency (the collective phase's alpha term).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSpec {
+    /// Resource ids (topology dimension indices) the flow crosses.
+    pub uses: Vec<usize>,
+    /// Payload bytes served at the flow's max-min rate.
+    pub bytes: f64,
+    /// Fixed latency (us) before the data phase starts.
+    pub latency_us: f64,
+}
+
+/// Completion record for one chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChainResult {
+    /// Absolute finish time (us) of the chain's last flow.
+    pub finish_us: f64,
+    /// Total bytes actually served across the chain (byte-conservation
+    /// invariant: equals the sum of the chain's `FlowSpec::bytes`).
+    pub served_bytes: f64,
+}
+
+/// Max-min fair rates by progressive bottleneck filling.
+///
+/// `uses[f]` lists the resource ids flow `f` crosses; `caps[r]` is the
+/// capacity of resource `r` (bytes/us). Returns one rate per flow; flows
+/// crossing no resource get `f64::INFINITY`. The result satisfies the
+/// max-min certificate: every finite-rate flow has a *bottleneck*
+/// resource that is fully allocated and on which no other flow receives
+/// a higher rate.
+pub fn maxmin_rates(uses: &[Vec<usize>], caps: &[f64]) -> Vec<f64> {
+    let n = uses.len();
+    let mut rates = vec![f64::INFINITY; n];
+    let mut frozen: Vec<bool> = uses.iter().map(|u| u.is_empty()).collect();
+    let mut remaining = caps.to_vec();
+    loop {
+        // Unfrozen-flow count per resource.
+        let mut counts = vec![0usize; caps.len()];
+        for (f, u) in uses.iter().enumerate() {
+            if !frozen[f] {
+                for &r in u {
+                    counts[r] += 1;
+                }
+            }
+        }
+        // The bottleneck: the resource with the smallest fair share.
+        let mut bottleneck: Option<(usize, f64)> = None;
+        for r in 0..caps.len() {
+            if counts[r] > 0 {
+                let fair = (remaining[r] / counts[r] as f64).max(0.0);
+                if bottleneck.map(|(_, b)| fair < b).unwrap_or(true) {
+                    bottleneck = Some((r, fair));
+                }
+            }
+        }
+        let Some((r_min, fair)) = bottleneck else { break };
+        for f in 0..n {
+            if !frozen[f] && uses[f].contains(&r_min) {
+                rates[f] = fair;
+                frozen[f] = true;
+                for &r in &uses[f] {
+                    remaining[r] -= fair;
+                }
+            }
+        }
+        remaining[r_min] = 0.0; // kill fp residue
+    }
+    rates
+}
+
+/// The flow-level simulator: fixed resource capacities, chains in,
+/// completion times out.
+#[derive(Debug, Clone)]
+pub struct FlowSim {
+    /// Capacity (bytes/us) per resource id.
+    pub caps: Vec<f64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Chain `chain` begins the data phase of its current flow.
+    Start { chain: usize },
+    /// Chain `chain`'s current flow drains; stale unless `epoch` matches.
+    Finish { chain: usize, epoch: u64 },
+}
+
+impl FlowSim {
+    pub fn new(caps: Vec<f64>) -> Self {
+        Self { caps }
+    }
+
+    /// Run every chain to completion. `chains[i]` = (issue time, flow
+    /// sequence). Returns one [`ChainResult`] per chain, same order.
+    pub fn run(&self, chains: &[(f64, Vec<FlowSpec>)]) -> Vec<ChainResult> {
+        let n = chains.len();
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut step = vec![0usize; n]; // current flow index per chain
+        let mut remaining = vec![0.0f64; n];
+        let mut served = vec![0.0f64; n];
+        let mut rate = vec![0.0f64; n];
+        let mut active = vec![false; n];
+        let mut finish = vec![0.0f64; n];
+        let mut epoch = 0u64;
+        let mut last_t = 0.0f64;
+
+        for (i, (issue, specs)) in chains.iter().enumerate() {
+            let issue = issue.max(0.0);
+            if specs.is_empty() {
+                finish[i] = issue;
+            } else {
+                q.schedule_at(issue + specs[0].latency_us.max(0.0), Ev::Start { chain: i });
+            }
+        }
+
+        while let Some((t, ev)) = q.pop() {
+            // Advance every active flow to `t` at its last computed rate.
+            let dt = t - last_t;
+            if dt > 0.0 {
+                for i in 0..n {
+                    if active[i] && rate[i].is_finite() {
+                        let d = (rate[i] * dt).min(remaining[i]);
+                        remaining[i] -= d;
+                        served[i] += d;
+                    }
+                }
+                last_t = t;
+            }
+
+            match ev {
+                Ev::Start { chain } => {
+                    active[chain] = true;
+                    remaining[chain] = chains[chain].1[step[chain]].bytes.max(0.0);
+                }
+                Ev::Finish { chain, epoch: e } => {
+                    if e != epoch || !active[chain] {
+                        continue; // stale event from a superseded rate set
+                    }
+                    // Credit any fp residue so bytes are conserved.
+                    served[chain] += remaining[chain].max(0.0);
+                    remaining[chain] = 0.0;
+                    active[chain] = false;
+                    step[chain] += 1;
+                    if step[chain] < chains[chain].1.len() {
+                        let lat = chains[chain].1[step[chain]].latency_us.max(0.0);
+                        q.schedule_at(t + lat, Ev::Start { chain });
+                    } else {
+                        finish[chain] = t;
+                    }
+                }
+            }
+
+            // Re-waterfill and reschedule every active flow's finish.
+            epoch += 1;
+            let act: Vec<usize> = (0..n).filter(|&i| active[i]).collect();
+            let uses: Vec<Vec<usize>> =
+                act.iter().map(|&i| chains[i].1[step[i]].uses.clone()).collect();
+            let rates = maxmin_rates(&uses, &self.caps);
+            for (k, &i) in act.iter().enumerate() {
+                rate[i] = rates[k];
+                let dt_fin = if remaining[i] <= 0.0 {
+                    0.0
+                } else if rates[k].is_finite() && rates[k] > 0.0 {
+                    remaining[i] / rates[k]
+                } else if rates[k].is_infinite() {
+                    0.0
+                } else {
+                    f64::INFINITY // starved flow: never finishes
+                };
+                if dt_fin.is_finite() {
+                    q.schedule_at(t + dt_fin, Ev::Finish { chain: i, epoch });
+                }
+            }
+        }
+
+        (0..n)
+            .map(|i| ChainResult { finish_us: finish[i], served_bytes: served[i] })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flow(dims: &[usize], bytes: f64, latency: f64) -> FlowSpec {
+        FlowSpec { uses: dims.to_vec(), bytes, latency_us: latency }
+    }
+
+    #[test]
+    fn single_flow_runs_at_capacity() {
+        let sim = FlowSim::new(vec![100.0]);
+        let out = sim.run(&[(0.0, vec![flow(&[0], 1000.0, 2.0)])]);
+        // 2us latency + 1000 bytes at 100 bytes/us = 12us.
+        assert!((out[0].finish_us - 12.0).abs() < 1e-9, "{}", out[0].finish_us);
+        assert!((out[0].served_bytes - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_flows_share_a_link_fairly() {
+        let sim = FlowSim::new(vec![100.0]);
+        let out = sim.run(&[
+            (0.0, vec![flow(&[0], 1000.0, 0.0)]),
+            (0.0, vec![flow(&[0], 1000.0, 0.0)]),
+        ]);
+        // Equal demands, equal shares: both finish at 2000/100 = 20us.
+        for r in &out {
+            assert!((r.finish_us - 20.0).abs() < 1e-9, "{}", r.finish_us);
+        }
+    }
+
+    #[test]
+    fn short_flow_releases_bandwidth_to_long_flow() {
+        let sim = FlowSim::new(vec![100.0]);
+        let out = sim.run(&[
+            (0.0, vec![flow(&[0], 500.0, 0.0)]),
+            (0.0, vec![flow(&[0], 1500.0, 0.0)]),
+        ]);
+        // Shared at 50 each until the short one drains at t=10; the long
+        // one then runs alone: 10 + (1500-500)/100 = 20.
+        assert!((out[0].finish_us - 10.0).abs() < 1e-9, "{}", out[0].finish_us);
+        assert!((out[1].finish_us - 20.0).abs() < 1e-9, "{}", out[1].finish_us);
+    }
+
+    #[test]
+    fn chains_serialize_their_own_flows() {
+        let sim = FlowSim::new(vec![100.0, 50.0]);
+        let out = sim.run(&[(
+            0.0,
+            vec![flow(&[0], 1000.0, 1.0), flow(&[1], 1000.0, 1.0)],
+        )]);
+        // 1 + 10 on dim 0, then 1 + 20 on dim 1.
+        assert!((out[0].finish_us - 32.0).abs() < 1e-9, "{}", out[0].finish_us);
+        assert!((out[0].served_bytes - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_dims_do_not_contend() {
+        let sim = FlowSim::new(vec![100.0, 100.0]);
+        let out = sim.run(&[
+            (0.0, vec![flow(&[0], 1000.0, 0.0)]),
+            (0.0, vec![flow(&[1], 1000.0, 0.0)]),
+        ]);
+        for r in &out {
+            assert!((r.finish_us - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn late_arrival_shares_from_its_issue_time() {
+        let sim = FlowSim::new(vec![100.0]);
+        let out = sim.run(&[
+            (0.0, vec![flow(&[0], 1000.0, 0.0)]),
+            (5.0, vec![flow(&[0], 1000.0, 0.0)]),
+        ]);
+        // Flow 0 alone for 5us (500 bytes), then both share 50/50.
+        // Flow 0 drains its remaining 500 at t = 5 + 10 = 15; flow 1 then
+        // has 500 left alone: 15 + 5 = 20.
+        assert!((out[0].finish_us - 15.0).abs() < 1e-9, "{}", out[0].finish_us);
+        assert!((out[1].finish_us - 20.0).abs() < 1e-9, "{}", out[1].finish_us);
+    }
+
+    #[test]
+    fn empty_chain_finishes_at_issue() {
+        let sim = FlowSim::new(vec![100.0]);
+        let out = sim.run(&[(7.5, vec![])]);
+        assert_eq!(out[0].finish_us, 7.5);
+        assert_eq!(out[0].served_bytes, 0.0);
+    }
+
+    #[test]
+    fn maxmin_certificate_on_mixed_paths() {
+        // f0 {A}, f1 {A,B}, f2 {B}; cap A=10, B=4.
+        let rates = maxmin_rates(
+            &[vec![0], vec![0, 1], vec![1]],
+            &[10.0, 4.0],
+        );
+        assert!((rates[1] - 2.0).abs() < 1e-9, "{rates:?}");
+        assert!((rates[2] - 2.0).abs() < 1e-9, "{rates:?}");
+        assert!((rates[0] - 8.0).abs() < 1e-9, "{rates:?}");
+    }
+
+    #[test]
+    fn maxmin_empty_uses_is_unbounded() {
+        let rates = maxmin_rates(&[vec![]], &[1.0]);
+        assert!(rates[0].is_infinite());
+    }
+
+    #[test]
+    fn zero_byte_flow_costs_latency_only() {
+        let sim = FlowSim::new(vec![100.0]);
+        let out = sim.run(&[(0.0, vec![flow(&[0], 0.0, 3.0)])]);
+        assert!((out[0].finish_us - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,56 @@
+//! `netsim` — the congestion-aware, event-driven network backend with
+//! pluggable simulation fidelity.
+//!
+//! The original simulator priced every collective with closed-form
+//! alpha-beta costs: ideal per-dimension bandwidth, no contention. That
+//! keeps the DSE hot path fast but makes congestion-driven design points
+//! — oversubscribed switch fabrics, co-tenant traffic, concurrent
+//! gradient collectives fighting for the same dimension — invisible to
+//! the search. This module adds a fidelity ladder behind one trait:
+//!
+//! - [`engine`] — the discrete-event core: a monotonic clock over a
+//!   binary-heap event queue with deterministic tie-breaking.
+//! - [`flow`] — a flow-level network model: flows cross topology
+//!   dimensions, share capacity max-min fairly ([`maxmin_rates`]), and
+//!   progress is re-rated at every flow start/finish event
+//!   ([`FlowSim`]).
+//! - [`fabric`] — what congests: switch oversubscription and co-tenant
+//!   background load ([`FlowLevelConfig`]).
+//! - [`backend`] — the [`NetworkBackend`] trait with the two rungs,
+//!   [`Analytical`] and [`FlowLevel`], selected by [`FidelityMode`].
+//!
+//! Select a backend on the simulator:
+//!
+//! ```no_run
+//! use cosmic::netsim::{FidelityMode, FlowLevel, FlowLevelConfig};
+//! use cosmic::sim::Simulator;
+//! use std::sync::Arc;
+//!
+//! // Cheap analytical screening (the default):
+//! let screen = Simulator::new();
+//! // Congestion-aware re-ranking on a 4:1 oversubscribed fabric:
+//! let rerank = Simulator::new().with_backend(Arc::new(FlowLevel::new(
+//!     FlowLevelConfig::oversubscribed(4.0),
+//! )));
+//! // Or just flip the fidelity rung with defaults:
+//! let flow = Simulator::new().with_fidelity(FidelityMode::FlowLevel);
+//! # let _ = (screen, rerank, flow);
+//! ```
+//!
+//! The same choice is exposed to search agents as the PsA "Network
+//! Fidelity" parameter (`psa::builders::with_fidelity_param`), so a DSE
+//! run can screen candidates analytically and re-rank finalists under
+//! flow-level contention (`Environment::evaluate_with`).
+
+pub mod backend;
+pub mod engine;
+pub mod fabric;
+pub mod flow;
+
+pub use backend::{
+    serial_drain, Analytical, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend,
+    OverlapCall,
+};
+pub use engine::EventQueue;
+pub use fabric::FlowLevelConfig;
+pub use flow::{maxmin_rates, ChainResult, FlowSim, FlowSpec};

@@ -16,6 +16,23 @@ pub mod names {
     pub const TOPOLOGY: &str = "Topology";
     pub const NPUS_PER_DIM: &str = "NPUs per Dim";
     pub const BW_PER_DIM: &str = "Bandwidth per Dim";
+    /// The netsim fidelity knob (optional; see [`super::with_fidelity_param`]).
+    pub const NET_FIDELITY: &str = "Network Fidelity";
+}
+
+/// Append the netsim "Network Fidelity" knob ({Analytical, FlowLevel})
+/// to any schema. The paper's Table 1/4 schemas ship without it (their
+/// cardinalities are asserted against the paper); opting in widens every
+/// agent's action space by one slot and lets the search trade simulation
+/// cost for congestion awareness — the PSS resolves the knob to the
+/// matching [`crate::netsim::NetworkBackend`] at evaluation time.
+pub fn with_fidelity_param(mut schema: Schema) -> Schema {
+    schema.params.push(ParamDef::scalar(
+        names::NET_FIDELITY,
+        Stack::Network,
+        Domain::cats(&["Analytical", "FlowLevel"]),
+    ));
+    schema
 }
 
 /// Table 1's schema: the motivation-section design space for a 4D network
@@ -183,5 +200,17 @@ mod tests {
     fn constraints_present() {
         let s = paper_table4_schema(1024, 4);
         assert_eq!(s.constraints.len(), 2);
+    }
+
+    #[test]
+    fn fidelity_param_appends_one_network_slot() {
+        let base = paper_table4_schema(1024, 4);
+        let with = with_fidelity_param(paper_table4_schema(1024, 4));
+        assert_eq!(with.genome_len(), base.genome_len() + 1);
+        let p = with.param(names::NET_FIDELITY).expect("fidelity knob present");
+        assert_eq!(p.stack, Stack::Network);
+        assert_eq!(p.domain.cardinality(), 2);
+        // The paper schemas stay untouched.
+        assert!(base.param(names::NET_FIDELITY).is_none());
     }
 }

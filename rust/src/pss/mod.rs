@@ -13,6 +13,7 @@
 //!   as input and estimates desired performance metrics".
 
 use crate::collective::{CollAlgo, CollectiveConfig, MultiDimPolicy, SchedulingPolicy};
+use crate::netsim::FidelityMode;
 use crate::psa::builders::names;
 use crate::psa::{DesignPoint, DesignSpace, Domain, Schema, Stack};
 use crate::sim::presets::DIM_LATENCY_US;
@@ -209,6 +210,16 @@ impl Pss {
         cluster.validate()?;
         Ok((cluster, par))
     }
+
+    /// The netsim fidelity a design point asks for. Schemas without the
+    /// optional "Network Fidelity" knob (the paper's Table 1/4 schemas)
+    /// resolve to the analytical rung — the historical behavior.
+    pub fn fidelity_of(&self, point: &DesignPoint) -> FidelityMode {
+        match point.get(names::NET_FIDELITY).and_then(|v| v.as_cat()) {
+            Some(1) => FidelityMode::FlowLevel,
+            _ => FidelityMode::Analytical,
+        }
+    }
 }
 
 /// Index of the closest value in an integer domain.
@@ -307,6 +318,32 @@ mod tests {
         g[0] = 11; // DP = 2048 in pow2(1, 2048)
         let point = p.schema.decode(&g).unwrap();
         assert!(p.materialize(&point).is_err());
+    }
+
+    #[test]
+    fn fidelity_knob_resolves_and_defaults_analytical() {
+        use crate::psa::with_fidelity_param;
+        let cluster = presets::system2();
+        let par = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+        let p = Pss::new(with_fidelity_param(paper_table4_schema(1024, 4)), cluster, par);
+        // Baseline genome: the appended knob defaults to slot 0.
+        let g = p.baseline_genome();
+        assert_eq!(g.len(), p.schema.genome_len());
+        let point = p.schema.decode_valid(&g).unwrap();
+        assert_eq!(p.fidelity_of(&point), FidelityMode::Analytical);
+        // Flip the last slot to FlowLevel.
+        let mut g2 = g.clone();
+        *g2.last_mut().unwrap() = 1;
+        let point2 = p.schema.decode_valid(&g2).unwrap();
+        assert_eq!(p.fidelity_of(&point2), FidelityMode::FlowLevel);
+        // Materialization ignores the knob (same cluster either way).
+        let (c1, _) = p.materialize(&point).unwrap();
+        let (c2, _) = p.materialize(&point2).unwrap();
+        assert_eq!(c1.topology, c2.topology);
+        // Schemas without the knob default to analytical.
+        let bare = pss();
+        let bp = bare.schema.decode_valid(&bare.baseline_genome()).unwrap();
+        assert_eq!(bare.fidelity_of(&bp), FidelityMode::Analytical);
     }
 
     #[test]

@@ -12,27 +12,34 @@
 //!    cost;
 //! 4. microbatches compose into a 1F1B-style pipeline makespan;
 //! 5. *overlappable* gradient collectives (DP / ZeRO) are issued as the
-//!    backward pass retires layers and drain on a serial network resource
-//!    through the LIFO/FIFO [`ChunkScheduler`] — the exposed tail (what
-//!    the next iteration's forward must still wait for, layer by layer)
-//!    is added to the iteration latency;
+//!    backward pass retires layers and drain through the network backend
+//!    — serially under the LIFO/FIFO policy on the [`Analytical`] rung,
+//!    or as concurrent max-min-shared flows on the [`FlowLevel`] rung —
+//!    and the exposed tail (what the next iteration's forward must still
+//!    wait for, layer by layer) is added to the iteration latency;
 //! 6. latency and memory re-scale by the simulated-layer factor
 //!    (Table 2 footnote).
+//!
+//! All network costs route through the pluggable [`NetworkBackend`]
+//! (see [`crate::netsim`]); [`Simulator::with_backend`] /
+//! [`Simulator::with_fidelity`] select the rung.
 
-pub mod engine;
 pub mod presets;
 
-pub use engine::EventQueue;
+pub use crate::netsim::engine;
+pub use crate::netsim::EventQueue;
 
-use crate::collective::{
-    multidim_collective_time_us, CollectiveConfig, CollectiveKind,
-};
+use crate::collective::{CollAlgo, CollectiveConfig, CollectiveKind};
 use crate::compute::{ComputeDevice, MEM_LIMIT_BYTES};
-use crate::topology::Topology;
+use crate::netsim::{
+    Analytical, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend, OverlapCall,
+};
+use crate::topology::{DimCost, Topology};
 use crate::workload::{
     footprint, generate_trace, group_dim_costs, CommGroup, ExecutionMode, MemoryFootprint,
     ModelConfig, Parallelization, TraceOp,
 };
+use std::sync::Arc;
 
 /// A complete cluster design point: the three non-workload stacks.
 #[derive(Debug, Clone, PartialEq)]
@@ -100,25 +107,52 @@ impl SimReport {
 pub struct Simulator {
     /// Per-NPU memory budget in bytes (paper: 24 GB).
     pub mem_budget_bytes: f64,
+    /// The network model (see [`crate::netsim`]); analytical by default.
+    backend: Arc<dyn NetworkBackend>,
 }
 
 impl Default for Simulator {
     fn default() -> Self {
-        Self { mem_budget_bytes: MEM_LIMIT_BYTES }
+        Self { mem_budget_bytes: MEM_LIMIT_BYTES, backend: Arc::new(Analytical) }
     }
-}
-
-/// One overlappable gradient collective pending on the network.
-#[derive(Debug, Clone, Copy)]
-struct GradJob {
-    layer: u64,
-    issue_us: f64,
-    duration_us: f64,
 }
 
 impl Simulator {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Swap the network backend (builder style).
+    pub fn with_backend(mut self, backend: Arc<dyn NetworkBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Select a fidelity rung with its default backend configuration.
+    pub fn with_fidelity(self, mode: FidelityMode) -> Self {
+        self.with_backend(mode.default_backend())
+    }
+
+    /// Select the flow-level backend with an explicit fabric config.
+    pub fn with_flow_config(self, config: crate::netsim::FlowLevelConfig) -> Self {
+        self.with_backend(Arc::new(FlowLevel::new(config)))
+    }
+
+    /// The active network backend.
+    pub fn backend(&self) -> &dyn NetworkBackend {
+        self.backend.as_ref()
+    }
+
+    /// The communicator group's rank-space stride and size.
+    fn group_stride_size(par: &Parallelization, group: CommGroup) -> (u64, u64) {
+        let strides = par.strides();
+        match group {
+            CommGroup::Tp => (strides.tp, par.tp),
+            CommGroup::Sp => (strides.sp, par.sp),
+            CommGroup::Dp => (strides.dp, par.dp),
+            // [TP, SP, DP, PP] layout makes DPxSP contiguous at SP's stride.
+            CommGroup::DpSp => (strides.sp, par.sp * par.dp),
+        }
     }
 
     /// Cost of one collective of `kind` over the communicator `group`.
@@ -130,14 +164,7 @@ impl Simulator {
         group: CommGroup,
         bytes: f64,
     ) -> f64 {
-        let strides = par.strides();
-        let (stride, size) = match group {
-            CommGroup::Tp => (strides.tp, par.tp),
-            CommGroup::Sp => (strides.sp, par.sp),
-            CommGroup::Dp => (strides.dp, par.dp),
-            // [TP, SP, DP, PP] layout makes DPxSP contiguous at SP's stride.
-            CommGroup::DpSp => (strides.sp, par.sp * par.dp),
-        };
+        let (stride, size) = Self::group_stride_size(par, group);
         if size <= 1 {
             return 0.0;
         }
@@ -145,16 +172,16 @@ impl Simulator {
         if span.is_empty() {
             return 0.0;
         }
-        let dims: Vec<_> = span.iter().map(|(c, _)| *c).collect();
         let algos: Vec<_> = span.iter().map(|(_, d)| cluster.collectives.algorithms[*d]).collect();
-        multidim_collective_time_us(
+        self.backend.collective_time_us(&CollectiveCall {
             kind,
-            cluster.collectives.multidim,
-            &algos,
-            &dims,
+            policy: cluster.collectives.multidim,
+            algos: &algos,
+            span: &span,
+            topology: &cluster.topology,
             bytes,
-            cluster.collectives.chunks,
-        )
+            chunks: cluster.collectives.chunks,
+        })
     }
 
     /// Point-to-point transfer between adjacent pipeline stages.
@@ -265,26 +292,49 @@ impl Simulator {
         // --- overlappable gradient sync (once per iteration) ---
         // The backward pass of the *last* microbatch retires layers in
         // reverse order; each retirement issues that layer's gradient
-        // collective(s). They drain on a serial network resource under
-        // the LIFO/FIFO chunk scheduler; the next iteration's forward
-        // needs layer l's gradients after a slack of l/L * f_micro.
+        // collective(s). The network backend drains them — serially
+        // under the LIFO/FIFO policy (analytical) or as concurrent
+        // max-min-shared flows (flow-level); the next iteration's
+        // forward needs layer l's gradients after a slack of l/L * f_micro.
         let layers = stage.layers.max(1);
         let mut exposed_us = 0.0;
         if !grad_bytes.is_empty() && matches!(mode, ExecutionMode::Training) {
             let bwd_start = pipeline_us - b_micro;
-            let jobs: Vec<GradJob> = grad_bytes
+            // Resolve each distinct communicator group's span once.
+            let mut group_spans: Vec<(CommGroup, Vec<(DimCost, usize)>, Vec<CollAlgo>)> =
+                Vec::with_capacity(2);
+            for (_, _, group, _) in &grad_bytes {
+                if !group_spans.iter().any(|(g, _, _)| g == group) {
+                    let (stride, size) = Self::group_stride_size(par, *group);
+                    let span = group_dim_costs(&cluster.topology, stride, size);
+                    let algos: Vec<CollAlgo> =
+                        span.iter().map(|(_, d)| cluster.collectives.algorithms[*d]).collect();
+                    group_spans.push((*group, span, algos));
+                }
+            }
+            let jobs: Vec<OverlapCall> = grad_bytes
                 .iter()
                 .map(|(layer, kind, group, bytes)| {
+                    let (_, span, algos) =
+                        group_spans.iter().find(|(g, _, _)| g == group).unwrap();
                     let frac = (layers - layer) as f64 / layers as f64;
-                    GradJob {
+                    OverlapCall {
                         layer: *layer,
                         issue_us: bwd_start + frac * b_compute,
-                        duration_us: coll_cost(*kind, *group, *bytes),
+                        call: CollectiveCall {
+                            kind: *kind,
+                            policy: cluster.collectives.multidim,
+                            algos,
+                            span,
+                            topology: &cluster.topology,
+                            bytes: *bytes,
+                            chunks: cluster.collectives.chunks,
+                        },
                     }
                 })
                 .collect();
             let completions =
-                drain_gradient_network(&jobs, cluster.collectives.scheduling.into(), cluster);
+                self.backend.drain_overlapped(&jobs, cluster.collectives.scheduling);
             // Exposed tail: completion minus (iteration end + fwd slack).
             for (layer, done_us) in completions {
                 let slack = layer as f64 / layers as f64 * f_micro;
@@ -313,96 +363,6 @@ impl Simulator {
             achieved_tflops,
         })
     }
-}
-
-/// LIFO vs FIFO at the gradient network (narrowed from the collective
-/// scheduler's policy enum to keep this module self-contained).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum DrainPolicy {
-    Lifo,
-    Fifo,
-}
-
-impl From<crate::collective::SchedulingPolicy> for DrainPolicy {
-    fn from(p: crate::collective::SchedulingPolicy) -> Self {
-        match p {
-            crate::collective::SchedulingPolicy::Lifo => DrainPolicy::Lifo,
-            crate::collective::SchedulingPolicy::Fifo => DrainPolicy::Fifo,
-        }
-    }
-}
-
-/// Drain of gradient collectives on a serial network resource. Jobs
-/// arrive at their issue times; whenever the link frees, the scheduler
-/// picks the next pending job per the policy. Returns per-layer
-/// completion times (a layer may have several collectives — ZeRO's
-/// RS+AG — completion is the max).
-///
-/// Implemented as a sorted sweep over arrival times rather than a
-/// general event heap: with one serial resource the next event is
-/// always either the next arrival or the current job's completion
-/// (EXPERIMENTS.md §Perf iteration 2 — removes the per-run heap).
-fn drain_gradient_network(
-    jobs: &[GradJob],
-    policy: DrainPolicy,
-    _cluster: &ClusterConfig,
-) -> Vec<(u64, f64)> {
-    let mut order: Vec<usize> = (0..jobs.len()).collect();
-    order.sort_by(|&a, &b| jobs[a].issue_us.partial_cmp(&jobs[b].issue_us).unwrap());
-    let mut pending: Vec<usize> = Vec::with_capacity(jobs.len());
-    let mut done: Vec<(u64, f64)> = Vec::with_capacity(jobs.len());
-    let mut next_arrival = 0usize;
-    let mut now;
-    let mut busy_until = f64::NEG_INFINITY;
-    let mut current: Option<usize> = None;
-    loop {
-        // Advance to the next event: arrival or link-free.
-        let arrival_t = order.get(next_arrival).map(|&i| jobs[i].issue_us.max(0.0));
-        let free_t = current.map(|_| busy_until);
-        now = match (arrival_t, free_t) {
-            (Some(a), Some(f)) if a < f => {
-                pending.push(order[next_arrival]);
-                next_arrival += 1;
-                a
-            }
-            (_, Some(f)) => {
-                if let Some(i) = current.take() {
-                    done.push((jobs[i].layer, f));
-                }
-                f
-            }
-            (Some(a), None) => {
-                pending.push(order[next_arrival]);
-                next_arrival += 1;
-                a
-            }
-            (None, None) => break,
-        };
-        if current.is_none() && !pending.is_empty() {
-            let idx = match policy {
-                DrainPolicy::Fifo => 0,
-                DrainPolicy::Lifo => pending.len() - 1,
-            };
-            let i = pending.remove(idx);
-            current = Some(i);
-            busy_until = now + jobs[i].duration_us.max(0.0);
-        }
-    }
-    // Collapse to per-layer max completion (layer count is tiny; linear
-    // scan beats a HashMap here).
-    let mut out: Vec<(u64, f64)> = Vec::with_capacity(done.len());
-    for (layer, t) in done {
-        match out.iter_mut().find(|(l, _)| *l == layer) {
-            Some((_, e)) => {
-                if t > *e {
-                    *e = t;
-                }
-            }
-            None => out.push((layer, t)),
-        }
-    }
-    out.sort_by_key(|(l, _)| *l);
-    out
 }
 
 #[cfg(test)]
@@ -563,18 +523,54 @@ mod tests {
     }
 
     #[test]
-    fn drain_network_fifo_orders_by_issue() {
-        let jobs = vec![
-            GradJob { layer: 3, issue_us: 0.0, duration_us: 10.0 },
-            GradJob { layer: 2, issue_us: 1.0, duration_us: 10.0 },
-            GradJob { layer: 1, issue_us: 2.0, duration_us: 10.0 },
-        ];
+    fn flow_level_backend_matches_analytical_when_uncongested() {
+        // Blocking-collective-only workload (TP, no DP gradient drain):
+        // the flow-level rung must reproduce the analytical numbers.
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 1, 1, 1, false); // tp=64, no overlappable grads
         let c = small_cluster(SchedulingPolicy::Fifo);
-        let fifo = drain_gradient_network(&jobs, DrainPolicy::Fifo, &c);
-        // FIFO: layer 3 done at 10, layer 2 at 20, layer 1 at 30.
-        assert_eq!(fifo, vec![(1, 30.0), (2, 20.0), (3, 10.0)]);
-        let lifo = drain_gradient_network(&jobs, DrainPolicy::Lifo, &c);
-        // LIFO: 3 starts immediately (link idle), then newest-first: 1, 2.
-        assert_eq!(lifo, vec![(1, 20.0), (2, 30.0), (3, 10.0)]);
+        let a = Simulator::new().run(&c, &m, &p, 64, ExecutionMode::Training).unwrap();
+        let f = Simulator::new()
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .run(&c, &m, &p, 64, ExecutionMode::Training)
+            .unwrap();
+        let rel = (a.latency_us - f.latency_us).abs() / a.latency_us;
+        assert!(rel < 1e-9, "analytical={} flow={}", a.latency_us, f.latency_us);
+    }
+
+    #[test]
+    fn oversubscribed_fabric_is_strictly_slower() {
+        use crate::netsim::FlowLevelConfig;
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        // TP spans both dims (tp=64) -> every blocking all-reduce
+        // crosses the Switch dim, so oversubscription must show up.
+        let p = par(64, 1, 1, 1, false);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let fair = Simulator::new()
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .run(&c, &m, &p, 64, ExecutionMode::Training)
+            .unwrap();
+        let congested = Simulator::new()
+            .with_flow_config(FlowLevelConfig::oversubscribed(8.0))
+            .run(&c, &m, &p, 64, ExecutionMode::Training)
+            .unwrap();
+        assert!(
+            congested.comm_blocking_us > fair.comm_blocking_us,
+            "congested={} fair={}",
+            congested.comm_blocking_us,
+            fair.comm_blocking_us
+        );
+        assert!(congested.latency_us > fair.latency_us);
+    }
+
+    #[test]
+    fn flow_level_drain_is_deterministic() {
+        let m = wl::gpt3_13b().with_simulated_layers(8);
+        let p = par(64, 64, 1, 1, true);
+        let c = small_cluster(SchedulingPolicy::Lifo);
+        let sim = Simulator::new().with_fidelity(crate::netsim::FidelityMode::FlowLevel);
+        let a = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        let b = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        assert_eq!(a, b);
     }
 }

@@ -1,10 +1,13 @@
 //! Small self-contained utilities standing in for crates that are not
 //! available in this offline build (see DESIGN.md §Substitutions):
 //! [`rng`] replaces `rand`/`rand_chacha`, [`prop`] replaces `proptest`,
-//! [`stats`] provides the summary statistics the bench harness prints.
+//! [`par`] replaces `rayon`, [`stats`] provides the summary statistics
+//! the bench harness prints.
 
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
+pub use par::parallel_map;
 pub use rng::Rng;

@@ -1,0 +1,79 @@
+//! Minimal data-parallel map over OS threads — the offline stand-in for
+//! `rayon` (see DESIGN.md §Substitutions). Built on `std::thread::scope`
+//! so the closure may borrow the caller's environment; work is pulled
+//! from a shared atomic index, which balances the uneven per-item cost
+//! of simulator evaluations.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` on up to `available_parallelism` threads,
+/// preserving order. Falls back to a plain serial map for tiny inputs.
+/// Panics in `f` propagate to the caller.
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items.len());
+    if threads <= 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    std::thread::scope(|s| {
+        let next = &next;
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut local: Vec<(usize, U)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, u) in h.join().expect("parallel_map worker panicked") {
+                out[i] = Some(u);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("parallel_map missed a slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let none: Vec<u64> = vec![];
+        assert!(parallel_map(&none, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[42u64], |&x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn closure_may_borrow_environment() {
+        let offset = 10u64;
+        let out = parallel_map(&[1u64, 2, 3], |&x| x + offset);
+        assert_eq!(out, vec![11, 12, 13]);
+    }
+}

@@ -3,8 +3,9 @@
 
 use cosmic::agents::AgentKind;
 use cosmic::dse::{DseConfig, DseRunner, Objective, WorkloadSpec};
-use cosmic::harness::{make_env, median_baseline_par, scoped_search};
-use cosmic::psa::Stack;
+use cosmic::harness::{make_env, make_env_with_fidelity, median_baseline_par, scoped_search};
+use cosmic::netsim::{FidelityMode, FlowLevelConfig};
+use cosmic::psa::{builders::names, Stack};
 use cosmic::pss::SearchScope;
 use cosmic::sim::presets;
 use cosmic::workload::models::presets as wl;
@@ -95,6 +96,47 @@ fn full_stack_beats_or_ties_single_stacks_with_budget() {
     assert!(
         best_full >= best_single * 0.95,
         "full-stack {best_full:.3e} clearly lost to best single-stack {best_single:.3e}"
+    );
+}
+
+#[test]
+fn fidelity_knob_searches_and_reranks_end_to_end() {
+    // The netsim acceptance path: search with the PsA fidelity knob in
+    // the action space, then re-rank the winner under flow-level
+    // contention on an oversubscribed fabric.
+    let model = wl::gpt3_13b().with_simulated_layers(2);
+    let mut env = make_env_with_fidelity(
+        presets::system2(),
+        vec![WorkloadSpec::training(model, 2048)],
+        Objective::PerfPerBwPerNpu,
+    )
+    .with_flow_config(FlowLevelConfig::oversubscribed(4.0));
+    assert!(env.pss.schema.param(names::NET_FIDELITY).is_some());
+
+    let r = DseRunner::new(DseConfig::new(AgentKind::Ga, 120, 7), SearchScope::FullStack)
+        .run(&mut env);
+    assert!(r.best_reward > 0.0, "search with fidelity knob found nothing valid");
+    assert_eq!(r.best_genome.len(), env.pss.schema.genome_len());
+    assert!(!r.best_reports.is_empty(), "winner's reports must re-materialize");
+
+    // Re-rank the winner at both fidelities: congestion on a 4:1
+    // oversubscribed switch fabric can only hurt.
+    let screened = env.evaluate_with(&r.best_genome, FidelityMode::Analytical);
+    let reranked = env.evaluate_with(&r.best_genome, FidelityMode::FlowLevel);
+    assert!(screened.invalid_reason.is_none());
+    assert!(reranked.invalid_reason.is_none());
+    let lat = |o: &cosmic::dse::StepOutcome| -> f64 {
+        o.reports.iter().map(|rep| rep.latency_us).sum()
+    };
+    // The winner may have searched its way onto a pure-ring fabric (no
+    // oversubscribed switch dims), where the rungs agree; otherwise
+    // congestion hurts. Either way flow-level must not come out
+    // meaningfully *faster* than the analytical screen.
+    assert!(
+        lat(&reranked) >= lat(&screened) * 0.95,
+        "flow-level on an oversubscribed fabric came out faster: {} vs {}",
+        lat(&reranked),
+        lat(&screened)
     );
 }
 

@@ -4,10 +4,12 @@
 
 use cosmic::collective::{
     collective_time_us, multidim_collective_time_us, CollAlgo, CollectiveKind, MultiDimPolicy,
+    SchedulingPolicy,
 };
+use cosmic::netsim::{maxmin_rates, EventQueue, FidelityMode, FlowSim, FlowSpec};
 use cosmic::psa::paper_table4_schema;
 use cosmic::pss::{Pss, SearchScope};
-use cosmic::sim::{presets, Simulator};
+use cosmic::sim::{presets, ClusterConfig, Simulator};
 use cosmic::topology::{DimCost, DimKind, NetworkDim, Topology};
 use cosmic::util::prop::check;
 use cosmic::util::Rng;
@@ -188,6 +190,204 @@ fn prop_decoded_points_satisfy_constraints_and_materialize() {
             return Err(format!("npus mismatch: {} vs {}", cluster.npus(), par.npus()));
         }
         cluster.validate().map_err(|e| e)?;
+        Ok(())
+    });
+}
+
+// --- netsim event-engine and flow-model invariants ---
+
+#[test]
+fn prop_event_queue_pops_in_monotone_time_order() {
+    check("event queue monotone", 300, |rng| {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        let n = 1 + rng.gen_range(64);
+        for i in 0..n {
+            q.schedule_at(rng.gen_f64() * 1e6, i);
+        }
+        let mut last = f64::NEG_INFINITY;
+        let mut popped = 0;
+        while let Some((t, _)) = q.pop() {
+            if t < last {
+                return Err(format!("time went backwards: {last} -> {t}"));
+            }
+            if (q.now_us() - t).abs() > 0.0 {
+                return Err("clock did not advance to popped event".into());
+            }
+            last = t;
+            popped += 1;
+        }
+        if popped != n {
+            return Err(format!("popped {popped} of {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_maxmin_rates_respect_capacity_and_bottleneck_certificate() {
+    check("max-min fairness", 300, |rng| {
+        let resources = 1 + rng.gen_range(4);
+        let caps: Vec<f64> = (0..resources).map(|_| 10.0 + rng.gen_f64() * 990.0).collect();
+        let flows = 1 + rng.gen_range(12);
+        let uses: Vec<Vec<usize>> = (0..flows)
+            .map(|_| {
+                let k = 1 + rng.gen_range(resources);
+                let mut dims: Vec<usize> = (0..resources).collect();
+                // Take a random k-subset.
+                for i in 0..k {
+                    let j = i + rng.gen_range(resources - i);
+                    dims.swap(i, j);
+                }
+                dims.truncate(k);
+                dims
+            })
+            .collect();
+        let rates = maxmin_rates(&uses, &caps);
+        // (1) capacities respected.
+        for r in 0..resources {
+            let sum: f64 = uses
+                .iter()
+                .zip(&rates)
+                .filter(|(u, _)| u.contains(&r))
+                .map(|(_, x)| *x)
+                .sum();
+            if sum > caps[r] * (1.0 + 1e-9) + 1e-9 {
+                return Err(format!("resource {r}: allocated {sum} > cap {}", caps[r]));
+            }
+        }
+        // (2) max-min certificate: every flow has a saturated bottleneck
+        // resource on which it receives the maximum rate.
+        for (f, u) in uses.iter().enumerate() {
+            let ok = u.iter().any(|&r| {
+                let on_r: Vec<f64> = uses
+                    .iter()
+                    .zip(&rates)
+                    .filter(|(v, _)| v.contains(&r))
+                    .map(|(_, x)| *x)
+                    .collect();
+                let sum: f64 = on_r.iter().sum();
+                let max = on_r.iter().cloned().fold(0.0, f64::max);
+                sum >= caps[r] * (1.0 - 1e-9) - 1e-9 && rates[f] >= max * (1.0 - 1e-9)
+            });
+            if !ok {
+                return Err(format!("flow {f} has no bottleneck: rates {rates:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flow_sim_conserves_bytes_and_respects_latency() {
+    check("flow sim byte conservation", 200, |rng| {
+        let resources = 1 + rng.gen_range(4);
+        let caps: Vec<f64> = (0..resources).map(|_| 10.0 + rng.gen_f64() * 990.0).collect();
+        let chains: Vec<(f64, Vec<FlowSpec>)> = (0..1 + rng.gen_range(8))
+            .map(|_| {
+                let issue = rng.gen_f64() * 100.0;
+                let specs: Vec<FlowSpec> = (0..1 + rng.gen_range(4))
+                    .map(|_| FlowSpec {
+                        uses: vec![rng.gen_range(resources)],
+                        bytes: rng.gen_f64() * 1e6,
+                        latency_us: rng.gen_f64() * 10.0,
+                    })
+                    .collect();
+                (issue, specs)
+            })
+            .collect();
+        let results = FlowSim::new(caps).run(&chains);
+        for ((issue, specs), r) in chains.iter().zip(&results) {
+            let want: f64 = specs.iter().map(|s| s.bytes).sum();
+            let min_latency: f64 = specs.iter().map(|s| s.latency_us).sum();
+            if (r.served_bytes - want).abs() > 1e-6 * want.max(1.0) {
+                return Err(format!("served {} of {want} bytes", r.served_bytes));
+            }
+            if r.finish_us + 1e-9 < issue + min_latency {
+                return Err(format!(
+                    "finished {} before issue {} + latency {min_latency}",
+                    r.finish_us, issue
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flow_level_matches_analytical_on_single_flow_configs() {
+    // One gradient collective at a time, chunks=1, uncongested fabric:
+    // the flow-level rung must agree with the analytical one.
+    let sim_a = Simulator::new();
+    let sim_f = Simulator::new().with_fidelity(FidelityMode::FlowLevel);
+    check("flow-level == analytical single-flow", 40, |rng| {
+        let mut cluster: ClusterConfig = presets::by_index(1 + rng.gen_range(3)).unwrap();
+        cluster.collectives.chunks = 1;
+        cluster.collectives.scheduling =
+            *rng.choose(&[SchedulingPolicy::Lifo, SchedulingPolicy::Fifo]);
+        let npus = cluster.npus();
+        let model = wl::all()[rng.gen_range(4)].clone().with_simulated_layers(1);
+        let dp = (1u64 << (1 + rng.gen_range(6))).min(npus);
+        // dense DP gradients (one all-reduce for the single layer) plus
+        // TP blocking collectives from the residual.
+        let par = match Parallelization::derive(npus, dp, 1, 1, false) {
+            Ok(p) => p,
+            Err(_) => return Ok(()),
+        };
+        let batch = 2048;
+        let (a, f) = match (
+            sim_a.run(&cluster, &model, &par, batch, ExecutionMode::Training),
+            sim_f.run(&cluster, &model, &par, batch, ExecutionMode::Training),
+        ) {
+            (Ok(a), Ok(f)) => (a, f),
+            (Err(_), Err(_)) => return Ok(()), // invalid for both alike
+            (a, f) => {
+                return Err(format!("validity disagrees: {:?} vs {:?}", a.is_ok(), f.is_ok()))
+            }
+        };
+        let rel = (a.latency_us - f.latency_us).abs() / a.latency_us.max(1e-12);
+        if rel > 0.05 {
+            return Err(format!(
+                "latency diverged {:.2}%: analytical={} flow={}",
+                rel * 100.0,
+                a.latency_us,
+                f.latency_us
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_congestion_never_speeds_up_collectives() {
+    use cosmic::netsim::{CollectiveCall, FlowLevel, FlowLevelConfig, NetworkBackend};
+    check("oversubscription monotone", 200, |rng| {
+        let topo = random_topology(rng);
+        let span: Vec<(DimCost, usize)> = topo
+            .dims
+            .iter()
+            .enumerate()
+            .map(|(d, nd)| (DimCost::from_dim(nd), d))
+            .collect();
+        let algos: Vec<CollAlgo> =
+            (0..span.len()).map(|_| *rng.choose(&CollAlgo::ALL)).collect();
+        let call = CollectiveCall {
+            kind: *rng.choose(&CollectiveKind::ALL),
+            policy: *rng.choose(&MultiDimPolicy::ALL),
+            algos: &algos,
+            span: &span,
+            topology: &topo,
+            bytes: 1e3 + rng.gen_f64() * 1e9,
+            chunks: 1 + rng.gen_range(16) as u32,
+        };
+        let fair = FlowLevel::default().collective_time_us(&call);
+        let factor = 1.0 + rng.gen_f64() * 7.0;
+        let congested = FlowLevel::new(
+            FlowLevelConfig::oversubscribed(factor).with_background_load(rng.gen_f64() * 0.5),
+        )
+        .collective_time_us(&call);
+        if congested + 1e-9 < fair {
+            return Err(format!("congested {congested} < fair {fair} (factor {factor})"));
+        }
         Ok(())
     });
 }
