@@ -83,76 +83,90 @@ pub fn phase_plan(
     dims: &[DimCost],
     chunk_bytes: f64,
 ) -> Vec<PhaseSpec> {
+    let mut out = Vec::with_capacity(dims.len() * 2);
+    phase_plan_into(kind, algos, dims, chunk_bytes, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`phase_plan`]: clears and fills a
+/// caller-owned buffer, so DSE hot loops can reuse one allocation across
+/// millions of collective pricings.
+pub fn phase_plan_into(
+    kind: CollectiveKind,
+    algos: &[CollAlgo],
+    dims: &[DimCost],
+    chunk_bytes: f64,
+    out: &mut Vec<PhaseSpec>,
+) {
     assert_eq!(algos.len(), dims.len(), "one algorithm per spanned dimension");
+    out.clear();
     match kind {
         CollectiveKind::AllReduce => {
             // Hierarchical schedule: RS inward over dims 0..D, then AG
             // outward. After the RS on dim d the live shard shrinks by n_d.
-            let mut phases = Vec::with_capacity(dims.len() * 2);
             let mut size = chunk_bytes;
             for (d, dim) in dims.iter().enumerate() {
-                phases.push(phase_of(algos[d], CollectiveKind::ReduceScatter, dim, d, size));
+                out.push(phase_of(algos[d], CollectiveKind::ReduceScatter, dim, d, size));
                 size /= dim.npus as f64;
             }
             for (d, dim) in dims.iter().enumerate().rev() {
                 size *= dim.npus as f64;
-                phases.push(phase_of(algos[d], CollectiveKind::AllGather, dim, d, size));
+                out.push(phase_of(algos[d], CollectiveKind::AllGather, dim, d, size));
             }
-            phases
         }
         CollectiveKind::ReduceScatter => {
             let mut size = chunk_bytes;
-            dims.iter()
-                .enumerate()
-                .map(|(d, dim)| {
-                    let p = phase_of(algos[d], kind, dim, d, size);
-                    size /= dim.npus as f64;
-                    p
-                })
-                .collect()
+            for (d, dim) in dims.iter().enumerate() {
+                out.push(phase_of(algos[d], kind, dim, d, size));
+                size /= dim.npus as f64;
+            }
         }
         CollectiveKind::AllGather => {
             // Gather outward: the shard grows through the dims.
             let total: f64 = dims.iter().map(|d| d.npus as f64).product();
             let mut size = chunk_bytes / total;
-            dims.iter()
-                .enumerate()
-                .rev()
-                .map(|(d, dim)| {
-                    size *= dim.npus as f64;
-                    phase_of(algos[d], kind, dim, d, size)
-                })
-                .collect()
+            for (d, dim) in dims.iter().enumerate().rev() {
+                size *= dim.npus as f64;
+                out.push(phase_of(algos[d], kind, dim, d, size));
+            }
         }
         CollectiveKind::AllToAll => {
             // Personalized exchange phase per dimension on the full chunk.
-            dims.iter()
-                .enumerate()
-                .map(|(d, dim)| phase_of(algos[d], kind, dim, d, chunk_bytes))
-                .collect()
+            for (d, dim) in dims.iter().enumerate() {
+                out.push(phase_of(algos[d], kind, dim, d, chunk_bytes));
+            }
         }
     }
-}
-
-fn one_sided_phases(
-    kind: CollectiveKind,
-    algos: &[CollAlgo],
-    dims: &[DimCost],
-    chunk_bytes: f64,
-) -> Vec<f64> {
-    phase_plan(kind, algos, dims, chunk_bytes)
-        .iter()
-        .map(|p| p.alpha_us + p.wire_bytes / dims[p.span_dim].beta_bytes_per_us)
-        .collect()
 }
 
 /// Compose per-phase durations into the collective's total time under a
 /// multi-dim policy, with `chunks` pipelined pieces (each phase duration
 /// must already be the *per-chunk* time).
 pub fn compose_phases(policy: MultiDimPolicy, phases: &[f64], chunks: u32) -> f64 {
+    compose_durations(policy, phases.iter().copied(), chunks)
+}
+
+/// Streaming core of [`compose_phases`]: folds the duration sequence into
+/// (sum, bottleneck, largest-below-bottleneck) in one pass, so callers
+/// never materialize a per-phase duration buffer.
+fn compose_durations(
+    policy: MultiDimPolicy,
+    durations: impl Iterator<Item = f64>,
+    chunks: u32,
+) -> f64 {
     let chunks = chunks.max(1) as f64;
-    let first: f64 = phases.iter().sum();
-    let bottleneck = phases.iter().cloned().fold(0.0, f64::max);
+    let mut first = 0.0f64;
+    let mut bottleneck = 0.0f64;
+    let mut fill = 0.0f64; // largest duration strictly below the bottleneck
+    for d in durations {
+        first += d;
+        if d > bottleneck {
+            fill = bottleneck;
+            bottleneck = d;
+        } else if d < bottleneck && d > fill {
+            fill = d;
+        }
+    }
     match policy {
         // Baseline: chunks pipeline through strictly sequential phases —
         // classic pipeline makespan: one full pass plus (chunks-1) times
@@ -163,10 +177,7 @@ pub fn compose_phases(policy: MultiDimPolicy, phases: &[f64], chunks: u32) -> f6
         // pipelined): steady state is chunks x the bottleneck dimension,
         // and the fill/drain is the largest single non-bottleneck phase
         // (they overlap each other), not their sum.
-        MultiDimPolicy::BlueConnect => {
-            let fill = phases.iter().cloned().filter(|p| *p < bottleneck).fold(0.0, f64::max);
-            bottleneck * chunks + fill
-        }
+        MultiDimPolicy::BlueConnect => bottleneck * chunks + fill,
     }
 }
 
@@ -189,8 +200,21 @@ pub fn multidim_collective_time_us(
     }
     let chunks = chunks.max(1);
     let chunk_bytes = bytes / chunks as f64;
-    let phases = one_sided_phases(kind, algos, dims, chunk_bytes);
-    compose_phases(policy, &phases, chunks)
+    PLAN_BUF.with(|buf| {
+        let mut plan = buf.borrow_mut();
+        phase_plan_into(kind, algos, dims, chunk_bytes, &mut plan);
+        compose_durations(
+            policy,
+            plan.iter().map(|p| p.alpha_us + p.wire_bytes / dims[p.span_dim].beta_bytes_per_us),
+            chunks,
+        )
+    })
+}
+
+thread_local! {
+    // Reusable phase buffer for the DSE hot path: one collective pricing
+    // per cache miss, millions per search, zero allocations after warmup.
+    static PLAN_BUF: std::cell::RefCell<Vec<PhaseSpec>> = std::cell::RefCell::new(Vec::new());
 }
 
 /// Convenience: resolve the [`DimCost`]s for a contiguous span of topology

@@ -1,0 +1,278 @@
+//! Cross-evaluation caching: the DSE throughput layer.
+//!
+//! A full-stack search evaluates millions of genomes, but the expensive
+//! artifacts inside one evaluation are shared far more widely than the
+//! genome memo can see:
+//!
+//! - **Traces** depend only on `(model, parallelization, batch, mode)` —
+//!   every genome that differs only in topology / collective / fidelity
+//!   knobs instantiates the *same* workload trace.
+//! - **Collective costs** depend only on the [`crate::sim::CollKey`]
+//!   tuple (backend tag, topology fingerprint, algorithm assignment,
+//!   kind, communicator stride/size, bytes, chunks) — every layer of
+//!   every trace, across every genome with the same network/collective
+//!   stack, re-prices the same handful of collectives.
+//!
+//! [`EvalCache`] memoizes both, sharded behind `Mutex`es so
+//! `Environment::evaluate_batch` worker threads hit disjoint locks. The
+//! cache is *exact*: keys cover every input the cached value depends
+//! on, so cached and uncached evaluation produce bit-identical
+//! [`crate::dse::StepOutcome`]s (asserted by the end-to-end tests).
+
+use crate::sim::{CollCostMemo, CollKey};
+use crate::workload::{generate_trace, ExecutionMode, ModelConfig, Parallelization, Trace};
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shard count (power of two; shards are `Mutex`-guarded so concurrent
+/// evaluation threads mostly hit disjoint locks).
+const SHARDS: usize = 16;
+
+/// Everything the Workload Trace Generator reads, fingerprinted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct TraceKey {
+    model: u64,
+    dp: u64,
+    sp: u64,
+    pp: u64,
+    tp: u64,
+    weight_sharded: bool,
+    batch: u64,
+    mode: ExecutionMode,
+}
+
+impl TraceKey {
+    fn new(model: &ModelConfig, par: &Parallelization, batch: u64, mode: ExecutionMode) -> Self {
+        Self {
+            model: model.fingerprint(),
+            dp: par.dp,
+            sp: par.sp,
+            pp: par.pp,
+            tp: par.tp,
+            weight_sharded: par.weight_sharded,
+            batch,
+            mode,
+        }
+    }
+}
+
+fn shard_of<K: Hash>(key: &K) -> usize {
+    (crate::util::hash64(|h| key.hash(h)) as usize) % SHARDS
+}
+
+/// Hit/miss counters of one [`EvalCache`] (monotone since construction
+/// or the last [`EvalCache::clear`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvalCacheStats {
+    pub trace_hits: u64,
+    pub trace_misses: u64,
+    pub coll_hits: u64,
+    pub coll_misses: u64,
+}
+
+/// The persistent, sharded, thread-safe cross-evaluation memo. One
+/// instance lives inside each `Environment` and survives the whole
+/// search; independent `Environment`s (different simulators, fabrics,
+/// budgets) each get their own — key scoping is handled by the backend
+/// tag inside [`CollKey`] and the full [`TraceKey`].
+#[derive(Debug)]
+pub struct EvalCache {
+    traces: Vec<Mutex<HashMap<TraceKey, Arc<Trace>>>>,
+    colls: Vec<Mutex<HashMap<CollKey, f64>>>,
+    trace_hits: AtomicU64,
+    trace_misses: AtomicU64,
+    coll_hits: AtomicU64,
+    coll_misses: AtomicU64,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        Self {
+            traces: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            colls: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            trace_hits: AtomicU64::new(0),
+            trace_misses: AtomicU64::new(0),
+            coll_hits: AtomicU64::new(0),
+            coll_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The instantiated trace for `(model, par, batch, mode)`, generated
+    /// on first request and shared (via `Arc`) afterwards. Generation
+    /// errors are returned but not cached — they are cheap to recompute
+    /// and the genome memo absorbs repeats.
+    pub fn trace(
+        &self,
+        model: &ModelConfig,
+        par: &Parallelization,
+        batch: u64,
+        mode: ExecutionMode,
+    ) -> Result<Arc<Trace>, String> {
+        let key = TraceKey::new(model, par, batch, mode);
+        let shard = &self.traces[shard_of(&key)];
+        if let Some(hit) = shard.lock().unwrap().get(&key) {
+            self.trace_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(hit));
+        }
+        // Generate outside the lock: instantiation is the expensive part
+        // and must not serialize the other shard users. A racing thread
+        // may generate the same trace; both results are identical and
+        // the first insert wins.
+        let trace = Arc::new(generate_trace(model, par, batch, mode)?);
+        self.trace_misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = shard.lock().unwrap();
+        let entry = guard.entry(key).or_insert_with(|| Arc::clone(&trace));
+        Ok(Arc::clone(entry))
+    }
+
+    /// A [`CollCostMemo`] view over the shared collective-cost shards,
+    /// handed to [`crate::sim::Simulator::price`].
+    pub fn coll_memo(&self) -> SharedCollMemo<'_> {
+        SharedCollMemo { cache: self }
+    }
+
+    pub fn stats(&self) -> EvalCacheStats {
+        EvalCacheStats {
+            trace_hits: self.trace_hits.load(Ordering::Relaxed),
+            trace_misses: self.trace_misses.load(Ordering::Relaxed),
+            coll_hits: self.coll_hits.load(Ordering::Relaxed),
+            coll_misses: self.coll_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every cached artifact and reset the counters.
+    pub fn clear(&self) {
+        for s in &self.traces {
+            s.lock().unwrap().clear();
+        }
+        for s in &self.colls {
+            s.lock().unwrap().clear();
+        }
+        self.trace_hits.store(0, Ordering::Relaxed);
+        self.trace_misses.store(0, Ordering::Relaxed);
+        self.coll_hits.store(0, Ordering::Relaxed);
+        self.coll_misses.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Borrowed [`CollCostMemo`] adapter over an [`EvalCache`].
+pub struct SharedCollMemo<'a> {
+    cache: &'a EvalCache,
+}
+
+impl CollCostMemo for SharedCollMemo<'_> {
+    fn cost_us(&mut self, key: &CollKey, compute: &mut dyn FnMut() -> f64) -> f64 {
+        let shard = &self.cache.colls[shard_of(key)];
+        if let Some(v) = shard.lock().unwrap().get(key) {
+            self.cache.coll_hits.fetch_add(1, Ordering::Relaxed);
+            return *v;
+        }
+        // Price outside the lock; duplicate computation on a race is
+        // deterministic, so whichever insert lands is the same value.
+        let v = compute();
+        self.cache.coll_misses.fetch_add(1, Ordering::Relaxed);
+        shard.lock().unwrap().insert(*key, v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::presets as wl;
+
+    fn par() -> Parallelization {
+        Parallelization::derive(64, 8, 1, 1, true).unwrap()
+    }
+
+    #[test]
+    fn trace_cache_hits_on_repeat_and_shares_storage() {
+        let cache = EvalCache::new();
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let a = cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
+        let b = cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the first trace");
+        let s = cache.stats();
+        assert_eq!((s.trace_hits, s.trace_misses), (1, 1));
+    }
+
+    #[test]
+    fn trace_cache_distinguishes_inputs() {
+        let cache = EvalCache::new();
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let a = cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
+        let b = cache.trace(&m, &par(), 128, ExecutionMode::Training).unwrap();
+        let c = cache.trace(&m, &par(), 64, ExecutionMode::InferencePrefill).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.stats().trace_misses, 3);
+    }
+
+    #[test]
+    fn trace_cache_matches_direct_generation() {
+        let cache = EvalCache::new();
+        let m = wl::gpt3_175b().with_simulated_layers(4);
+        let p = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+        let cached = cache.trace(&m, &p, 2048, ExecutionMode::Training).unwrap();
+        let direct = generate_trace(&m, &p, 2048, ExecutionMode::Training).unwrap();
+        assert_eq!(*cached, direct);
+    }
+
+    #[test]
+    fn trace_errors_are_propagated_not_cached() {
+        let cache = EvalCache::new();
+        let m = wl::vit_base();
+        let p = Parallelization::derive(512, 512, 1, 1, false).unwrap();
+        // batch < dp is a generation error.
+        assert!(cache.trace(&m, &p, 256, ExecutionMode::Training).is_err());
+        assert_eq!(cache.stats().trace_misses, 0);
+    }
+
+    #[test]
+    fn coll_memo_computes_once_per_key() {
+        let cache = EvalCache::new();
+        let key = CollKey {
+            backend: 1,
+            topology: 2,
+            algos: 3,
+            policy: crate::collective::MultiDimPolicy::Baseline,
+            kind: crate::collective::CollectiveKind::AllReduce,
+            stride: 1,
+            size: 8,
+            bytes: 1e6f64.to_bits(),
+            chunks: 4,
+        };
+        let mut calls = 0;
+        let mut memo = cache.coll_memo();
+        let a = memo.cost_us(&key, &mut || {
+            calls += 1;
+            42.0
+        });
+        let b = memo.cost_us(&key, &mut || {
+            calls += 1;
+            42.0
+        });
+        assert_eq!((a, b, calls), (42.0, 42.0, 1));
+        let s = cache.stats();
+        assert_eq!((s.coll_hits, s.coll_misses), (1, 1));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let cache = EvalCache::new();
+        let m = wl::gpt3_13b().with_simulated_layers(2);
+        cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
+        cache.clear();
+        assert_eq!(cache.stats(), EvalCacheStats::default());
+        cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
+        assert_eq!(cache.stats().trace_misses, 1);
+    }
+}

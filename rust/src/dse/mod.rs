@@ -8,24 +8,25 @@
 //! design points (Tables 5/6, Figure 9), and evaluation statistics.
 
 pub mod cost;
+pub mod evalcache;
 pub mod pareto;
 pub mod prefilter;
 pub mod reward;
 
 pub use cost::{network_cost, network_cost_per_npu};
+pub use evalcache::{EvalCache, EvalCacheStats};
 pub use reward::{reward_from_report, Objective};
 
 use crate::agents::{Agent, AgentKind};
 use crate::netsim::{FidelityMode, FlowLevelConfig};
 use crate::pss::{Pss, SearchScope};
-use crate::sim::{ClusterConfig, SimReport, Simulator};
+use crate::sim::{ClusterConfig, CollCostMemo, Invalid, LocalCollMemo, SimReport, Simulator};
 use crate::util::parallel_map;
 use crate::workload::{ExecutionMode, ModelConfig, Parallelization};
-use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// One workload the environment optimizes for (Table 6 Expr 1 optimizes
 /// an ensemble of all four Table 2 models at once).
@@ -63,6 +64,20 @@ struct CachedEval {
     invalid_reason: Option<String>,
 }
 
+/// Tag for the fidelity a memoized outcome was evaluated at (0 = the
+/// genome's own PsA knob, 1 = forced Analytical, 2 = forced FlowLevel).
+/// The genome memo keeps one shard group per tag, so staged screening
+/// and re-ranking never read each other's rewards.
+const FIDELITY_TAGS: usize = 3;
+
+fn fidelity_tag(forced: Option<FidelityMode>) -> u8 {
+    match forced {
+        None => 0,
+        Some(FidelityMode::Analytical) => 1,
+        Some(FidelityMode::FlowLevel) => 2,
+    }
+}
+
 /// The environment side of the loop (PSS "Environment Side
 /// Configuration"): cost model + action/observation spaces + constraints.
 pub struct Environment {
@@ -74,16 +89,22 @@ pub struct Environment {
     flow_simulator: Simulator,
     pub workloads: Vec<WorkloadSpec>,
     pub objective: Objective,
-    /// Sharded memo of evaluations keyed by genome — the DSE hot-path
-    /// cache, safe to consult from `evaluate_batch` worker threads.
+    /// Sharded memo of evaluations keyed by genome, one shard group per
+    /// fidelity tag — the DSE hot-path cache, safe to consult from
+    /// `evaluate_batch` worker threads.
     cache: Vec<Mutex<HashMap<Vec<usize>, CachedEval>>>,
+    /// Cross-evaluation cache of traces and collective costs shared by
+    /// *all* evaluations (including forced-fidelity ones): see
+    /// [`evalcache::EvalCache`].
+    eval_cache: EvalCache,
     evals: AtomicU64,
     cache_hits: AtomicU64,
     invalid: AtomicU64,
+    flow_evals: AtomicU64,
 }
 
 /// Outcome of evaluating one genome.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StepOutcome {
     pub reward: f64,
     /// Reports per workload (empty if the point was invalid *or* served
@@ -101,10 +122,12 @@ impl Environment {
             flow_simulator: Simulator::new().with_fidelity(FidelityMode::FlowLevel),
             workloads,
             objective,
-            cache: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            cache: (0..CACHE_SHARDS * FIDELITY_TAGS).map(|_| Mutex::new(HashMap::new())).collect(),
+            eval_cache: EvalCache::new(),
             evals: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             invalid: AtomicU64::new(0),
+            flow_evals: AtomicU64::new(0),
         }
     }
 
@@ -132,14 +155,24 @@ impl Environment {
         self.invalid.load(Ordering::Relaxed)
     }
 
-    fn shard_of(&self, genome: &[usize]) -> usize {
-        let mut h = DefaultHasher::new();
-        genome.hash(&mut h);
-        (h.finish() as usize) % self.cache.len()
+    /// Evaluations that ran the flow-level simulator (the expensive
+    /// rung) — the denominator of the staged-search budget claims.
+    pub fn flow_evals(&self) -> u64 {
+        self.flow_evals.load(Ordering::Relaxed)
     }
 
-    fn cache_lookup(&self, genome: &[usize]) -> Option<StepOutcome> {
-        let shard = self.cache[self.shard_of(genome)].lock().unwrap();
+    /// Hit/miss counters of the cross-evaluation trace/collective cache.
+    pub fn eval_cache_stats(&self) -> EvalCacheStats {
+        self.eval_cache.stats()
+    }
+
+    fn shard_of(&self, genome: &[usize], tag: u8) -> usize {
+        let h = crate::util::hash64(|h| genome.hash(h)) as usize;
+        h % CACHE_SHARDS + (tag as usize) * CACHE_SHARDS
+    }
+
+    fn cache_lookup(&self, genome: &[usize], tag: u8) -> Option<StepOutcome> {
+        let shard = self.cache[self.shard_of(genome, tag)].lock().unwrap();
         shard.get(genome).map(|hit| {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
             StepOutcome {
@@ -150,8 +183,8 @@ impl Environment {
         })
     }
 
-    fn cache_store(&self, genome: &[usize], outcome: &StepOutcome) {
-        let mut shard = self.cache[self.shard_of(genome)].lock().unwrap();
+    fn cache_store(&self, genome: &[usize], tag: u8, outcome: &StepOutcome) {
+        let mut shard = self.cache[self.shard_of(genome, tag)].lock().unwrap();
         if shard
             .insert(
                 genome.to_vec(),
@@ -175,11 +208,28 @@ impl Environment {
     /// the memo cache with their full outcome (reward *and* invalid
     /// reason) — only the reports are elided.
     pub fn evaluate(&self, genome: &[usize]) -> StepOutcome {
-        if let Some(hit) = self.cache_lookup(genome) {
+        self.evaluate_memo(genome, None)
+    }
+
+    /// Evaluate a genome at an explicitly chosen fidelity, overriding the
+    /// genome's own PsA knob — the re-ranking hook: screen with
+    /// [`FidelityMode::Analytical`], then re-score finalists with
+    /// [`FidelityMode::FlowLevel`]. Bypasses the genome memo so the full
+    /// per-workload reports always come back (trace/collective artifacts
+    /// still flow through the cross-evaluation cache, so repeats stay
+    /// cheap); batch re-scoring that only needs rewards should use
+    /// [`Environment::evaluate_batch_at`], which is memoized.
+    pub fn evaluate_with(&self, genome: &[usize], fidelity: FidelityMode) -> StepOutcome {
+        self.evaluate_raw(genome, Some(fidelity), true)
+    }
+
+    fn evaluate_memo(&self, genome: &[usize], forced: Option<FidelityMode>) -> StepOutcome {
+        let tag = fidelity_tag(forced);
+        if let Some(hit) = self.cache_lookup(genome, tag) {
             return hit;
         }
-        let outcome = self.evaluate_uncached(genome);
-        self.cache_store(genome, &outcome);
+        let outcome = self.evaluate_raw(genome, forced, true);
+        self.cache_store(genome, tag, &outcome);
         outcome
     }
 
@@ -187,8 +237,20 @@ impl Environment {
     /// threads (the agents' `ask()` batches are embarrassingly parallel;
     /// the simulator is pure). Order is preserved.
     pub fn evaluate_batch(&self, genomes: &[Vec<usize>]) -> Vec<StepOutcome> {
+        self.evaluate_batch_at(genomes, None)
+    }
+
+    /// [`Environment::evaluate_batch`] with an optional forced fidelity —
+    /// the staged runner's screening (`Some(Analytical)`) and promotion
+    /// (`Some(FlowLevel)`) entry point.
+    pub fn evaluate_batch_at(
+        &self,
+        genomes: &[Vec<usize>],
+        forced: Option<FidelityMode>,
+    ) -> Vec<StepOutcome> {
+        let tag = fidelity_tag(forced);
         let mut out: Vec<Option<StepOutcome>> =
-            genomes.iter().map(|g| self.cache_lookup(g)).collect();
+            genomes.iter().map(|g| self.cache_lookup(g, tag)).collect();
         // Deduplicate misses so a batch with repeats evaluates once.
         let mut miss_positions: HashMap<&[usize], Vec<usize>> = HashMap::new();
         for (i, g) in genomes.iter().enumerate() {
@@ -199,9 +261,9 @@ impl Environment {
         let mut misses: Vec<(&[usize], Vec<usize>)> = miss_positions.into_iter().collect();
         // HashMap order is nondeterministic; restore batch order.
         misses.sort_by_key(|(_, positions)| positions[0]);
-        let results = parallel_map(&misses, |(g, _)| self.evaluate_uncached(g));
+        let results = parallel_map(&misses, |(g, _)| self.evaluate_raw(g, forced, true));
         for ((g, positions), outcome) in misses.iter().zip(results.into_iter()) {
-            self.cache_store(g, &outcome);
+            self.cache_store(g, tag, &outcome);
             // The first occurrence carries the full outcome (as a serial
             // evaluate would); later duplicates mirror cache hits.
             for &i in positions.iter().skip(1) {
@@ -216,34 +278,32 @@ impl Environment {
         out.into_iter().map(|o| o.expect("batch slot unfilled")).collect()
     }
 
-    /// Evaluation without the memo cache (used by the bench harness to
-    /// time the true hot path). Honors the genome's PsA fidelity knob
-    /// when the schema carries one.
+    /// Evaluation bypassing every cache — the genome memo *and* the
+    /// cross-evaluation trace/collective cache (used by the bench
+    /// harness to time the true cold path, and by tests as the ground
+    /// truth cached evaluation must match bit for bit). Honors the
+    /// genome's PsA fidelity knob when the schema carries one.
     pub fn evaluate_uncached(&self, genome: &[usize]) -> StepOutcome {
-        let point = match self.pss.schema.decode_valid(genome) {
-            Ok(p) => p,
-            Err(e) => {
-                return StepOutcome { reward: 0.0, reports: Vec::new(), invalid_reason: Some(e) }
-            }
-        };
-        let (cluster, par) = match self.pss.materialize(&point) {
-            Ok(x) => x,
-            Err(e) => {
-                return StepOutcome { reward: 0.0, reports: Vec::new(), invalid_reason: Some(e) }
-            }
-        };
-        let sim = match self.pss.fidelity_of(&point) {
-            FidelityMode::FlowLevel => &self.flow_simulator,
-            FidelityMode::Analytical => &self.simulator,
-        };
-        self.simulate_point(sim, &cluster, &par)
+        self.evaluate_raw(genome, None, false)
     }
 
-    /// Evaluate a genome at an explicitly chosen fidelity, bypassing the
-    /// cache and the genome's own fidelity knob — the re-ranking hook:
-    /// screen with [`FidelityMode::Analytical`], then re-score finalists
-    /// with [`FidelityMode::FlowLevel`].
-    pub fn evaluate_with(&self, genome: &[usize], fidelity: FidelityMode) -> StepOutcome {
+    /// Evaluation through the shared cross-evaluation cache but without
+    /// the genome memo: every call re-runs decode, materialization and
+    /// pricing, reusing cached traces and collective costs. This is the
+    /// cache-warm hot path the `eval_throughput` bench measures.
+    pub fn evaluate_nomemo(&self, genome: &[usize]) -> StepOutcome {
+        self.evaluate_raw(genome, None, true)
+    }
+
+    /// The one true evaluation ladder (decode → materialize → pick rung
+    /// → simulate), shared by the cached, forced-fidelity and uncached
+    /// entry points.
+    fn evaluate_raw(
+        &self,
+        genome: &[usize],
+        forced: Option<FidelityMode>,
+        use_eval_cache: bool,
+    ) -> StepOutcome {
         let point = match self.pss.schema.decode_valid(genome) {
             Ok(p) => p,
             Err(e) => {
@@ -256,11 +316,19 @@ impl Environment {
                 return StepOutcome { reward: 0.0, reports: Vec::new(), invalid_reason: Some(e) }
             }
         };
+        let fidelity = forced.unwrap_or_else(|| self.pss.fidelity_of(&point));
         let sim = match fidelity {
             FidelityMode::FlowLevel => &self.flow_simulator,
             FidelityMode::Analytical => &self.simulator,
         };
-        self.simulate_point(sim, &cluster, &par)
+        let mut priced_any = false;
+        let outcome = self.simulate_point(sim, &cluster, &par, use_eval_cache, &mut priced_any);
+        // Count flow-level *simulations*, not attempts: preflight/trace
+        // rejects never touch the flow backend.
+        if priced_any && matches!(fidelity, FidelityMode::FlowLevel) {
+            self.flow_evals.fetch_add(1, Ordering::Relaxed);
+        }
+        outcome
     }
 
     fn simulate_point(
@@ -268,11 +336,47 @@ impl Environment {
         sim: &Simulator,
         cluster: &ClusterConfig,
         par: &Parallelization,
+        use_eval_cache: bool,
+        priced_any: &mut bool,
     ) -> StepOutcome {
         let mut reports = Vec::with_capacity(self.workloads.len());
         let mut total_latency_us = 0.0;
+        let mut shared_memo = self.eval_cache.coll_memo();
+        let mut local_memo = LocalCollMemo::default();
         for w in &self.workloads {
-            match sim.run(cluster, &w.model, par, w.batch, w.mode) {
+            // Cached and uncached evaluations run the exact same stages
+            // on the exact same inputs; they differ only in where trace
+            // and collective artifacts come from — the shared cross-
+            // evaluation cache vs fresh generation plus a genome-local
+            // memo — so outcomes are bit-identical.
+            let run: Result<SimReport, Invalid> =
+                match sim.preflight(cluster, &w.model, par, w.batch, w.mode) {
+                    Err(e) => Err(e),
+                    Ok(mem) => {
+                        let trace = if use_eval_cache {
+                            self.eval_cache
+                                .trace(&w.model, par, w.batch, w.mode)
+                                .map_err(Invalid::Config)
+                        } else {
+                            crate::workload::generate_trace(&w.model, par, w.batch, w.mode)
+                                .map(Arc::new)
+                                .map_err(Invalid::Config)
+                        };
+                        match trace {
+                            Err(e) => Err(e),
+                            Ok(trace) => {
+                                *priced_any = true;
+                                let memo: &mut dyn CollCostMemo = if use_eval_cache {
+                                    &mut shared_memo
+                                } else {
+                                    &mut local_memo
+                                };
+                                Ok(sim.price(cluster, par, &trace, mem, w.mode, memo))
+                            }
+                        }
+                    }
+                };
+            match run {
                 Ok(rep) => {
                     total_latency_us += rep.latency_us * w.weight;
                     reports.push(rep);
@@ -312,6 +416,12 @@ pub struct StepRecord {
 }
 
 /// Full result of a DSE run.
+///
+/// For [`SearchStrategy::Staged`] runs, `history` records the
+/// *screening-rung* (analytical) rewards while `best_reward` is the
+/// promoted winner's *flow-level* reward — on a congested fabric the
+/// final best is therefore typically below the screening curve's
+/// plateau. Single-fidelity strategies keep the two consistent.
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub agent: &'static str,
@@ -326,6 +436,13 @@ pub struct RunResult {
     pub steps_to_peak: u64,
     pub evals: u64,
     pub invalid: u64,
+    /// Flow-level simulations this run spent (staged runs budget these:
+    /// `promote_top_k` instead of one per step).
+    pub flow_evals: u64,
+    /// Staged runs only: the promoted finalists as
+    /// `(genome, screening reward, flow-level reward)`, best-screened
+    /// first. Empty for single-fidelity strategies.
+    pub finalists: Vec<(Vec<usize>, f64, f64)>,
 }
 
 impl RunResult {
@@ -349,17 +466,90 @@ impl DseConfig {
     }
 }
 
+/// How the runner spends its simulation-fidelity budget (the active
+/// counterpart of the passive PsA "Network Fidelity" knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchStrategy {
+    /// Evaluate every genome at its own PsA-knob fidelity (schemas
+    /// without the knob resolve to Analytical) — the historical mode.
+    #[default]
+    GenomeFidelity,
+    /// Force every evaluation to one rung, ignoring the knob.
+    Fixed(FidelityMode),
+    /// Multi-fidelity staging: screen the whole search on the cheap
+    /// Analytical rung while maintaining the running top-K genomes, then
+    /// re-score only those finalists with FlowLevel and return the
+    /// flow-level winner. Spends `promote_top_k` flow-level simulations
+    /// instead of one per step.
+    Staged { promote_top_k: usize },
+}
+
+/// Running top-K distinct genomes by screening reward (K is small, so
+/// linear insertion beats a heap — and keeps order deterministic).
+struct TopK {
+    k: usize,
+    /// Slots that do not affect a forced-fidelity evaluation (the PsA
+    /// "Network Fidelity" knob, dead under staged screening): finalists
+    /// differing only there are one physical design and must not spend
+    /// two promotion slots.
+    dead_slots: Vec<usize>,
+    /// `(reward, first step seen, genome, canonical genome)`, best
+    /// first. Ties keep the earlier entry first (stable insertion below
+    /// the last strictly greater reward).
+    entries: Vec<(f64, u64, Vec<usize>, Vec<usize>)>,
+}
+
+impl TopK {
+    fn new(k: usize, dead_slots: Vec<usize>) -> Self {
+        Self { k: k.max(1), dead_slots, entries: Vec::with_capacity(k.max(1) + 1) }
+    }
+
+    /// The genome with dead slots zeroed — the design identity key.
+    fn canon(&self, genome: &[usize]) -> Vec<usize> {
+        let mut c = genome.to_vec();
+        for &s in &self.dead_slots {
+            if s < c.len() {
+                c[s] = 0;
+            }
+        }
+        c
+    }
+
+    fn offer(&mut self, reward: f64, step: u64, genome: &[usize]) {
+        if reward <= 0.0 {
+            return;
+        }
+        if self.entries.len() == self.k && reward <= self.entries[self.k - 1].0 {
+            return;
+        }
+        let canon = self.canon(genome);
+        if self.entries.iter().any(|(_, _, _, c)| *c == canon) {
+            return;
+        }
+        let pos = self.entries.partition_point(|(r, _, _, _)| *r >= reward);
+        self.entries.insert(pos, (reward, step, genome.to_vec(), canon));
+        self.entries.truncate(self.k);
+    }
+}
+
 /// Drives one agent against one environment for a step budget. A *step*
 /// is one genome evaluation (agents with populations consume several
 /// steps per `ask`).
 pub struct DseRunner {
     pub config: DseConfig,
     pub scope: SearchScope,
+    pub strategy: SearchStrategy,
 }
 
 impl DseRunner {
     pub fn new(config: DseConfig, scope: SearchScope) -> Self {
-        Self { config, scope }
+        Self { config, scope, strategy: SearchStrategy::default() }
+    }
+
+    /// Select a [`SearchStrategy`] (builder style).
+    pub fn with_strategy(mut self, strategy: SearchStrategy) -> Self {
+        self.strategy = strategy;
+        self
     }
 
     /// Run the search; also tracks distinct near-optimal genomes for the
@@ -372,9 +562,24 @@ impl DseRunner {
 
     /// Run with a caller-constructed agent (custom hyper-parameters or an
     /// XLA-backed BO surrogate). Each `ask()` batch is evaluated through
-    /// [`Environment::evaluate_batch`], so population agents fan out
+    /// [`Environment::evaluate_batch_at`], so population agents fan out
     /// across cores.
     pub fn run_with_agent(&self, env: &mut Environment, agent: &mut dyn Agent) -> RunResult {
+        let screen_fidelity = match self.strategy {
+            SearchStrategy::GenomeFidelity => None,
+            SearchStrategy::Fixed(f) => Some(f),
+            SearchStrategy::Staged { .. } => Some(FidelityMode::Analytical),
+        };
+        let mut topk = match self.strategy {
+            SearchStrategy::Staged { promote_top_k } => {
+                // Under forced-fidelity screening the PsA fidelity knob is
+                // dead: canonicalize it away so one physical design never
+                // occupies two promotion slots.
+                let dead = env.pss.schema.param_slots(crate::psa::builders::names::NET_FIDELITY);
+                Some(TopK::new(promote_top_k, dead))
+            }
+            _ => None,
+        };
         let mut history = Vec::with_capacity(self.config.steps as usize);
         let mut best_reward = 0.0f64;
         let mut best_genome: Vec<usize> = Vec::new();
@@ -382,6 +587,7 @@ impl DseRunner {
         let mut step = 0u64;
         let evals0 = env.evals();
         let invalid0 = env.invalid();
+        let flow0 = env.flow_evals();
 
         loop {
             let proposals = agent.ask();
@@ -390,7 +596,7 @@ impl DseRunner {
             // the rewards of what actually ran, as before).
             let remaining = (self.config.steps - step) as usize;
             let take = proposals.len().min(remaining);
-            let outcomes = env.evaluate_batch(&proposals[..take]);
+            let outcomes = env.evaluate_batch_at(&proposals[..take], screen_fidelity);
             let mut results = Vec::with_capacity(take);
             for (g, out) in proposals[..take].iter().zip(outcomes.iter()) {
                 step += 1;
@@ -398,6 +604,9 @@ impl DseRunner {
                     best_reward = out.reward;
                     best_genome = g.clone();
                     steps_to_peak = step;
+                }
+                if let Some(t) = topk.as_mut() {
+                    t.offer(out.reward, step, g);
                 }
                 history.push(StepRecord { step, reward: out.reward, best_so_far: best_reward });
                 results.push((g.clone(), out.reward));
@@ -408,12 +617,46 @@ impl DseRunner {
             }
         }
 
+        // Staged promotion: re-score the surviving finalists on the
+        // flow-level rung and let *that* reward pick the winner. The
+        // screening argmax is always among the finalists, so the staged
+        // flow-level result can never lose to "screen analytically, then
+        // re-rank just the argmax".
+        let mut finalists: Vec<(Vec<usize>, f64, f64)> = Vec::new();
+        let mut report_fidelity: Option<FidelityMode> = screen_fidelity;
+        if let Some(topk) = topk {
+            let genomes: Vec<Vec<usize>> =
+                topk.entries.iter().map(|(_, _, g, _)| g.clone()).collect();
+            if !genomes.is_empty() {
+                let outcomes = env.evaluate_batch_at(&genomes, Some(FidelityMode::FlowLevel));
+                best_reward = 0.0;
+                best_genome = Vec::new();
+                for ((screen_reward, first_step, genome, _), out) in
+                    topk.entries.iter().zip(outcomes.iter())
+                {
+                    if out.reward > best_reward {
+                        best_reward = out.reward;
+                        best_genome = genome.clone();
+                        steps_to_peak = *first_step;
+                    }
+                    finalists.push((genome.clone(), *screen_reward, out.reward));
+                }
+            }
+            report_fidelity = Some(FidelityMode::FlowLevel);
+        }
+
+        // Snapshot the search's spend *before* re-materializing reports:
+        // the report re-run below is bookkeeping, not search budget.
+        let evals_spent = env.evals() - evals0;
+        let invalid_spent = env.invalid() - invalid0;
+        let flow_spent = env.flow_evals() - flow0;
+
         // Re-materialize the winning design's reports (cache hits elide
-        // them during the search).
+        // them during the search) at the fidelity that scored it.
         let best_reports = if best_genome.is_empty() {
             Vec::new()
         } else {
-            env.evaluate_uncached(&best_genome).reports
+            env.evaluate_raw(&best_genome, report_fidelity, true).reports
         };
 
         RunResult {
@@ -423,8 +666,10 @@ impl DseRunner {
             best_genome,
             best_reports,
             steps_to_peak,
-            evals: env.evals() - evals0,
-            invalid: env.invalid() - invalid0,
+            evals: evals_spent,
+            invalid: invalid_spent,
+            flow_evals: flow_spent,
+            finalists,
         }
     }
 }
@@ -573,6 +818,163 @@ mod tests {
                 assert_eq!(result.best_genome[s], base[s]);
             }
         }
+    }
+
+    #[test]
+    fn cached_evaluation_bit_identical_to_uncached() {
+        // The cross-evaluation cache must be exact: same decode →
+        // materialize → price ladder, with trace/collective artifacts
+        // merely short-circuited. Any drift here corrupts the search.
+        let env = make_env(Objective::PerfPerBwPerNpu);
+        let space = env.pss.build_space(SearchScope::FullStack);
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let mut checked = 0;
+        for _ in 0..30 {
+            if let Some(g) = space.random_valid_genome(&mut rng, 500) {
+                let cold = env.evaluate_uncached(&g);
+                let warm = env.evaluate_nomemo(&g); // fills the shared cache
+                let hot = env.evaluate_nomemo(&g); // trace+coll all hits
+                assert_eq!(cold, warm, "cache fill diverged");
+                assert_eq!(cold, hot, "cache hit diverged");
+                assert_eq!(cold.reward.to_bits(), hot.reward.to_bits());
+                checked += 1;
+            }
+        }
+        assert!(checked > 5);
+        let s = env.eval_cache_stats();
+        assert!(s.trace_hits > 0, "trace cache never hit: {s:?}");
+        assert!(s.coll_hits > 0, "collective cache never hit: {s:?}");
+    }
+
+    #[test]
+    fn trace_cache_shares_across_network_knobs() {
+        // Genomes that differ only in network-stack slots share one
+        // trace: the workload knobs are identical.
+        let env = make_env(Objective::PerfPerBwPerNpu);
+        let g = env.pss.baseline_genome();
+        env.evaluate_nomemo(&g);
+        let misses = env.eval_cache_stats().trace_misses;
+        let mut g2 = g.clone();
+        let bw_slots = env.pss.schema.stack_slots(crate::psa::Stack::Network);
+        g2[*bw_slots.last().unwrap()] = 0; // move a bandwidth knob
+        assert_ne!(g, g2);
+        let out = env.evaluate_nomemo(&g2);
+        assert!(out.invalid_reason.is_none(), "{:?}", out.invalid_reason);
+        assert_eq!(
+            env.eval_cache_stats().trace_misses,
+            misses,
+            "network-only change must not re-generate the trace"
+        );
+    }
+
+    #[test]
+    fn topk_keeps_best_distinct_sorted() {
+        let mut t = TopK::new(3, Vec::new());
+        t.offer(1.0, 1, &[1, 0]);
+        t.offer(3.0, 2, &[3, 0]);
+        t.offer(2.0, 3, &[2, 0]);
+        t.offer(3.0, 4, &[3, 0]); // duplicate genome ignored
+        t.offer(0.0, 5, &[0, 0]); // invalid ignored
+        t.offer(4.0, 6, &[4, 0]); // evicts reward 1.0
+        let rewards: Vec<f64> = t.entries.iter().map(|(r, _, _, _)| *r).collect();
+        assert_eq!(rewards, vec![4.0, 3.0, 2.0]);
+        let steps: Vec<u64> = t.entries.iter().map(|(_, s, _, _)| *s).collect();
+        assert_eq!(steps, vec![6, 2, 3]);
+    }
+
+    #[test]
+    fn topk_dead_slots_collapse_fidelity_twins() {
+        // Genomes differing only in a dead slot are one physical design.
+        let mut t = TopK::new(3, vec![1]);
+        t.offer(3.0, 1, &[7, 0]);
+        t.offer(3.0, 2, &[7, 1]); // fidelity twin — must not take a slot
+        t.offer(2.0, 3, &[5, 1]);
+        assert_eq!(t.entries.len(), 2);
+        assert_eq!(t.entries[0].2, vec![7, 0]); // first-seen genome kept
+        assert_eq!(t.entries[1].2, vec![5, 1]);
+    }
+
+    #[test]
+    fn staged_runner_promotes_topk_and_picks_flow_winner() {
+        let mut env = make_env(Objective::PerfPerBwPerNpu)
+            .with_flow_config(FlowLevelConfig::oversubscribed(4.0));
+        let cfg = DseConfig::new(AgentKind::Ga, 60, 42);
+        let staged = DseRunner::new(cfg, SearchScope::FullStack)
+            .with_strategy(SearchStrategy::Staged { promote_top_k: 5 })
+            .run(&mut env);
+        assert!(staged.best_reward > 0.0);
+        assert!(!staged.finalists.is_empty() && staged.finalists.len() <= 5);
+        assert!(staged.flow_evals <= 5, "staged spent {} flow evals", staged.flow_evals);
+        // The winner carries the max flow-level reward over the finalists.
+        let max_flow = staged.finalists.iter().map(|(_, _, f)| *f).fold(0.0, f64::max);
+        assert_eq!(staged.best_reward, max_flow);
+        // And the screening argmax survived into the finalists.
+        let screen_max = staged.history.iter().map(|s| s.reward).fold(0.0, f64::max);
+        assert!(staged.finalists.iter().any(|(_, screen, _)| *screen == screen_max));
+        assert_eq!(staged.best_reports.len(), env.workloads.len());
+    }
+
+    #[test]
+    fn staged_not_worse_than_rescored_analytical_argmax() {
+        // Same seed => identical screening trajectories, and the staged
+        // finalists include the analytical argmax — so staging can only
+        // improve on "screen, then re-rank just the argmax".
+        let cfg = DseConfig::new(AgentKind::Aco, 80, 7);
+        let mut env_a = make_env(Objective::PerfPerBwPerNpu)
+            .with_flow_config(FlowLevelConfig::oversubscribed(4.0));
+        let single = DseRunner::new(cfg, SearchScope::FullStack).run(&mut env_a);
+        assert!(single.best_reward > 0.0);
+        let rescored = env_a.evaluate_with(&single.best_genome, FidelityMode::FlowLevel).reward;
+
+        let mut env_b = make_env(Objective::PerfPerBwPerNpu)
+            .with_flow_config(FlowLevelConfig::oversubscribed(4.0));
+        let staged = DseRunner::new(cfg, SearchScope::FullStack)
+            .with_strategy(SearchStrategy::Staged { promote_top_k: 4 })
+            .run(&mut env_b);
+        assert!(
+            staged.best_reward >= rescored,
+            "staged {:.6e} lost to rescored analytical argmax {:.6e}",
+            staged.best_reward,
+            rescored
+        );
+    }
+
+    #[test]
+    fn fixed_strategy_forces_flow_fidelity() {
+        let mut env = make_env(Objective::PerfPerBwPerNpu);
+        let cfg = DseConfig::new(AgentKind::Rw, 48, 3);
+        let r = DseRunner::new(cfg, SearchScope::FullStack)
+            .with_strategy(SearchStrategy::Fixed(FidelityMode::FlowLevel))
+            .run(&mut env);
+        assert!(r.flow_evals > 0, "fixed flow strategy never ran the flow simulator");
+        assert!(r.flow_evals <= r.evals);
+        assert!(r.finalists.is_empty());
+    }
+
+    #[test]
+    fn forced_fidelity_memo_is_isolated_per_rung() {
+        let env = make_env(Objective::PerfPerBwPerNpu);
+        let g = env.pss.baseline_genome();
+        let a = env.evaluate_batch_at(&[g.clone()], Some(FidelityMode::Analytical));
+        let f = env.evaluate_batch_at(&[g.clone()], Some(FidelityMode::FlowLevel));
+        assert_eq!(env.cache_hits(), 0, "different rungs must not share memo entries");
+        // Repeat at the same rung is a memo hit.
+        let f2 = env.evaluate_batch_at(&[g.clone()], Some(FidelityMode::FlowLevel));
+        assert_eq!(env.cache_hits(), 1);
+        assert_eq!(f[0].reward, f2[0].reward);
+        assert!(a[0].reward > 0.0);
+    }
+
+    #[test]
+    fn evaluate_with_always_returns_reports() {
+        // Even after the same (genome, fidelity) was memoized by a batch
+        // re-score, evaluate_with must hand back full reports.
+        let env = make_env(Objective::PerfPerBwPerNpu);
+        let g = env.pss.baseline_genome();
+        env.evaluate_batch_at(&[g.clone()], Some(FidelityMode::FlowLevel));
+        let out = env.evaluate_with(&g, FidelityMode::FlowLevel);
+        assert_eq!(out.reports.len(), env.workloads.len());
+        assert!(out.reports[0].latency_us > 0.0);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! print the paper-shaped rows — see DESIGN.md §Substitutions.)
 
 use crate::agents::AgentKind;
-use crate::dse::{DseConfig, DseRunner, Environment, Objective, RunResult, WorkloadSpec};
+use crate::dse::{
+    DseConfig, DseRunner, Environment, Objective, RunResult, SearchStrategy, WorkloadSpec,
+};
 use crate::psa::paper_table4_schema;
 use crate::pss::{Pss, SearchScope};
 use crate::sim::ClusterConfig;
@@ -101,13 +103,33 @@ pub fn scoped_search(
     steps: u64,
     seed: u64,
 ) -> ScopedResult {
+    scoped_search_with(env, scope, agent, steps, seed, SearchStrategy::GenomeFidelity)
+}
+
+/// [`scoped_search`] under an explicit [`SearchStrategy`] — e.g.
+/// `SearchStrategy::Staged { promote_top_k }` to screen on the
+/// Analytical rung and re-score only the running top-K under flow-level
+/// contention.
+pub fn scoped_search_with(
+    env: &mut Environment,
+    scope: SearchScope,
+    agent: AgentKind,
+    steps: u64,
+    seed: u64,
+    strategy: SearchStrategy,
+) -> ScopedResult {
     let started = Instant::now();
-    let run = DseRunner::new(DseConfig::new(agent, steps, seed), scope).run(env);
+    let run = DseRunner::new(DseConfig::new(agent, steps, seed), scope)
+        .with_strategy(strategy)
+        .run(env);
     let wall_secs = started.elapsed().as_secs_f64();
-    let best_latency_us = if run.best_genome.is_empty() {
+    // The runner materializes best_reports at the fidelity that scored
+    // the winner (flow level for staged runs), so sum those instead of
+    // re-evaluating at the genome's own knob.
+    let best_latency_us = if run.best_reports.is_empty() {
         f64::INFINITY
     } else {
-        env.latency_us(&run.best_genome).unwrap_or(f64::INFINITY)
+        run.best_reports.iter().map(|r| r.latency_us).sum()
     };
     ScopedResult { scope, run, best_latency_us, wall_secs }
 }

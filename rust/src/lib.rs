@@ -23,8 +23,12 @@
 //! - **Agents** ([`agents`]) — Random Walker, Genetic Algorithm, Ant
 //!   Colony Optimization and Bayesian Optimization search agents.
 //! - **DSE** ([`dse`]) — the agent⇄environment loop, the paper's two
-//!   reward functions, the LIBRA-style network dollar-cost model, and
-//!   run history/convergence tracking.
+//!   reward functions, the LIBRA-style network dollar-cost model, run
+//!   history/convergence tracking, plus the evaluation-throughput
+//!   machinery: a cross-evaluation trace/collective-cost cache
+//!   ([`dse::EvalCache`]) and the staged multi-fidelity search mode
+//!   ([`dse::SearchStrategy::Staged`]: screen analytically, promote the
+//!   running top-K to flow-level re-scoring).
 //! - **Runtime** ([`runtime`]) — the PJRT bridge that loads the
 //!   AOT-compiled JAX/Pallas batched cost model and GP surrogate
 //!   (`artifacts/*.hlo.txt`) plus a bit-equivalent pure-Rust fallback.
@@ -72,7 +76,9 @@ pub mod prelude {
         CollAlgo, CollectiveConfig, CollectiveKind, MultiDimPolicy, SchedulingPolicy,
     };
     pub use crate::compute::ComputeDevice;
-    pub use crate::dse::{DseConfig, DseRunner, Environment, Objective, WorkloadSpec};
+    pub use crate::dse::{
+        DseConfig, DseRunner, Environment, EvalCache, Objective, SearchStrategy, WorkloadSpec,
+    };
     pub use crate::netsim::{FidelityMode, FlowLevelConfig, NetworkBackend};
     pub use crate::psa::{DesignPoint, ParamDef, Schema, Stack};
     pub use crate::pss::{Pss, SearchScope};

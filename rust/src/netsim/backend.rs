@@ -105,6 +105,23 @@ pub trait NetworkBackend: fmt::Debug + Send + Sync {
 
     fn fidelity(&self) -> FidelityMode;
 
+    /// A stable fingerprint of every backend-side input to collective
+    /// pricing *beyond* the call itself (fidelity rung, fabric
+    /// congestion parameters...). Two backends with the same tag must
+    /// price identical calls identically — this scopes the cross-
+    /// evaluation collective-cost cache (`cosmic::dse::EvalCache`).
+    fn cache_tag(&self) -> u64;
+
+    /// True when [`NetworkBackend::drain_overlapped`] is equivalent to
+    /// pricing each job independently via
+    /// [`NetworkBackend::collective_time_us`] and draining the durations
+    /// serially with [`serial_drain`]. The simulator uses this to route
+    /// per-job durations through its cross-evaluation memo instead of
+    /// re-walking alpha-beta costs inside every drain.
+    fn drain_is_serial(&self) -> bool {
+        false
+    }
+
     /// Time (us) of one blocking multi-dimensional collective.
     fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64;
 
@@ -199,17 +216,27 @@ pub fn serial_drain(
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Analytical;
 
+thread_local! {
+    // Scratch for projecting a span's DimCosts out of the (cost, dim)
+    // pairs without a per-call allocation.
+    static SPAN_DIMS: std::cell::RefCell<Vec<DimCost>> = std::cell::RefCell::new(Vec::new());
+}
+
 impl Analytical {
     fn call_time_us(call: &CollectiveCall<'_>) -> f64 {
-        let dims: Vec<DimCost> = call.span.iter().map(|(c, _)| *c).collect();
-        crate::collective::multidim_collective_time_us(
-            call.kind,
-            call.policy,
-            call.algos,
-            &dims,
-            call.bytes,
-            call.chunks,
-        )
+        SPAN_DIMS.with(|buf| {
+            let mut dims = buf.borrow_mut();
+            dims.clear();
+            dims.extend(call.span.iter().map(|(c, _)| *c));
+            crate::collective::multidim_collective_time_us(
+                call.kind,
+                call.policy,
+                call.algos,
+                &dims,
+                call.bytes,
+                call.chunks,
+            )
+        })
     }
 }
 
@@ -220,6 +247,15 @@ impl NetworkBackend for Analytical {
 
     fn fidelity(&self) -> FidelityMode {
         FidelityMode::Analytical
+    }
+
+    fn cache_tag(&self) -> u64 {
+        // No backend-side state: every Analytical instance prices alike.
+        0xA7A1
+    }
+
+    fn drain_is_serial(&self) -> bool {
+        true
     }
 
     fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {
@@ -339,6 +375,23 @@ impl NetworkBackend for FlowLevel {
 
     fn fidelity(&self) -> FidelityMode {
         FidelityMode::FlowLevel
+    }
+
+    fn cache_tag(&self) -> u64 {
+        // Pricing depends on the fabric's congestion parameters: fold
+        // them into the tag so differently-configured flow backends
+        // never share cross-evaluation cache entries.
+        use std::hash::Hash;
+        crate::util::hash64(|h| {
+            0xF10Du64.hash(h);
+            self.config.switch_oversubscription.to_bits().hash(h);
+            self.config.background_load.to_bits().hash(h);
+            self.config
+                .per_dim_oversubscription
+                .as_ref()
+                .map(|v| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>())
+                .hash(h);
+        })
     }
 
     fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {

@@ -358,14 +358,26 @@ impl Schema {
         self.params.iter().filter(|p| p.stack == stack).collect()
     }
 
-    /// Slot indices (genome positions) belonging to `stack`.
-    pub fn stack_slots(&self, stack: Stack) -> Vec<usize> {
+    /// Slot indices whose owning parameter satisfies `pred` — the one
+    /// place genome positions are derived from the slot layout.
+    fn slots_where(&self, pred: impl Fn(&ParamDef) -> bool) -> Vec<usize> {
         self.slots()
             .iter()
             .enumerate()
-            .filter(|(_, s)| self.params[s.param].stack == stack)
+            .filter(|(_, s)| pred(&self.params[s.param]))
             .map(|(i, _)| i)
             .collect()
+    }
+
+    /// Slot indices (genome positions) belonging to `stack`.
+    pub fn stack_slots(&self, stack: Stack) -> Vec<usize> {
+        self.slots_where(|p| p.stack == stack)
+    }
+
+    /// Slot indices (genome positions) of the named parameter — empty if
+    /// the schema does not carry it.
+    pub fn param_slots(&self, name: &str) -> Vec<usize> {
+        self.slots_where(|p| p.name == name)
     }
 }
 

@@ -29,17 +29,82 @@ pub mod presets;
 pub use crate::netsim::engine;
 pub use crate::netsim::EventQueue;
 
-use crate::collective::{CollAlgo, CollectiveConfig, CollectiveKind};
+use crate::collective::{CollAlgo, CollectiveConfig, CollectiveKind, MultiDimPolicy};
 use crate::compute::{ComputeDevice, MEM_LIMIT_BYTES};
 use crate::netsim::{
-    Analytical, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend, OverlapCall,
+    serial_drain, Analytical, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend, OverlapCall,
 };
 use crate::topology::{DimCost, Topology};
 use crate::workload::{
     footprint, generate_trace, group_dim_costs, CommGroup, ExecutionMode, MemoryFootprint,
-    ModelConfig, Parallelization, TraceOp,
+    ModelConfig, Parallelization, Trace, TraceOp,
 };
+use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::Arc;
+
+/// Cache key of one priced multi-dimensional collective. Together the
+/// fields pin down every input the cost depends on: the backend's
+/// pricing state ([`NetworkBackend::cache_tag`]), the topology the
+/// communicator spans ([`Topology::fingerprint`] + rank-space
+/// stride/size, which determine the spanned dimensions), and the
+/// collective-stack knobs. Keys are valid *across* evaluations, so one
+/// [`CollCostMemo`] may be shared by a whole DSE sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CollKey {
+    /// Backend pricing fingerprint ([`NetworkBackend::cache_tag`]).
+    pub backend: u64,
+    /// Topology fingerprint ([`Topology::fingerprint`]).
+    pub topology: u64,
+    /// Fingerprint of the per-dimension algorithm assignment.
+    pub algos: u64,
+    pub policy: MultiDimPolicy,
+    pub kind: CollectiveKind,
+    /// Communicator rank-space stride (with `size`, this determines the
+    /// spanned dimensions for a given topology).
+    pub stride: u64,
+    /// Communicator size (ranks).
+    pub size: u64,
+    /// Per-NPU payload bytes, exact bit pattern.
+    pub bytes: u64,
+    pub chunks: u32,
+}
+
+/// The collective-cost memo consulted by [`Simulator::price`]: `cost_us`
+/// returns the cached cost for `key` or computes, stores and returns it.
+/// [`LocalCollMemo`] is the per-run default; `cosmic::dse::EvalCache`
+/// provides a sharded, thread-safe memo shared across evaluations.
+pub trait CollCostMemo {
+    fn cost_us(&mut self, key: &CollKey, compute: &mut dyn FnMut() -> f64) -> f64;
+}
+
+/// Per-run hashed memo: traces repeat the same (kind, group, bytes)
+/// collective once per layer, so even a run-local memo removes ~4x
+/// redundant alpha-beta walks.
+#[derive(Debug, Default)]
+pub struct LocalCollMemo {
+    map: HashMap<CollKey, f64>,
+}
+
+impl CollCostMemo for LocalCollMemo {
+    fn cost_us(&mut self, key: &CollKey, compute: &mut dyn FnMut() -> f64) -> f64 {
+        if let Some(v) = self.map.get(key) {
+            return *v;
+        }
+        let v = compute();
+        self.map.insert(*key, v);
+        v
+    }
+}
+
+fn algos_fingerprint(algos: &[CollAlgo]) -> u64 {
+    crate::util::hash64(|h| {
+        algos.len().hash(h);
+        for a in algos {
+            (*a as u8).hash(h);
+        }
+    })
+}
 
 /// A complete cluster design point: the three non-workload stacks.
 #[derive(Debug, Clone, PartialEq)]
@@ -198,6 +263,12 @@ impl Simulator {
 
     /// Simulate one design point. Returns `Err(Invalid)` for rejected
     /// configurations (the DSE maps those to zero reward).
+    ///
+    /// This is [`Simulator::preflight`] → [`generate_trace`] →
+    /// [`Simulator::price`] with a fresh per-run memo; callers that
+    /// evaluate many related points (the DSE hot path) should run the
+    /// stages themselves, reusing cached traces and a shared
+    /// [`CollCostMemo`] (see `cosmic::dse::EvalCache`).
     pub fn run(
         &self,
         cluster: &ClusterConfig,
@@ -206,10 +277,24 @@ impl Simulator {
         batch: u64,
         mode: ExecutionMode,
     ) -> Result<SimReport, Invalid> {
+        let mem = self.preflight(cluster, model, par, batch, mode)?;
+        let trace = generate_trace(model, par, batch, mode).map_err(Invalid::Config)?;
+        Ok(self.price(cluster, par, &trace, mem, mode, &mut LocalCollMemo::default()))
+    }
+
+    /// Stage 1 of a run: structural validation plus the §5.4 memory
+    /// constraint. Cheap and allocation-light — the screening gate
+    /// before any trace is built or priced.
+    pub fn preflight(
+        &self,
+        cluster: &ClusterConfig,
+        model: &ModelConfig,
+        par: &Parallelization,
+        batch: u64,
+        mode: ExecutionMode,
+    ) -> Result<MemoryFootprint, Invalid> {
         cluster.validate().map_err(Invalid::Config)?;
         par.validate(cluster.npus()).map_err(Invalid::Config)?;
-
-        // §5.4 memory constraint.
         let mem = footprint(model, par, batch, mode);
         if !mem.fits(self.mem_budget_bytes) {
             return Err(Invalid::Memory {
@@ -217,24 +302,43 @@ impl Simulator {
                 budget_gb: self.mem_budget_bytes / 1e9,
             });
         }
+        Ok(mem)
+    }
 
-        let trace = generate_trace(model, par, batch, mode).map_err(Invalid::Config)?;
+    /// Stage 3 of a run: price an instantiated trace on the network and
+    /// compute substrate. The trace may come straight from
+    /// [`generate_trace`] or from a cross-evaluation cache (it depends
+    /// only on `(model, parallelization, batch, mode)`, not on the
+    /// cluster). All collective costs route through `memo`, so a shared
+    /// memo amortizes the alpha-beta walks across evaluations.
+    pub fn price(
+        &self,
+        cluster: &ClusterConfig,
+        par: &Parallelization,
+        trace: &Trace,
+        mem: MemoryFootprint,
+        mode: ExecutionMode,
+        memo: &mut dyn CollCostMemo,
+    ) -> SimReport {
         let stage = &trace.stages[0];
 
-        // Per-run memo for collective costs: traces repeat the same
-        // (kind, group, bytes) collective once per layer, so a tiny
-        // linear-scan cache removes ~4x redundant alpha-beta walks
-        // (EXPERIMENTS.md §Perf iteration 1).
-        let mut memo: Vec<(CollectiveKind, CommGroup, f64, f64)> = Vec::with_capacity(8);
+        let backend_fp = self.backend.cache_tag();
+        let topo_fp = cluster.topology.fingerprint();
+        let algos_fp = algos_fingerprint(&cluster.collectives.algorithms);
         let mut coll_cost = |kind: CollectiveKind, group: CommGroup, bytes: f64| -> f64 {
-            for (k, g, b, cost) in memo.iter() {
-                if *k == kind && *g == group && *b == bytes {
-                    return *cost;
-                }
-            }
-            let cost = self.collective_cost_us(cluster, par, kind, group, bytes);
-            memo.push((kind, group, bytes, cost));
-            cost
+            let (stride, size) = Self::group_stride_size(par, group);
+            let key = CollKey {
+                backend: backend_fp,
+                topology: topo_fp,
+                algos: algos_fp,
+                policy: cluster.collectives.multidim,
+                kind,
+                stride,
+                size,
+                bytes: bytes.to_bits(),
+                chunks: cluster.collectives.chunks,
+            };
+            memo.cost_us(&key, &mut || self.collective_cost_us(cluster, par, kind, group, bytes))
         };
 
         // --- per-microbatch stage timelines ---
@@ -300,41 +404,59 @@ impl Simulator {
         let mut exposed_us = 0.0;
         if !grad_bytes.is_empty() && matches!(mode, ExecutionMode::Training) {
             let bwd_start = pipeline_us - b_micro;
-            // Resolve each distinct communicator group's span once.
-            let mut group_spans: Vec<(CommGroup, Vec<(DimCost, usize)>, Vec<CollAlgo>)> =
-                Vec::with_capacity(2);
-            for (_, _, group, _) in &grad_bytes {
-                if !group_spans.iter().any(|(g, _, _)| g == group) {
-                    let (stride, size) = Self::group_stride_size(par, *group);
-                    let span = group_dim_costs(&cluster.topology, stride, size);
-                    let algos: Vec<CollAlgo> =
-                        span.iter().map(|(_, d)| cluster.collectives.algorithms[*d]).collect();
-                    group_spans.push((*group, span, algos));
-                }
-            }
-            let jobs: Vec<OverlapCall> = grad_bytes
-                .iter()
-                .map(|(layer, kind, group, bytes)| {
-                    let (_, span, algos) =
-                        group_spans.iter().find(|(g, _, _)| g == group).unwrap();
-                    let frac = (layers - layer) as f64 / layers as f64;
-                    OverlapCall {
-                        layer: *layer,
-                        issue_us: bwd_start + frac * b_compute,
-                        call: CollectiveCall {
-                            kind: *kind,
-                            policy: cluster.collectives.multidim,
-                            algos,
-                            span,
-                            topology: &cluster.topology,
-                            bytes: *bytes,
-                            chunks: cluster.collectives.chunks,
-                        },
+            let completions = if self.backend.drain_is_serial() {
+                // Serial-resource backends price each job independently:
+                // route the durations through the cross-evaluation memo
+                // (same keys as blocking collectives) and sweep the
+                // arrivals, instead of re-walking alpha-beta costs in
+                // the backend on every drain.
+                let tuples: Vec<(u64, f64, f64)> = grad_bytes
+                    .iter()
+                    .map(|(layer, kind, group, bytes)| {
+                        let frac = (layers - layer) as f64 / layers as f64;
+                        (*layer, bwd_start + frac * b_compute, coll_cost(*kind, *group, *bytes))
+                    })
+                    .collect();
+                serial_drain(&tuples, cluster.collectives.scheduling)
+            } else {
+                // Holistic backends (flow-level contention) see all jobs
+                // at once; per-job costs are not separable, so nothing
+                // here is memoizable across evaluations.
+                // Resolve each distinct communicator group's span once.
+                let mut group_spans: Vec<(CommGroup, Vec<(DimCost, usize)>, Vec<CollAlgo>)> =
+                    Vec::with_capacity(2);
+                for (_, _, group, _) in &grad_bytes {
+                    if !group_spans.iter().any(|(g, _, _)| g == group) {
+                        let (stride, size) = Self::group_stride_size(par, *group);
+                        let span = group_dim_costs(&cluster.topology, stride, size);
+                        let algos: Vec<CollAlgo> =
+                            span.iter().map(|(_, d)| cluster.collectives.algorithms[*d]).collect();
+                        group_spans.push((*group, span, algos));
                     }
-                })
-                .collect();
-            let completions =
-                self.backend.drain_overlapped(&jobs, cluster.collectives.scheduling);
+                }
+                let jobs: Vec<OverlapCall> = grad_bytes
+                    .iter()
+                    .map(|(layer, kind, group, bytes)| {
+                        let (_, span, algos) =
+                            group_spans.iter().find(|(g, _, _)| g == group).unwrap();
+                        let frac = (layers - layer) as f64 / layers as f64;
+                        OverlapCall {
+                            layer: *layer,
+                            issue_us: bwd_start + frac * b_compute,
+                            call: CollectiveCall {
+                                kind: *kind,
+                                policy: cluster.collectives.multidim,
+                                algos,
+                                span,
+                                topology: &cluster.topology,
+                                bytes: *bytes,
+                                chunks: cluster.collectives.chunks,
+                            },
+                        }
+                    })
+                    .collect();
+                self.backend.drain_overlapped(&jobs, cluster.collectives.scheduling)
+            };
             // Exposed tail: completion minus (iteration end + fwd slack).
             for (layer, done_us) in completions {
                 let slack = layer as f64 / layers as f64 * f_micro;
@@ -353,7 +475,7 @@ impl Simulator {
         let achieved_tflops =
             if latency_us > 0.0 { total_flops / (latency_us * 1e6) } else { 0.0 };
 
-        Ok(SimReport {
+        SimReport {
             latency_us,
             compute_us,
             comm_blocking_us,
@@ -361,7 +483,7 @@ impl Simulator {
             memory: mem,
             microbatches: trace.microbatches,
             achieved_tflops,
-        })
+        }
     }
 }
 
@@ -520,6 +642,46 @@ mod tests {
             .unwrap();
         assert!(with_pp.memory.total() < no_pp.memory.total());
         assert!(with_pp.microbatches > no_pp.microbatches);
+    }
+
+    #[test]
+    fn staged_pipeline_matches_run_bit_for_bit() {
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 2, 1, true);
+        let sim = Simulator::new();
+        let direct = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        let mem = sim.preflight(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        let trace = generate_trace(&m, &p, 128, ExecutionMode::Training).unwrap();
+        let mut memo = LocalCollMemo::default();
+        let staged = sim.price(&c, &p, &trace, mem, ExecutionMode::Training, &mut memo);
+        assert_eq!(direct, staged);
+        // Re-pricing against the warm memo stays bit-identical.
+        let again = sim.price(&c, &p, &trace, mem, ExecutionMode::Training, &mut memo);
+        assert_eq!(direct, again);
+    }
+
+    #[test]
+    fn shared_memo_isolates_different_clusters() {
+        // One memo priced against two clusters must reproduce each
+        // cluster's independent result — the CollKey fingerprints carry
+        // the full pricing context.
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let c1 = small_cluster(SchedulingPolicy::Fifo);
+        let mut c2 = c1.clone();
+        c2.topology.dims[1].bandwidth_gbps *= 2.0;
+        let mut c3 = c1.clone();
+        c3.collectives.chunks = 8;
+        let sim = Simulator::new();
+        let mut memo = LocalCollMemo::default();
+        for c in [&c1, &c2, &c3] {
+            let fresh = sim.run(c, &m, &p, 128, ExecutionMode::Training).unwrap();
+            let mem = sim.preflight(c, &m, &p, 128, ExecutionMode::Training).unwrap();
+            let trace = generate_trace(&m, &p, 128, ExecutionMode::Training).unwrap();
+            let shared = sim.price(c, &p, &trace, mem, ExecutionMode::Training, &mut memo);
+            assert_eq!(fresh, shared, "memo leaked across clusters");
+        }
     }
 
     #[test]

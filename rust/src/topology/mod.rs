@@ -187,6 +187,21 @@ impl Topology {
         self.dims.iter().map(|d| d.bandwidth_gbps).sum()
     }
 
+    /// A stable structural fingerprint (kinds, sizes, bandwidths,
+    /// latencies). Two topologies with equal fingerprints resolve every
+    /// communicator span to the same [`DimCost`]s — the topology half of
+    /// the cross-evaluation collective-cost cache key.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::Hash;
+        crate::util::hash64(|h| {
+            self.dims.len().hash(h);
+            for d in &self.dims {
+                (d.kind as u8, d.npus, d.bandwidth_gbps.to_bits(), d.latency_us.to_bits())
+                    .hash(h);
+            }
+        })
+    }
+
     /// Paper-style notation, e.g. `[RI, FC, RI, SW]`.
     pub fn notation(&self) -> String {
         let inner: Vec<&str> = self.dims.iter().map(|d| d.kind.short()).collect();

@@ -11,3 +11,28 @@ pub mod stats;
 
 pub use par::parallel_map;
 pub use rng::Rng;
+
+/// Fold a stream of `Hash`ed fields into a stable 64-bit fingerprint —
+/// the one place the create-hasher / hash-fields / finish boilerplate
+/// lives (cache keys in `sim`, `dse::evalcache`, `netsim`, model and
+/// topology fingerprints).
+pub fn hash64(feed: impl FnOnce(&mut std::collections::hash_map::DefaultHasher)) -> u64 {
+    use std::hash::Hasher;
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    feed(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::hash::Hash;
+
+    #[test]
+    fn hash64_is_stable_and_input_sensitive() {
+        let a = super::hash64(|h| (1u64, "x").hash(h));
+        let b = super::hash64(|h| (1u64, "x").hash(h));
+        let c = super::hash64(|h| (2u64, "x").hash(h));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -85,6 +85,19 @@ impl ModelConfig {
         self.layers as f64 / self.simulated_layers as f64
     }
 
+    /// A stable fingerprint of every field the Workload Trace Generator
+    /// reads — the model half of the cross-evaluation trace cache key
+    /// (`cosmic::dse::EvalCache`).
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::Hash;
+        crate::util::hash64(|h| {
+            self.name.hash(h);
+            (self.layers, self.hidden, self.ffn, self.seq, self.heads).hash(h);
+            self.simulated_layers.hash(h);
+            self.moe.map(|m| (m.experts, m.top_k, m.frequency)).hash(h);
+        })
+    }
+
     /// Parameters of one transformer layer: attention (QKV + out
     /// projection) + MLP (up + down) + layernorms.
     pub fn params_per_layer(&self) -> u64 {

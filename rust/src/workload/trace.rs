@@ -93,7 +93,7 @@ pub struct Trace {
 
 /// Workload Trace Generator inputs beyond the model: training vs the
 /// paper's §6.3 inference scenarios.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecutionMode {
     Training,
     /// Inference prefill: full-sequence forward only.

@@ -2,7 +2,7 @@
 //! agents → environment → simulator, on the paper's systems/workloads.
 
 use cosmic::agents::AgentKind;
-use cosmic::dse::{DseConfig, DseRunner, Objective, WorkloadSpec};
+use cosmic::dse::{DseConfig, DseRunner, Objective, SearchStrategy, WorkloadSpec};
 use cosmic::harness::{make_env, make_env_with_fidelity, median_baseline_par, scoped_search};
 use cosmic::netsim::{FidelityMode, FlowLevelConfig};
 use cosmic::psa::{builders::names, Stack};
@@ -138,6 +138,98 @@ fn fidelity_knob_searches_and_reranks_end_to_end() {
         lat(&reranked),
         lat(&screened)
     );
+}
+
+#[test]
+fn staged_search_meets_or_beats_analytical_rescored_at_flow() {
+    // The staged acceptance claim: screening analytically and promoting
+    // the running top-K to flow level must end at least as well (by
+    // final flow-level reward) as analytical-only search re-scored at
+    // flow level — with only promote_top_k flow-level simulations.
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let cfg = DseConfig::new(AgentKind::Ga, 150, 13);
+
+    let mut analytical_env = make_env(
+        presets::system2(),
+        vec![WorkloadSpec::training(model.clone(), 2048)],
+        Objective::PerfPerBwPerNpu,
+    )
+    .with_flow_config(FlowLevelConfig::oversubscribed(4.0));
+    let analytical = DseRunner::new(cfg, SearchScope::FullStack).run(&mut analytical_env);
+    assert!(analytical.best_reward > 0.0);
+    let rescored =
+        analytical_env.evaluate_with(&analytical.best_genome, FidelityMode::FlowLevel).reward;
+
+    let mut staged_env = make_env(
+        presets::system2(),
+        vec![WorkloadSpec::training(model, 2048)],
+        Objective::PerfPerBwPerNpu,
+    )
+    .with_flow_config(FlowLevelConfig::oversubscribed(4.0));
+    let staged = DseRunner::new(cfg, SearchScope::FullStack)
+        .with_strategy(SearchStrategy::Staged { promote_top_k: 8 })
+        .run(&mut staged_env);
+
+    assert!(
+        staged.best_reward >= rescored,
+        "staged flow reward {:.6e} < analytical-rescored {:.6e}",
+        staged.best_reward,
+        rescored
+    );
+    // The flow-level budget is the finalist count, a fraction of the
+    // one-per-step budget a pure flow-level run would spend.
+    assert!(staged.flow_evals <= 8, "staged spent {} flow evals", staged.flow_evals);
+    assert!(!staged.finalists.is_empty());
+    assert!(!staged.best_reports.is_empty(), "staged winner's reports must materialize");
+}
+
+#[test]
+fn cache_enabled_evaluation_bit_identical_for_all_agents() {
+    // Every genome any agent proposes must evaluate to the exact same
+    // StepOutcome through the cross-evaluation cache as through the
+    // cache-free path: caching must never perturb the search.
+    let model = wl::gpt3_13b().with_simulated_layers(2);
+    for agent in AgentKind::ALL {
+        let cached_env = make_env(
+            presets::system1(),
+            vec![WorkloadSpec::training(model.clone(), 2048)],
+            Objective::PerfPerBwPerNpu,
+        );
+        let fresh_env = make_env(
+            presets::system1(),
+            vec![WorkloadSpec::training(model.clone(), 2048)],
+            Objective::PerfPerBwPerNpu,
+        );
+        let space = cached_env.pss.build_space(SearchScope::FullStack);
+        let mut driver = agent.build(space, 31);
+        for _round in 0..3 {
+            let proposals = driver.ask();
+            let mut results = Vec::with_capacity(proposals.len());
+            for g in &proposals {
+                let cached = cached_env.evaluate_nomemo(g);
+                let uncached = fresh_env.evaluate_uncached(g);
+                assert_eq!(
+                    cached,
+                    uncached,
+                    "{}: cached evaluation diverged from uncached",
+                    agent.name()
+                );
+                assert_eq!(cached.reward.to_bits(), uncached.reward.to_bits());
+                // The memoized path must agree on reward and validity too.
+                let memoized = cached_env.evaluate(g);
+                assert_eq!(memoized.reward.to_bits(), uncached.reward.to_bits());
+                assert_eq!(memoized.invalid_reason, uncached.invalid_reason);
+                results.push((g.clone(), cached.reward));
+            }
+            driver.tell(&results);
+        }
+        let stats = cached_env.eval_cache_stats();
+        assert!(
+            stats.trace_hits + stats.coll_hits > 0,
+            "{}: cross-eval cache never hit",
+            agent.name()
+        );
+    }
 }
 
 #[test]
