@@ -14,6 +14,10 @@
 //!    (analytical screening, top-K promoted to flow level). Targets:
 //!    ≥ 5x end-to-end speedup, equal-or-better final flow-level reward,
 //!    ≤ 1/3 the flow-level evaluations.
+//! 3. **Tracing overhead** — one design point simulated with the
+//!    default no-op trace sink vs an attached `obs::Recorder`. The
+//!    recorded run must produce a bit-identical report (hard gate:
+//!    tracing is observation-only); the slowdown ratio is advisory.
 //!
 //! Usage: `cargo bench --bench eval_throughput [-- --smoke] [-- --out FILE]`
 //! `--smoke` shrinks the workload for CI and keeps the regression
@@ -25,11 +29,14 @@ use cosmic::agents::AgentKind;
 use cosmic::dse::{DseConfig, DseRunner, Environment, Objective, SearchStrategy, WorkloadSpec};
 use cosmic::harness::make_env;
 use cosmic::netsim::{FidelityMode, FlowLevelConfig};
+use cosmic::obs::Recorder;
 use cosmic::pss::SearchScope;
-use cosmic::sim::presets;
+use cosmic::sim::{presets, Simulator};
 use cosmic::util::Rng;
 use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, Parallelization};
 use std::hint::black_box;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn fresh_env() -> Environment {
@@ -133,6 +140,40 @@ fn main() {
         flow.flow_evals
     );
 
+    // --- 3: tracing overhead on one design point ---
+    let cluster = presets::system2();
+    let model = wl::gpt3_175b().with_simulated_layers(8);
+    let par = Parallelization::derive(cluster.npus(), 64, 4, 1, true).unwrap();
+    let reps = if smoke { 40 } else { 200 };
+
+    let plain_sim = Simulator::new(); // default no-op sink
+    let t0 = Instant::now();
+    let mut plain_report = None;
+    for _ in 0..reps {
+        plain_report = Some(black_box(
+            plain_sim.run(&cluster, &model, &par, 2048, ExecutionMode::Training).unwrap(),
+        ));
+    }
+    let plain_s = t0.elapsed().as_secs_f64();
+
+    let rec = Arc::new(Recorder::new());
+    let traced_sim = Simulator::new().with_trace_sink(Arc::clone(&rec));
+    let t0 = Instant::now();
+    let mut traced_report = None;
+    for _ in 0..reps {
+        rec.clear();
+        traced_report = Some(black_box(
+            traced_sim.run(&cluster, &model, &par, 2048, ExecutionMode::Training).unwrap(),
+        ));
+    }
+    let traced_s = t0.elapsed().as_secs_f64();
+    let trace_ratio = traced_s / plain_s.max(1e-9);
+    println!(
+        "\ntracing overhead ({reps} reps): plain {plain_s:.3}s vs traced {traced_s:.3}s \
+         ({trace_ratio:.2}x, {} spans/run; advisory)",
+        rec.span_count()
+    );
+
     // --- regression gates (computed first so the JSON records them) ---
     // Smoke thresholds are deliberately loose: same-process ratios on a
     // noisy shared runner, never validated on this hardware before CI.
@@ -165,6 +206,8 @@ fn main() {
         ("staged_best_reward", format!("{:.6e}", staged.best_reward)),
         ("flow_evals_pure", flow.flow_evals.to_string()),
         ("flow_evals_staged", staged.flow_evals.to_string()),
+        ("trace_overhead_ratio", format!("{trace_ratio:.3}")),
+        ("trace_spans_per_run", rec.span_count().to_string()),
     ];
     let body: Vec<String> =
         fields.iter().map(|(k, v)| format!("  \"{k}\": {v}")).collect();
@@ -187,6 +230,11 @@ fn main() {
     // advisory in smoke mode so shared-CI noise cannot block merges.
     let budget_ratio = staged.flow_evals as f64 / steps as f64;
     let mut failures = Vec::new();
+    // Deterministic gate: an attached trace sink must never perturb the
+    // priced report (bit-identical to the untraced run).
+    if plain_report != traced_report {
+        failures.push("tracing perturbed the simulation report".to_string());
+    }
     if warm_speedup < min_warm {
         failures.push(format!("warm-cache speedup {warm_speedup:.2}x < {min_warm}x"));
     }

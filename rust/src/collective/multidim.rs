@@ -60,6 +60,16 @@ pub struct PhaseSpec {
     pub wire_bytes: f64,
 }
 
+impl PhaseSpec {
+    /// Ideal (uncongested) duration of this phase on its dimension:
+    /// the alpha debt plus the wire bytes at the dimension's full beta
+    /// rate. Both the composition fold and the trace exporter's phase
+    /// decomposition price phases through here.
+    pub fn duration_us(&self, dim: &DimCost) -> f64 {
+        self.alpha_us + self.wire_bytes / dim.beta_bytes_per_us
+    }
+}
+
 fn phase_of(
     algo: CollAlgo,
     kind: CollectiveKind,
@@ -203,11 +213,7 @@ pub fn multidim_collective_time_us(
     PLAN_BUF.with(|buf| {
         let mut plan = buf.borrow_mut();
         phase_plan_into(kind, algos, dims, chunk_bytes, &mut plan);
-        compose_durations(
-            policy,
-            plan.iter().map(|p| p.alpha_us + p.wire_bytes / dims[p.span_dim].beta_bytes_per_us),
-            chunks,
-        )
+        compose_durations(policy, plan.iter().map(|p| p.duration_us(&dims[p.span_dim])), chunks)
     })
 }
 

@@ -18,10 +18,18 @@
 //! cache is *exact*: keys cover every input the cached value depends
 //! on, so cached and uncached evaluation produce bit-identical
 //! [`crate::dse::StepOutcome`]s (asserted by the end-to-end tests).
+//!
+//! Capacity is optionally bounded ([`EvalCache::with_capacity`]): each
+//! shard keeps a FIFO "clock" queue and evicts with the second-chance
+//! policy — an entry touched since it last reached the queue front is
+//! recycled instead of dropped, so the hot working set (the traces and
+//! collectives the search keeps revisiting) survives while one-off
+//! artifacts age out. Evictions are counted in [`EvalCacheStats`] and
+//! surfaced through the search telemetry.
 
 use crate::sim::{CollCostMemo, CollKey};
 use crate::workload::{generate_trace, ExecutionMode, ModelConfig, Parallelization, Trace};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -62,14 +70,93 @@ fn shard_of<K: Hash>(key: &K) -> usize {
     (crate::util::hash64(|h| key.hash(h)) as usize) % SHARDS
 }
 
-/// Hit/miss counters of one [`EvalCache`] (monotone since construction
-/// or the last [`EvalCache::clear`]).
+/// Per-shard capacity for a whole-cache budget of `total` entries.
+/// `0` means unbounded; otherwise every shard gets at least one slot.
+fn per_shard_cap(total: usize) -> usize {
+    if total == 0 {
+        0
+    } else {
+        total.div_ceil(SHARDS).max(1)
+    }
+}
+
+/// One cache shard: a hash map paired with a FIFO "clock" queue
+/// implementing second-chance eviction. `cap == 0` means unbounded.
+///
+/// Invariant: every key in `map` appears exactly once in `queue` (keys
+/// enter the queue only on first insert and are re-pushed only when the
+/// clock hand recycles them), so the eviction sweep terminates — each
+/// pass either clears a reference bit, drops a stale entry, or evicts.
+#[derive(Debug)]
+struct Shard<K, V> {
+    map: HashMap<K, (V, bool)>,
+    queue: VecDeque<K>,
+    cap: usize,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Shard<K, V> {
+    fn new(cap: usize) -> Self {
+        Self { map: HashMap::new(), queue: VecDeque::new(), cap }
+    }
+
+    /// Lookup that sets the entry's second-chance bit.
+    fn get(&mut self, key: &K) -> Option<V> {
+        self.map.get_mut(key).map(|slot| {
+            slot.1 = true;
+            slot.0.clone()
+        })
+    }
+
+    /// Insert `value` under `key`; the first insert wins a race (if the
+    /// key is already present the stored value is returned instead).
+    /// Returns the surviving value and how many entries were evicted to
+    /// make room.
+    fn insert_or_get(&mut self, key: K, value: V) -> (V, u64) {
+        if let Some(slot) = self.map.get_mut(&key) {
+            slot.1 = true;
+            return (slot.0.clone(), 0);
+        }
+        self.map.insert(key.clone(), (value.clone(), false));
+        self.queue.push_back(key);
+        let mut evicted = 0;
+        if self.cap > 0 {
+            while self.map.len() > self.cap {
+                let Some(candidate) = self.queue.pop_front() else {
+                    break;
+                };
+                match self.map.get_mut(&candidate) {
+                    Some((_, referenced)) if *referenced => {
+                        // Second chance: clear the bit, recycle to the back.
+                        *referenced = false;
+                        self.queue.push_back(candidate);
+                    }
+                    Some(_) => {
+                        self.map.remove(&candidate);
+                        evicted += 1;
+                    }
+                    None => {} // stale queue entry; drop it
+                }
+            }
+        }
+        (value, evicted)
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.queue.clear();
+    }
+}
+
+/// Hit/miss/eviction counters of one [`EvalCache`] (monotone since
+/// construction or the last [`EvalCache::clear`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EvalCacheStats {
     pub trace_hits: u64,
     pub trace_misses: u64,
+    pub trace_evictions: u64,
     pub coll_hits: u64,
     pub coll_misses: u64,
+    pub coll_evictions: u64,
 }
 
 /// The persistent, sharded, thread-safe cross-evaluation memo. One
@@ -79,12 +166,14 @@ pub struct EvalCacheStats {
 /// tag inside [`CollKey`] and the full [`TraceKey`].
 #[derive(Debug)]
 pub struct EvalCache {
-    traces: Vec<Mutex<HashMap<TraceKey, Arc<Trace>>>>,
-    colls: Vec<Mutex<HashMap<CollKey, f64>>>,
+    traces: Vec<Mutex<Shard<TraceKey, Arc<Trace>>>>,
+    colls: Vec<Mutex<Shard<CollKey, f64>>>,
     trace_hits: AtomicU64,
     trace_misses: AtomicU64,
+    trace_evictions: AtomicU64,
     coll_hits: AtomicU64,
     coll_misses: AtomicU64,
+    coll_evictions: AtomicU64,
 }
 
 impl Default for EvalCache {
@@ -94,14 +183,28 @@ impl Default for EvalCache {
 }
 
 impl EvalCache {
+    /// An unbounded cache (the default): nothing is ever evicted.
     pub fn new() -> Self {
+        Self::with_capacity(0, 0)
+    }
+
+    /// A bounded cache holding at most roughly `trace_cap` traces and
+    /// `coll_cap` collective costs (`0` = unbounded). Budgets are split
+    /// evenly across shards (rounded up, minimum one slot per shard),
+    /// so the effective ceiling can exceed the request by up to
+    /// `SHARDS - 1` entries.
+    pub fn with_capacity(trace_cap: usize, coll_cap: usize) -> Self {
+        let tc = per_shard_cap(trace_cap);
+        let cc = per_shard_cap(coll_cap);
         Self {
-            traces: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-            colls: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            traces: (0..SHARDS).map(|_| Mutex::new(Shard::new(tc))).collect(),
+            colls: (0..SHARDS).map(|_| Mutex::new(Shard::new(cc))).collect(),
             trace_hits: AtomicU64::new(0),
             trace_misses: AtomicU64::new(0),
+            trace_evictions: AtomicU64::new(0),
             coll_hits: AtomicU64::new(0),
             coll_misses: AtomicU64::new(0),
+            coll_evictions: AtomicU64::new(0),
         }
     }
 
@@ -120,7 +223,7 @@ impl EvalCache {
         let shard = &self.traces[shard_of(&key)];
         if let Some(hit) = shard.lock().unwrap().get(&key) {
             self.trace_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(hit));
+            return Ok(hit);
         }
         // Generate outside the lock: instantiation is the expensive part
         // and must not serialize the other shard users. A racing thread
@@ -128,9 +231,11 @@ impl EvalCache {
         // the first insert wins.
         let trace = Arc::new(generate_trace(model, par, batch, mode)?);
         self.trace_misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = shard.lock().unwrap();
-        let entry = guard.entry(key).or_insert_with(|| Arc::clone(&trace));
-        Ok(Arc::clone(entry))
+        let (kept, evicted) = shard.lock().unwrap().insert_or_get(key, trace);
+        if evicted > 0 {
+            self.trace_evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        Ok(kept)
     }
 
     /// A [`CollCostMemo`] view over the shared collective-cost shards,
@@ -143,12 +248,15 @@ impl EvalCache {
         EvalCacheStats {
             trace_hits: self.trace_hits.load(Ordering::Relaxed),
             trace_misses: self.trace_misses.load(Ordering::Relaxed),
+            trace_evictions: self.trace_evictions.load(Ordering::Relaxed),
             coll_hits: self.coll_hits.load(Ordering::Relaxed),
             coll_misses: self.coll_misses.load(Ordering::Relaxed),
+            coll_evictions: self.coll_evictions.load(Ordering::Relaxed),
         }
     }
 
-    /// Drop every cached artifact and reset the counters.
+    /// Drop every cached artifact and reset the counters. Capacity
+    /// limits are retained.
     pub fn clear(&self) {
         for s in &self.traces {
             s.lock().unwrap().clear();
@@ -158,8 +266,10 @@ impl EvalCache {
         }
         self.trace_hits.store(0, Ordering::Relaxed);
         self.trace_misses.store(0, Ordering::Relaxed);
+        self.trace_evictions.store(0, Ordering::Relaxed);
         self.coll_hits.store(0, Ordering::Relaxed);
         self.coll_misses.store(0, Ordering::Relaxed);
+        self.coll_evictions.store(0, Ordering::Relaxed);
     }
 }
 
@@ -173,14 +283,17 @@ impl CollCostMemo for SharedCollMemo<'_> {
         let shard = &self.cache.colls[shard_of(key)];
         if let Some(v) = shard.lock().unwrap().get(key) {
             self.cache.coll_hits.fetch_add(1, Ordering::Relaxed);
-            return *v;
+            return v;
         }
         // Price outside the lock; duplicate computation on a race is
         // deterministic, so whichever insert lands is the same value.
         let v = compute();
         self.cache.coll_misses.fetch_add(1, Ordering::Relaxed);
-        shard.lock().unwrap().insert(*key, v);
-        v
+        let (kept, evicted) = shard.lock().unwrap().insert_or_get(*key, v);
+        if evicted > 0 {
+            self.cache.coll_evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        kept
     }
 }
 
@@ -191,6 +304,20 @@ mod tests {
 
     fn par() -> Parallelization {
         Parallelization::derive(64, 8, 1, 1, true).unwrap()
+    }
+
+    fn coll_key(topology: u64) -> CollKey {
+        CollKey {
+            backend: 1,
+            topology,
+            algos: 3,
+            policy: crate::collective::MultiDimPolicy::Baseline,
+            kind: crate::collective::CollectiveKind::AllReduce,
+            stride: 1,
+            size: 8,
+            bytes: 1e6f64.to_bits(),
+            chunks: 4,
+        }
     }
 
     #[test]
@@ -239,17 +366,7 @@ mod tests {
     #[test]
     fn coll_memo_computes_once_per_key() {
         let cache = EvalCache::new();
-        let key = CollKey {
-            backend: 1,
-            topology: 2,
-            algos: 3,
-            policy: crate::collective::MultiDimPolicy::Baseline,
-            kind: crate::collective::CollectiveKind::AllReduce,
-            stride: 1,
-            size: 8,
-            bytes: 1e6f64.to_bits(),
-            chunks: 4,
-        };
+        let key = coll_key(2);
         let mut calls = 0;
         let mut memo = cache.coll_memo();
         let a = memo.cost_us(&key, &mut || {
@@ -274,5 +391,82 @@ mod tests {
         assert_eq!(cache.stats(), EvalCacheStats::default());
         cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
         assert_eq!(cache.stats().trace_misses, 1);
+    }
+
+    #[test]
+    fn shard_second_chance_prefers_referenced_entries() {
+        let mut s: Shard<u32, u32> = Shard::new(2);
+        assert_eq!(s.insert_or_get(1, 10), (10, 0));
+        assert_eq!(s.insert_or_get(2, 20), (20, 0));
+        assert_eq!(s.get(&1), Some(10)); // set 1's second-chance bit
+        let (v, evicted) = s.insert_or_get(3, 30);
+        assert_eq!((v, evicted), (30, 1));
+        assert_eq!(s.get(&1), Some(10), "referenced entry survives the sweep");
+        assert_eq!(s.get(&2), None, "unreferenced entry is the victim");
+        assert_eq!(s.get(&3), Some(30));
+    }
+
+    #[test]
+    fn shard_insert_or_get_keeps_first_value() {
+        let mut s: Shard<u32, u32> = Shard::new(0);
+        assert_eq!(s.insert_or_get(7, 70), (70, 0));
+        assert_eq!(s.insert_or_get(7, 71), (70, 0), "first insert wins");
+        assert_eq!(s.map.len(), 1);
+        assert_eq!(s.queue.len(), 1);
+    }
+
+    #[test]
+    fn unbounded_shard_never_evicts() {
+        let mut s: Shard<u32, u32> = Shard::new(0);
+        let total: u64 = (0..100).map(|i| s.insert_or_get(i, i).1).sum();
+        assert_eq!(total, 0);
+        assert_eq!(s.map.len(), 100);
+    }
+
+    #[test]
+    fn bounded_trace_cache_evicts_and_stays_correct() {
+        // trace_cap = 1 → one slot per shard; 20 distinct keys over 16
+        // shards guarantee at least one collision, hence evictions.
+        let cache = EvalCache::with_capacity(1, 0);
+        let m = wl::gpt3_13b().with_simulated_layers(2);
+        let p = par();
+        for i in 0..20u64 {
+            cache.trace(&m, &p, 64 * (i + 1), ExecutionMode::Training).unwrap();
+        }
+        assert!(cache.stats().trace_evictions > 0, "capacity 1 must evict");
+        // An evicted key regenerates to exactly the direct result.
+        let again = cache.trace(&m, &p, 64, ExecutionMode::Training).unwrap();
+        let direct = generate_trace(&m, &p, 64, ExecutionMode::Training).unwrap();
+        assert_eq!(*again, direct);
+    }
+
+    #[test]
+    fn bounded_coll_cache_counts_evictions_and_recomputes() {
+        let cache = EvalCache::with_capacity(0, 1);
+        let mut memo = cache.coll_memo();
+        for i in 0..40 {
+            let v = memo.cost_us(&coll_key(i), &mut || i as f64);
+            assert_eq!(v, i as f64);
+        }
+        assert!(cache.stats().coll_evictions > 0, "capacity 1 must evict");
+        // Re-pricing any key — evicted or not — stays deterministic.
+        let v = memo.cost_us(&coll_key(0), &mut || 0.0);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn capacity_survives_clear() {
+        let cache = EvalCache::with_capacity(1, 0);
+        let m = wl::gpt3_13b().with_simulated_layers(2);
+        let p = par();
+        for i in 0..20u64 {
+            cache.trace(&m, &p, 64 * (i + 1), ExecutionMode::Training).unwrap();
+        }
+        cache.clear();
+        assert_eq!(cache.stats(), EvalCacheStats::default());
+        for i in 0..20u64 {
+            cache.trace(&m, &p, 64 * (i + 1), ExecutionMode::Training).unwrap();
+        }
+        assert!(cache.stats().trace_evictions > 0, "bound persists across clear");
     }
 }

@@ -19,6 +19,9 @@ pub use reward::{reward_from_report, Objective};
 
 use crate::agents::{Agent, AgentKind};
 use crate::netsim::{FidelityMode, FlowLevelConfig};
+use crate::obs::{
+    invalid_category, CacheOutcome, MetricsRegistry, Rung, SearchObserver, SearchStepRecord,
+};
 use crate::pss::{Pss, SearchScope};
 use crate::sim::{ClusterConfig, CollCostMemo, Invalid, LocalCollMemo, SimReport, Simulator};
 use crate::util::parallel_map;
@@ -27,6 +30,7 @@ use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// One workload the environment optimizes for (Table 6 Expr 1 optimizes
 /// an ensemble of all four Table 2 models at once).
@@ -140,6 +144,15 @@ impl Environment {
         self
     }
 
+    /// Bound the cross-evaluation cache (builder style): retain at most
+    /// roughly `trace_cap` traces and `coll_cap` collective costs, with
+    /// unreferenced entries aging out second-chance style. `0` leaves
+    /// the corresponding side unbounded (the default).
+    pub fn with_eval_cache_capacity(mut self, trace_cap: usize, coll_cap: usize) -> Self {
+        self.eval_cache = EvalCache::with_capacity(trace_cap, coll_cap);
+        self
+    }
+
     /// Genomes evaluated (cache misses).
     pub fn evals(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
@@ -164,6 +177,43 @@ impl Environment {
     /// Hit/miss counters of the cross-evaluation trace/collective cache.
     pub fn eval_cache_stats(&self) -> EvalCacheStats {
         self.eval_cache.stats()
+    }
+
+    /// Whether `(genome, fidelity)` is already memoized. A pure peek —
+    /// no counters move — so instrumentation can classify upcoming
+    /// evaluations as hits or misses without perturbing the stats.
+    pub fn is_cached(&self, genome: &[usize], forced: Option<FidelityMode>) -> bool {
+        let tag = fidelity_tag(forced);
+        self.cache[self.shard_of(genome, tag)].lock().unwrap().contains_key(genome)
+    }
+
+    /// Export the environment's evaluation and cache counters into a
+    /// [`MetricsRegistry`] as absolute values — call once, at the end
+    /// of a run (repeated calls overwrite, so the registry always holds
+    /// the latest totals).
+    pub fn export_metrics(&self, metrics: &MetricsRegistry) {
+        metrics.set_counter("env.evals", self.evals());
+        metrics.set_counter("env.cache_hits", self.cache_hits());
+        metrics.set_counter("env.invalid", self.invalid());
+        metrics.set_counter("env.flow_evals", self.flow_evals());
+        let s = self.eval_cache_stats();
+        metrics.set_counter("evalcache.trace_hits", s.trace_hits);
+        metrics.set_counter("evalcache.trace_misses", s.trace_misses);
+        metrics.set_counter("evalcache.trace_evictions", s.trace_evictions);
+        metrics.set_counter("evalcache.coll_hits", s.coll_hits);
+        metrics.set_counter("evalcache.coll_misses", s.coll_misses);
+        metrics.set_counter("evalcache.coll_evictions", s.coll_evictions);
+        let rate = |hits: u64, misses: u64| {
+            let total = hits + misses;
+            if total == 0 {
+                0.0
+            } else {
+                hits as f64 / total as f64
+            }
+        };
+        metrics.set_gauge("env.memo_hit_rate", rate(self.cache_hits(), self.evals()));
+        metrics.set_gauge("evalcache.trace_hit_rate", rate(s.trace_hits, s.trace_misses));
+        metrics.set_gauge("evalcache.coll_hit_rate", rate(s.coll_hits, s.coll_misses));
     }
 
     fn shard_of(&self, genome: &[usize], tag: u8) -> usize {
@@ -539,16 +589,26 @@ pub struct DseRunner {
     pub config: DseConfig,
     pub scope: SearchScope,
     pub strategy: SearchStrategy,
+    /// Optional telemetry sink: when attached, every evaluated step is
+    /// recorded into its timeline and metrics. `None` (the default)
+    /// keeps the search loop observation-free.
+    observer: Option<Arc<SearchObserver>>,
 }
 
 impl DseRunner {
     pub fn new(config: DseConfig, scope: SearchScope) -> Self {
-        Self { config, scope, strategy: SearchStrategy::default() }
+        Self { config, scope, strategy: SearchStrategy::default(), observer: None }
     }
 
     /// Select a [`SearchStrategy`] (builder style).
     pub fn with_strategy(mut self, strategy: SearchStrategy) -> Self {
         self.strategy = strategy;
+        self
+    }
+
+    /// Attach a [`SearchObserver`] (builder style).
+    pub fn with_observer(mut self, observer: Arc<SearchObserver>) -> Self {
+        self.observer = Some(observer);
         self
     }
 
@@ -569,6 +629,11 @@ impl DseRunner {
             SearchStrategy::GenomeFidelity => None,
             SearchStrategy::Fixed(f) => Some(f),
             SearchStrategy::Staged { .. } => Some(FidelityMode::Analytical),
+        };
+        let rung = match screen_fidelity {
+            None => Rung::GenomeKnob,
+            Some(FidelityMode::Analytical) => Rung::Analytical,
+            Some(FidelityMode::FlowLevel) => Rung::FlowLevel,
         };
         let mut topk = match self.strategy {
             SearchStrategy::Staged { promote_top_k } => {
@@ -596,9 +661,17 @@ impl DseRunner {
             // the rewards of what actually ran, as before).
             let remaining = (self.config.steps - step) as usize;
             let take = proposals.len().min(remaining);
+            // Peek the memo *before* evaluating so each step can be
+            // classified as a cache hit or miss; done only when an
+            // observer is attached, keeping the hot path untouched.
+            let precached: Option<Vec<bool>> = self.observer.as_ref().map(|_| {
+                proposals[..take].iter().map(|g| env.is_cached(g, screen_fidelity)).collect()
+            });
+            let batch_start = self.observer.as_ref().map(|_| Instant::now());
             let outcomes = env.evaluate_batch_at(&proposals[..take], screen_fidelity);
+            let batch_wall_us = batch_start.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
             let mut results = Vec::with_capacity(take);
-            for (g, out) in proposals[..take].iter().zip(outcomes.iter()) {
+            for (i, (g, out)) in proposals[..take].iter().zip(outcomes.iter()).enumerate() {
                 step += 1;
                 if out.reward > best_reward {
                     best_reward = out.reward;
@@ -609,6 +682,25 @@ impl DseRunner {
                     t.offer(out.reward, step, g);
                 }
                 history.push(StepRecord { step, reward: out.reward, best_so_far: best_reward });
+                if let Some(obs) = self.observer.as_deref() {
+                    obs.record_step(
+                        SearchStepRecord {
+                            step,
+                            genome_fp: crate::util::hash64(|h| g.hash(h)),
+                            rung,
+                            reward: out.reward,
+                            best_so_far: best_reward,
+                            cache: if precached.as_ref().is_some_and(|p| p[i]) {
+                                CacheOutcome::Hit
+                            } else {
+                                CacheOutcome::Miss
+                            },
+                            wall_us: batch_wall_us / take as f64,
+                            invalid_kind: out.invalid_reason.as_deref().map(invalid_category),
+                        },
+                        self.config.steps,
+                    );
+                }
                 results.push((g.clone(), out.reward));
             }
             agent.tell(&results);
@@ -643,6 +735,15 @@ impl DseRunner {
                 }
             }
             report_fidelity = Some(FidelityMode::FlowLevel);
+        }
+        if let Some(obs) = self.observer.as_deref() {
+            if !finalists.is_empty() {
+                let fps: Vec<(u64, f64, f64)> = finalists
+                    .iter()
+                    .map(|(g, screen, flow)| (crate::util::hash64(|h| g.hash(h)), *screen, *flow))
+                    .collect();
+                obs.record_finalists(&fps);
+            }
         }
 
         // Snapshot the search's spend *before* re-materializing reports:
@@ -994,5 +1095,63 @@ mod tests {
         assert_eq!(out.reports.len(), 2, "{:?}", out.invalid_reason);
         let sum: f64 = out.reports.iter().map(|r| r.latency_us).sum();
         assert!(sum > 0.0);
+    }
+
+    #[test]
+    fn observer_records_every_step() {
+        let mut env = make_env(Objective::PerfPerBwPerNpu);
+        let obs = Arc::new(SearchObserver::new());
+        let cfg = DseConfig::new(AgentKind::Rw, 30, 9);
+        let r = DseRunner::new(cfg, SearchScope::FullStack)
+            .with_observer(Arc::clone(&obs))
+            .run(&mut env);
+        assert_eq!(r.history.len(), 30);
+        let tl = obs.timeline();
+        assert_eq!(tl.steps.len(), 30);
+        // Timeline steps mirror the runner's history exactly.
+        for (rec, hist) in tl.steps.iter().zip(r.history.iter()) {
+            assert_eq!(rec.step, hist.step);
+            assert_eq!(rec.reward, hist.reward);
+            assert_eq!(rec.best_so_far, hist.best_so_far);
+        }
+        let m = obs.metrics.snapshot();
+        assert_eq!(m.counters.get("dse.steps"), Some(&30));
+        let hits = m.counters.get("dse.evals.cache_hit").copied().unwrap_or(0);
+        let misses = m.counters.get("dse.evals.cache_miss").copied().unwrap_or(0);
+        assert_eq!(hits + misses, 30, "every step is a hit or a miss");
+        env.export_metrics(&obs.metrics);
+        assert_eq!(obs.metrics.counter("env.evals"), env.evals());
+        crate::util::json::validate(&obs.telemetry_json()).unwrap();
+    }
+
+    #[test]
+    fn observer_absence_leaves_run_identical() {
+        let cfg = DseConfig::new(AgentKind::Ga, 40, 21);
+        let mut env_plain = make_env(Objective::PerfPerBwPerNpu);
+        let plain = DseRunner::new(cfg, SearchScope::FullStack).run(&mut env_plain);
+        let mut env_obs = make_env(Objective::PerfPerBwPerNpu);
+        let obs = Arc::new(SearchObserver::new());
+        let observed = DseRunner::new(cfg, SearchScope::FullStack)
+            .with_observer(obs)
+            .run(&mut env_obs);
+        assert_eq!(plain.best_reward.to_bits(), observed.best_reward.to_bits());
+        assert_eq!(plain.best_genome, observed.best_genome);
+        assert_eq!(plain.history.len(), observed.history.len());
+    }
+
+    #[test]
+    fn bounded_eval_cache_env_matches_unbounded() {
+        // Eviction must never change results — an evicted artifact is
+        // simply regenerated on the next request.
+        let unbounded = make_env(Objective::PerfPerBwPerNpu);
+        let bounded = make_env(Objective::PerfPerBwPerNpu).with_eval_cache_capacity(2, 8);
+        let space = unbounded.pss.build_space(SearchScope::FullStack);
+        let mut rng = crate::util::Rng::seed_from_u64(17);
+        let genomes: Vec<Vec<usize>> =
+            (0..20).filter_map(|_| space.random_valid_genome(&mut rng, 500)).collect();
+        assert!(genomes.len() > 5);
+        for g in &genomes {
+            assert_eq!(unbounded.evaluate_nomemo(g), bounded.evaluate_nomemo(g));
+        }
     }
 }

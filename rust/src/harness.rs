@@ -10,12 +10,14 @@ use crate::agents::AgentKind;
 use crate::dse::{
     DseConfig, DseRunner, Environment, Objective, RunResult, SearchStrategy, WorkloadSpec,
 };
+use crate::obs::SearchObserver;
 use crate::psa::paper_table4_schema;
 use crate::pss::{Pss, SearchScope};
 use crate::sim::ClusterConfig;
 use crate::sim::Simulator;
 use crate::util::Rng;
 use crate::workload::{enumerate_parallelizations, Parallelization};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// The default (un-optimized) baseline parallelization used as the
@@ -134,6 +136,34 @@ pub fn scoped_search_with(
     ScopedResult { scope, run, best_latency_us, wall_secs }
 }
 
+/// [`scoped_search_with`] with a [`SearchObserver`] attached: per-step
+/// telemetry lands in the observer's timeline, and the environment's
+/// evaluation/cache counters are exported into its metrics once the run
+/// finishes.
+pub fn scoped_search_observed(
+    env: &mut Environment,
+    scope: SearchScope,
+    agent: AgentKind,
+    steps: u64,
+    seed: u64,
+    strategy: SearchStrategy,
+    observer: &Arc<SearchObserver>,
+) -> ScopedResult {
+    let started = Instant::now();
+    let run = DseRunner::new(DseConfig::new(agent, steps, seed), scope)
+        .with_strategy(strategy)
+        .with_observer(Arc::clone(observer))
+        .run(env);
+    let wall_secs = started.elapsed().as_secs_f64();
+    env.export_metrics(&observer.metrics);
+    let best_latency_us = if run.best_reports.is_empty() {
+        f64::INFINITY
+    } else {
+        run.best_reports.iter().map(|r| r.latency_us).sum()
+    };
+    ScopedResult { scope, run, best_latency_us, wall_secs }
+}
+
 /// Latency spread over random valid genomes in a scope (Figure 4):
 /// returns (min, max, valid-sample count).
 pub fn latency_spread(
@@ -224,6 +254,28 @@ mod tests {
         let r = scoped_search(&mut env, SearchScope::WorkloadOnly, AgentKind::Rw, 20, 1);
         assert!(r.best_latency_us.is_finite());
         assert!(r.run.best_reward > 0.0);
+    }
+
+    #[test]
+    fn observed_search_exports_metrics() {
+        let mut env = make_env(
+            presets::system1(),
+            vec![WorkloadSpec::training(wl::gpt3_13b().with_simulated_layers(4), 1024)],
+            Objective::PerfPerBwPerNpu,
+        );
+        let obs = Arc::new(SearchObserver::new());
+        let r = scoped_search_observed(
+            &mut env,
+            SearchScope::WorkloadOnly,
+            AgentKind::Rw,
+            15,
+            1,
+            SearchStrategy::GenomeFidelity,
+            &obs,
+        );
+        assert_eq!(r.run.history.len(), 15);
+        assert_eq!(obs.timeline().steps.len(), 15);
+        assert_eq!(obs.metrics.counter("env.evals"), env.evals());
     }
 
     #[test]

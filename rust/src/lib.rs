@@ -32,6 +32,11 @@
 //! - **Runtime** ([`runtime`]) — the PJRT bridge that loads the
 //!   AOT-compiled JAX/Pallas batched cost model and GP surrogate
 //!   (`artifacts/*.hlo.txt`) plus a bit-equivalent pure-Rust fallback.
+//! - **Obs** ([`obs`]) — dependency-free observability: a zero-cost
+//!   [`obs::TraceSink`] capturing the simulator's hierarchical timeline
+//!   (exported as Chrome/Perfetto JSON via `cosmic simulate --trace`),
+//!   a lock-sharded [`obs::MetricsRegistry`] and a per-step
+//!   [`obs::SearchTimeline`] of DSE runs (`cosmic search --telemetry`).
 //!
 //! ## Quickstart
 //!
@@ -62,6 +67,7 @@ pub mod compute;
 pub mod dse;
 pub mod harness;
 pub mod netsim;
+pub mod obs;
 pub mod psa;
 pub mod util;
 pub mod pss;
@@ -80,6 +86,7 @@ pub mod prelude {
         DseConfig, DseRunner, Environment, EvalCache, Objective, SearchStrategy, WorkloadSpec,
     };
     pub use crate::netsim::{FidelityMode, FlowLevelConfig, NetworkBackend};
+    pub use crate::obs::{MetricsRegistry, Recorder, SearchObserver, TraceSink};
     pub use crate::psa::{DesignPoint, ParamDef, Schema, Stack};
     pub use crate::pss::{Pss, SearchScope};
     pub use crate::sim::{ClusterConfig, SimReport, Simulator};

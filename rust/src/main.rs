@@ -2,16 +2,21 @@
 //!
 //! Subcommands:
 //!
-//! - `simulate` — run the end-to-end simulator on one design point.
-//! - `search`   — run an agent-driven DSE (the paper's §6 experiments).
+//! - `simulate` — run the end-to-end simulator on one design point,
+//!   optionally exporting a Chrome-trace timeline (`--trace`).
+//! - `search`   — run an agent-driven DSE (the paper's §6 experiments),
+//!   optionally writing run telemetry (`--telemetry`).
 //! - `space`    — report the PsA design-space cardinality (Table 1).
+//! - `validate-json` — check files against the built-in JSON validator.
 //! - `runtime`  — probe the PJRT runtime and artifact status.
 //!
 //! Argument parsing is hand-rolled (`clap` is not vendored offline; see
 //! DESIGN.md §Substitutions).
 
 use cosmic::agents::AgentKind;
-use cosmic::dse::{DseConfig, DseRunner, Environment, Objective, WorkloadSpec};
+use cosmic::dse::{DseConfig, DseRunner, Environment, Objective, SearchStrategy, WorkloadSpec};
+use cosmic::netsim::FidelityMode;
+use cosmic::obs::{Recorder, SearchObserver};
 use cosmic::psa::{design_space_size, paper_table4_schema, space::exhaustive_search_years};
 use cosmic::pss::{Pss, SearchScope};
 use cosmic::sim::{presets, Simulator};
@@ -19,6 +24,7 @@ use cosmic::workload::models::presets as models;
 use cosmic::workload::{ExecutionMode, Parallelization};
 use std::collections::HashMap;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,6 +37,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&opts),
         "search" => cmd_search(&opts),
         "space" => cmd_space(&opts),
+        "validate-json" => cmd_validate_json(&args[1..]),
         "runtime" => cmd_runtime(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -55,10 +62,13 @@ fn print_usage() {
 USAGE:
   cosmic simulate [--system 1|2|3] [--model NAME] [--batch N]
                   [--dp N --sp N --pp N --shard 0|1] [--layers N] [--mode train|prefill|decode]
+                  [--fidelity analytical|flow] [--trace FILE.json]
   cosmic search   [--system 1|2|3] [--model NAME] [--batch N] [--agent RW|GA|ACO|BO]
                   [--scope full|workload|collective|network] [--steps N] [--seed N]
-                  [--objective bw|cost|latency]
+                  [--objective bw|cost|latency] [--strategy genome|analytical|flow|staged]
+                  [--promote K] [--cache-cap N] [--progress N] [--telemetry FILE.json]
   cosmic space    [--npus N] [--dims N]
+  cosmic validate-json FILE...
   cosmic runtime
 
 MODELS: GPT3-175B GPT3-13B ViT-Base ViT-Large"
@@ -120,10 +130,20 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         opt_u64(opts, "pp", 1),
         opt_u64(opts, "shard", 1) != 0,
     )?;
+    let fidelity = match opt_str(opts, "fidelity", "analytical") {
+        "analytical" => FidelityMode::Analytical,
+        "flow" => FidelityMode::FlowLevel,
+        f => return Err(format!("unknown fidelity '{f}'")),
+    };
+    let mut sim = Simulator::new().with_fidelity(fidelity);
+    let recorder = opts.get("trace").map(|_| Arc::new(Recorder::new()));
+    if let Some(rec) = &recorder {
+        sim = sim.with_trace_sink(Arc::clone(rec));
+    }
     println!("system: {} ({} NPUs)", cluster.topology, cluster.npus());
     println!("model:  {} (simulating {} layers)", model.name, model.simulated_layers);
     println!("par:    {par}");
-    match Simulator::new().run(&cluster, &model, &par, batch, mode) {
+    match sim.run(&cluster, &model, &par, batch, mode) {
         Ok(r) => {
             println!("latency:        {:>12.3} ms", r.latency_us / 1e3);
             println!("compute:        {:>12.3} ms", r.compute_us / 1e3);
@@ -132,6 +152,13 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             println!("memory/NPU:     {:>12.3} GB", r.memory.total() / 1e9);
             println!("microbatches:   {:>12}", r.microbatches);
             println!("cluster TFLOPs: {:>12.1}", r.achieved_tflops);
+            if let (Some(rec), Some(path)) = (&recorder, opts.get("trace")) {
+                let json = cosmic::obs::chrome_trace_json(&rec.spans());
+                cosmic::util::json::validate(&json)
+                    .map_err(|e| format!("internal: trace JSON invalid: {e}"))?;
+                std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+                println!("trace:          {:>12} spans -> {path}", rec.span_count());
+            }
             Ok(())
         }
         Err(e) => Err(format!("invalid design point: {e:?}")),
@@ -157,12 +184,27 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
     };
     let objective = Objective::from_name(opt_str(opts, "objective", "bw"))
         .ok_or_else(|| "unknown objective".to_string())?;
+    let strategy = match opt_str(opts, "strategy", "genome") {
+        "genome" => SearchStrategy::GenomeFidelity,
+        "analytical" => SearchStrategy::Fixed(FidelityMode::Analytical),
+        "flow" => SearchStrategy::Fixed(FidelityMode::FlowLevel),
+        "staged" => SearchStrategy::Staged { promote_top_k: opt_u64(opts, "promote", 8) as usize },
+        s => return Err(format!("unknown strategy '{s}'")),
+    };
 
     let npus = cluster.npus();
     let baseline_par = Parallelization::derive(npus, npus.min(64), 1, 1, true)?;
     let pss =
         Pss::new(paper_table4_schema(npus, cluster.topology.num_dims()), cluster, baseline_par);
     let mut env = Environment::new(pss, vec![WorkloadSpec::training(model, batch)], objective);
+    let cache_cap = opt_u64(opts, "cache-cap", 0) as usize;
+    if cache_cap > 0 {
+        env = env.with_eval_cache_capacity(cache_cap, cache_cap);
+    }
+    let progress = opt_u64(opts, "progress", 0);
+    let telemetry = opts.get("telemetry").cloned();
+    let observer = (progress > 0 || telemetry.is_some())
+        .then(|| Arc::new(SearchObserver::new().with_progress(progress)));
 
     println!(
         "search: agent={} scope={} objective={} steps={steps} seed={seed}",
@@ -171,7 +213,12 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         objective.name()
     );
     let started = std::time::Instant::now();
-    let result = DseRunner::new(DseConfig::new(agent, steps, seed), scope).run(&mut env);
+    let mut runner =
+        DseRunner::new(DseConfig::new(agent, steps, seed), scope).with_strategy(strategy);
+    if let Some(obs) = &observer {
+        runner = runner.with_observer(Arc::clone(obs));
+    }
+    let result = runner.run(&mut env);
     let elapsed = started.elapsed();
     println!(
         "done in {:.2}s  ({:.0} evals/s, {} invalid, {} cache hits)",
@@ -180,10 +227,41 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         result.invalid,
         env.cache_hits()
     );
+    let cs = env.eval_cache_stats();
+    println!(
+        "cache: memo {}h/{}e; trace {}h/{}m ({} evicted); coll {}h/{}m ({} evicted)",
+        env.cache_hits(),
+        env.evals(),
+        cs.trace_hits,
+        cs.trace_misses,
+        cs.trace_evictions,
+        cs.coll_hits,
+        cs.coll_misses,
+        cs.coll_evictions
+    );
+    println!("fidelity spend: {} flow-level / {} total evals", result.flow_evals, result.evals);
+    if !result.finalists.is_empty() {
+        println!("finalists (screening reward -> flow-level reward):");
+        for (g, screen, flow) in &result.finalists {
+            println!("  {screen:.6e} -> {flow:.6e}  {g:?}");
+        }
+    }
     println!(
         "best reward: {:.6e} (first reached at step {})",
         result.best_reward, result.steps_to_peak
     );
+    if let Some(obs) = &observer {
+        env.export_metrics(&obs.metrics);
+        obs.metrics.set_gauge("dse.best_reward", result.best_reward);
+        obs.metrics.set_gauge("dse.steps_to_peak", result.steps_to_peak as f64);
+        if let Some(path) = &telemetry {
+            let json = obs.telemetry_json();
+            cosmic::util::json::validate(&json)
+                .map_err(|e| format!("internal: telemetry JSON invalid: {e}"))?;
+            std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+            println!("telemetry -> {path}");
+        }
+    }
     if !result.best_genome.is_empty() {
         let point = env.pss.schema.decode(&result.best_genome)?;
         let (best_cluster, best_par) = env.pss.materialize(&point)?;
@@ -215,6 +293,18 @@ fn cmd_space(opts: &Opts) -> Result<(), String> {
         "exhaustive search at 1 s/point: {:.3e} years",
         exhaustive_search_years(points, 1.0)
     );
+    Ok(())
+}
+
+fn cmd_validate_json(paths: &[String]) -> Result<(), String> {
+    if paths.is_empty() {
+        return Err("validate-json needs at least one file argument".to_string());
+    }
+    for p in paths {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
+        cosmic::util::json::validate(&text).map_err(|e| format!("{p}: {e}"))?;
+        println!("{p}: valid JSON ({} bytes)", text.len());
+    }
     Ok(())
 }
 

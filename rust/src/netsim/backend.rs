@@ -20,10 +20,11 @@ use std::fmt;
 use std::sync::Arc;
 
 use super::fabric::FlowLevelConfig;
-use super::flow::{FlowSim, FlowSpec};
+use super::flow::{FlowSegment, FlowSim, FlowSpec};
 use crate::collective::{
     compose_phases, phase_plan, CollAlgo, CollectiveKind, MultiDimPolicy, SchedulingPolicy,
 };
+use crate::obs::{tracks, TraceSink};
 use crate::topology::{DimCost, Topology};
 
 /// Which network model rung to simulate with — the PsA "Network
@@ -138,10 +139,32 @@ pub trait NetworkBackend: fmt::Debug + Send + Sync {
         jobs: &[OverlapCall<'_>],
         policy: SchedulingPolicy,
     ) -> Vec<(u64, f64)>;
+
+    /// [`NetworkBackend::drain_overlapped`] that additionally emits
+    /// per-dimension occupancy spans into `sink`. Implementations must
+    /// return the exact completions `drain_overlapped` would (tracing
+    /// is observation, never perturbation); the default drops the sink.
+    fn drain_overlapped_traced(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+        _sink: &dyn TraceSink,
+    ) -> Vec<(u64, f64)> {
+        self.drain_overlapped(jobs, policy)
+    }
+
+    /// Tracing decomposition of one *chunk* of a blocking collective:
+    /// `(topology dim index, duration us)` per phase, in schedule
+    /// order. Purely descriptive — pricing goes through
+    /// [`NetworkBackend::collective_time_us`]. The default reports no
+    /// detail.
+    fn phase_times_us(&self, _call: &CollectiveCall<'_>) -> Vec<(usize, f64)> {
+        Vec::new()
+    }
 }
 
 /// Collapse per-job completions into per-layer maxima, sorted by layer.
-fn collapse_per_layer(pairs: impl IntoIterator<Item = (u64, f64)>) -> Vec<(u64, f64)> {
+pub(crate) fn collapse_per_layer(pairs: impl IntoIterator<Item = (u64, f64)>) -> Vec<(u64, f64)> {
     let mut out: Vec<(u64, f64)> = Vec::new();
     for (layer, t) in pairs {
         match out.iter_mut().find(|(l, _)| *l == layer) {
@@ -168,14 +191,24 @@ pub fn serial_drain(
     jobs: &[(u64, f64, f64)], // (layer, issue_us, duration_us)
     policy: SchedulingPolicy,
 ) -> Vec<(u64, f64)> {
+    collapse_per_layer(serial_drain_detailed(jobs, policy).into_iter().map(|(l, _, f)| (l, f)))
+}
+
+/// The sweep behind [`serial_drain`], returning every job's busy window
+/// as `(layer, admission time, completion time)` in completion order —
+/// the per-job detail the trace exporter draws as drain spans.
+pub fn serial_drain_detailed(
+    jobs: &[(u64, f64, f64)], // (layer, issue_us, duration_us)
+    policy: SchedulingPolicy,
+) -> Vec<(u64, f64, f64)> {
     let mut order: Vec<usize> = (0..jobs.len()).collect();
     order.sort_by(|&a, &b| jobs[a].1.partial_cmp(&jobs[b].1).unwrap());
     let mut pending: Vec<usize> = Vec::with_capacity(jobs.len());
-    let mut done: Vec<(u64, f64)> = Vec::with_capacity(jobs.len());
+    let mut done: Vec<(u64, f64, f64)> = Vec::with_capacity(jobs.len());
     let mut next_arrival = 0usize;
     let mut now;
     let mut busy_until = f64::NEG_INFINITY;
-    let mut current: Option<usize> = None;
+    let mut current: Option<(usize, f64)> = None; // (job, admission time)
     loop {
         // Advance to the next event: arrival or resource-free.
         let arrival_t = order.get(next_arrival).map(|&i| jobs[i].1.max(0.0));
@@ -187,8 +220,8 @@ pub fn serial_drain(
                 a
             }
             (_, Some(f)) => {
-                if let Some(i) = current.take() {
-                    done.push((jobs[i].0, f));
+                if let Some((i, start)) = current.take() {
+                    done.push((jobs[i].0, start, f));
                 }
                 f
             }
@@ -205,11 +238,11 @@ pub fn serial_drain(
                 SchedulingPolicy::Lifo => pending.len() - 1,
             };
             let i = pending.remove(idx);
-            current = Some(i);
+            current = Some((i, now));
             busy_until = now + jobs[i].2.max(0.0);
         }
     }
-    collapse_per_layer(done)
+    done
 }
 
 /// The closed-form alpha-beta backend (the original simulator path).
@@ -294,6 +327,17 @@ impl NetworkBackend for Analytical {
         let tuples: Vec<(u64, f64, f64)> =
             jobs.iter().map(|j| (j.layer, j.issue_us, duration(&j.call))).collect();
         serial_drain(&tuples, policy)
+    }
+
+    fn phase_times_us(&self, call: &CollectiveCall<'_>) -> Vec<(usize, f64)> {
+        if call.span.is_empty() || call.bytes <= 0.0 {
+            return Vec::new();
+        }
+        let dims: Vec<DimCost> = call.span.iter().map(|(c, _)| *c).collect();
+        phase_plan(call.kind, call.algos, &dims, call.bytes / call.chunks.max(1) as f64)
+            .iter()
+            .map(|p| (call.span[p.span_dim].1, p.duration_us(&dims[p.span_dim])))
+            .collect()
     }
 }
 
@@ -422,6 +466,48 @@ impl NetworkBackend for FlowLevel {
             jobs.iter().zip(results.iter()).map(|(j, r)| (j.layer, r.finish_us)),
         )
     }
+
+    fn drain_overlapped_traced(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        _policy: SchedulingPolicy,
+        sink: &dyn TraceSink,
+    ) -> Vec<(u64, f64)> {
+        let Some(first) = jobs.first() else { return Vec::new() };
+        let caps = self.config.dim_capacities(first.call.topology);
+        let chains: Vec<(f64, Vec<FlowSpec>)> = jobs
+            .iter()
+            .map(|j| (j.issue_us.max(0.0), self.chain_of(&j.call)))
+            .collect();
+        let mut segments: Vec<FlowSegment> = Vec::new();
+        let results = FlowSim::new(caps).run_recorded(&chains, &mut segments);
+        if sink.enabled() {
+            for seg in &segments {
+                let layer = jobs[seg.chain].layer;
+                for &dim in &seg.uses {
+                    sink.span(
+                        tracks::net_dim(dim),
+                        &format!("grad L{layer} flow {}", seg.flow),
+                        seg.start_us,
+                        seg.finish_us,
+                    );
+                }
+            }
+        }
+        collapse_per_layer(
+            jobs.iter().zip(results.iter()).map(|(j, r)| (j.layer, r.finish_us)),
+        )
+    }
+
+    fn phase_times_us(&self, call: &CollectiveCall<'_>) -> Vec<(usize, f64)> {
+        if call.span.is_empty() || call.bytes <= 0.0 {
+            return Vec::new();
+        }
+        Self::chunk_plan(call)
+            .iter()
+            .map(|p| (call.span[p.span_dim].1, self.congested_time(call, p)))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -547,6 +633,59 @@ mod tests {
         let lifo = serial_drain(&jobs, SchedulingPolicy::Lifo);
         // LIFO: 3 starts immediately (resource idle), then newest: 1, 2.
         assert_eq!(lifo, vec![(1, 20.0), (2, 30.0), (3, 10.0)]);
+    }
+
+    #[test]
+    fn detailed_serial_drain_collapses_to_serial_drain() {
+        let jobs = vec![(3u64, 0.0, 10.0), (2, 1.0, 10.0), (1, 2.0, 10.0), (1, 2.5, 4.0)];
+        for policy in [SchedulingPolicy::Fifo, SchedulingPolicy::Lifo] {
+            let detailed = serial_drain_detailed(&jobs, policy);
+            assert_eq!(detailed.len(), jobs.len());
+            for &(_, start, finish) in &detailed {
+                assert!(start <= finish);
+            }
+            let collapsed =
+                collapse_per_layer(detailed.into_iter().map(|(l, _, f)| (l, f)));
+            assert_eq!(collapsed, serial_drain(&jobs, policy));
+        }
+    }
+
+    #[test]
+    fn traced_drain_matches_untraced_and_emits_dim_spans() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 16e6, 2);
+        let jobs: Vec<OverlapCall> = (0..3)
+            .map(|l| OverlapCall { layer: l, issue_us: l as f64 * 5.0, call: c })
+            .collect();
+        let flow = FlowLevel::new(FlowLevelConfig::oversubscribed(4.0));
+        let plain = flow.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        let rec = crate::obs::Recorder::new();
+        let traced = flow.drain_overlapped_traced(&jobs, SchedulingPolicy::Fifo, &rec);
+        assert_eq!(plain, traced, "tracing must not perturb completions");
+        let spans = rec.spans();
+        assert!(!spans.is_empty());
+        assert!(spans.iter().all(|s| s.pid == tracks::NET_PID));
+        assert!(spans.iter().all(|s| s.tid >= tracks::NET_DIM_BASE));
+    }
+
+    #[test]
+    fn phase_times_sum_to_baseline_single_chunk_cost() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 64e6, 1);
+        for backend in [&Analytical as &dyn NetworkBackend, &FlowLevel::default()] {
+            let phases = backend.phase_times_us(&c);
+            assert!(!phases.is_empty());
+            let sum: f64 = phases.iter().map(|(_, t)| t).sum();
+            let total = backend.collective_time_us(&c);
+            assert!((sum - total).abs() < 1e-6 * total.max(1.0), "{sum} vs {total}");
+            for &(dim, _) in &phases {
+                assert!(dim < topo.dims.len());
+            }
+        }
     }
 
     #[test]

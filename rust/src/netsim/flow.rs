@@ -35,6 +35,21 @@ pub struct ChainResult {
     pub served_bytes: f64,
 }
 
+/// One recorded data-phase occupancy, emitted by
+/// [`FlowSim::run_recorded`]: chain `chain`'s flow number `flow` held
+/// resources `uses` from `start_us` (after its alpha latency) until it
+/// drained at `finish_us`. Recording never changes simulation results —
+/// `run_recorded` and [`FlowSim::run`] share one core.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSegment {
+    pub chain: usize,
+    pub flow: usize,
+    pub uses: Vec<usize>,
+    pub start_us: f64,
+    pub finish_us: f64,
+    pub bytes: f64,
+}
+
 /// Max-min fair rates by progressive bottleneck filling.
 ///
 /// `uses[f]` lists the resource ids flow `f` crosses; `caps[r]` is the
@@ -107,6 +122,25 @@ impl FlowSim {
     /// Run every chain to completion. `chains[i]` = (issue time, flow
     /// sequence). Returns one [`ChainResult`] per chain, same order.
     pub fn run(&self, chains: &[(f64, Vec<FlowSpec>)]) -> Vec<ChainResult> {
+        self.run_impl(chains, None)
+    }
+
+    /// [`FlowSim::run`], additionally appending one [`FlowSegment`] per
+    /// completed flow to `segments` (in completion order, which is
+    /// deterministic for identical input).
+    pub fn run_recorded(
+        &self,
+        chains: &[(f64, Vec<FlowSpec>)],
+        segments: &mut Vec<FlowSegment>,
+    ) -> Vec<ChainResult> {
+        self.run_impl(chains, Some(segments))
+    }
+
+    fn run_impl(
+        &self,
+        chains: &[(f64, Vec<FlowSpec>)],
+        mut segments: Option<&mut Vec<FlowSegment>>,
+    ) -> Vec<ChainResult> {
         let n = chains.len();
         let mut q: EventQueue<Ev> = EventQueue::new();
         let mut step = vec![0usize; n]; // current flow index per chain
@@ -114,6 +148,7 @@ impl FlowSim {
         let mut served = vec![0.0f64; n];
         let mut rate = vec![0.0f64; n];
         let mut active = vec![false; n];
+        let mut flow_start = vec![0.0f64; n];
         let mut finish = vec![0.0f64; n];
         let mut epoch = 0u64;
         let mut last_t = 0.0f64;
@@ -144,6 +179,7 @@ impl FlowSim {
             match ev {
                 Ev::Start { chain } => {
                     active[chain] = true;
+                    flow_start[chain] = t;
                     remaining[chain] = chains[chain].1[step[chain]].bytes.max(0.0);
                 }
                 Ev::Finish { chain, epoch: e } => {
@@ -154,6 +190,17 @@ impl FlowSim {
                     served[chain] += remaining[chain].max(0.0);
                     remaining[chain] = 0.0;
                     active[chain] = false;
+                    if let Some(rec) = segments.as_mut() {
+                        let spec = &chains[chain].1[step[chain]];
+                        rec.push(FlowSegment {
+                            chain,
+                            flow: step[chain],
+                            uses: spec.uses.clone(),
+                            start_us: flow_start[chain],
+                            finish_us: t,
+                            bytes: spec.bytes.max(0.0),
+                        });
+                    }
                     step[chain] += 1;
                     if step[chain] < chains[chain].1.len() {
                         let lat = chains[chain].1[step[chain]].latency_us.max(0.0);
@@ -298,6 +345,31 @@ mod tests {
     fn maxmin_empty_uses_is_unbounded() {
         let rates = maxmin_rates(&[vec![]], &[1.0]);
         assert!(rates[0].is_infinite());
+    }
+
+    #[test]
+    fn recorded_run_matches_plain_run_and_captures_segments() {
+        let sim = FlowSim::new(vec![100.0, 50.0]);
+        let chains = vec![
+            (0.0, vec![flow(&[0], 1000.0, 1.0), flow(&[1], 1000.0, 1.0)]),
+            (5.0, vec![flow(&[0], 500.0, 0.0)]),
+        ];
+        let plain = sim.run(&chains);
+        let mut segments = Vec::new();
+        let recorded = sim.run_recorded(&chains, &mut segments);
+        assert_eq!(plain, recorded, "recording must not perturb results");
+        // One segment per flow, each within its chain's lifetime.
+        assert_eq!(segments.len(), 3);
+        for seg in &segments {
+            assert!(seg.start_us <= seg.finish_us, "{seg:?}");
+            assert!(seg.finish_us <= recorded[seg.chain].finish_us + 1e-9, "{seg:?}");
+        }
+        // Chain 0's two flows are sequential on dims 0 then 1.
+        let c0: Vec<&FlowSegment> = segments.iter().filter(|s| s.chain == 0).collect();
+        assert_eq!(c0.len(), 2);
+        assert_eq!(c0[0].uses, vec![0]);
+        assert_eq!(c0[1].uses, vec![1]);
+        assert!(c0[0].finish_us <= c0[1].start_us + 1e-9);
     }
 
     #[test]

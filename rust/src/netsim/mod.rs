@@ -48,9 +48,9 @@ pub mod fabric;
 pub mod flow;
 
 pub use backend::{
-    serial_drain, Analytical, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend,
-    OverlapCall,
+    serial_drain, serial_drain_detailed, Analytical, CollectiveCall, FidelityMode, FlowLevel,
+    NetworkBackend, OverlapCall,
 };
 pub use engine::EventQueue;
 pub use fabric::FlowLevelConfig;
-pub use flow::{maxmin_rates, ChainResult, FlowSim, FlowSpec};
+pub use flow::{maxmin_rates, ChainResult, FlowSegment, FlowSim, FlowSpec};

@@ -1,0 +1,298 @@
+//! Lock-sharded counters, gauges and histograms with deterministic
+//! text/JSON snapshots.
+//!
+//! Shards are keyed by the metric-name hash so concurrent workers
+//! (e.g. `util::par::parallel_map` evaluation batches) rarely contend
+//! on one mutex. Quantiles reuse [`crate::util::stats::percentile_sorted`]
+//! so histogram summaries agree bit-for-bit with the bench harness
+//! statistics (asserted in `tests/obs_trace.rs`).
+
+use crate::util::stats::percentile_sorted;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+use std::sync::Mutex;
+
+const SHARDS: usize = 8;
+
+/// Sharded registry of named counters (monotonic `u64`), gauges
+/// (last-write `f64`) and histograms (raw `f64` samples, summarized at
+/// snapshot time).
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    counters: Vec<Mutex<HashMap<String, u64>>>,
+    gauges: Vec<Mutex<HashMap<String, f64>>>,
+    histograms: Vec<Mutex<HashMap<String, Vec<f64>>>>,
+}
+
+fn shard_of(name: &str) -> usize {
+    (crate::util::hash64(|h| name.hash(h)) % SHARDS as u64) as usize
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self {
+            counters: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            gauges: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            histograms: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Increment counter `name` by one.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment counter `name` by `by`.
+    pub fn add(&self, name: &str, by: u64) {
+        let mut shard = self.counters[shard_of(name)].lock().unwrap();
+        if let Some(v) = shard.get_mut(name) {
+            *v += by;
+        } else {
+            shard.insert(name.to_string(), by);
+        }
+    }
+
+    /// Overwrite counter `name` with an absolute value (used when
+    /// exporting counters owned elsewhere, e.g. `Environment` atomics).
+    pub fn set_counter(&self, name: &str, value: u64) {
+        self.counters[shard_of(name)].lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Current value of counter `name` (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters[shard_of(name)].lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Set gauge `name`.
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.gauges[shard_of(name)].lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Record one histogram sample under `name`.
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut shard = self.histograms[shard_of(name)].lock().unwrap();
+        if let Some(v) = shard.get_mut(name) {
+            v.push(value);
+        } else {
+            shard.insert(name.to_string(), vec![value]);
+        }
+    }
+
+    /// Deterministic point-in-time snapshot (names sorted, histograms
+    /// summarized).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        for shard in &self.counters {
+            for (k, v) in shard.lock().unwrap().iter() {
+                snap.counters.insert(k.clone(), *v);
+            }
+        }
+        for shard in &self.gauges {
+            for (k, v) in shard.lock().unwrap().iter() {
+                snap.gauges.insert(k.clone(), *v);
+            }
+        }
+        for shard in &self.histograms {
+            for (k, v) in shard.lock().unwrap().iter() {
+                if let Some(summary) = HistogramSummary::from_values(v) {
+                    snap.histograms.insert(k.clone(), summary);
+                }
+            }
+        }
+        snap
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// p50/p95/p99 summary of one histogram's samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramSummary {
+    pub count: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl HistogramSummary {
+    /// Summarize raw samples; `None` for an empty or all-non-finite set.
+    pub fn from_values(values: &[f64]) -> Option<Self> {
+        let mut v: Vec<f64> = values.iter().copied().filter(|x| x.is_finite()).collect();
+        if v.is_empty() {
+            return None;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        Some(Self {
+            count: n,
+            min: v[0],
+            max: v[n - 1],
+            mean: v.iter().sum::<f64>() / n as f64,
+            p50: percentile_sorted(&v, 50.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
+        })
+    }
+}
+
+/// Snapshot of a [`MetricsRegistry`]; `BTreeMap`s keep serialization
+/// order stable across runs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSummary>,
+}
+
+/// Format a float as a JSON value (`null` for non-finite).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl MetricsSnapshot {
+    /// Serialize as a JSON object with `counters`/`gauges`/`histograms`
+    /// sections.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n\"{}\":{}", escape(k), v));
+        }
+        out.push_str("},\n\"gauges\":{");
+        for (i, (k, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n\"{}\":{}", escape(k), json_num(*v)));
+        }
+        out.push_str("},\n\"histograms\":{");
+        for (i, (k, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n\"{}\":{{\"count\":{},\"min\":{},\"max\":{},\"mean\":{},\
+                 \"p50\":{},\"p95\":{},\"p99\":{}}}",
+                escape(k),
+                h.count,
+                json_num(h.min),
+                json_num(h.max),
+                json_num(h.mean),
+                json_num(h.p50),
+                json_num(h.p95),
+                json_num(h.p99)
+            ));
+        }
+        out.push_str("}\n}\n");
+        out
+    }
+
+    /// One `name value` line per metric, for terminal output.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "{k} count={} mean={:.4} p50={:.4} p95={:.4} p99={:.4}\n",
+                h.count, h.mean, h.p50, h.p95, h.p99
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_overwrite() {
+        let m = MetricsRegistry::new();
+        m.inc("a");
+        m.add("a", 4);
+        assert_eq!(m.counter("a"), 5);
+        m.set_counter("a", 2);
+        assert_eq!(m.counter("a"), 2);
+        assert_eq!(m.counter("never"), 0);
+    }
+
+    #[test]
+    fn gauges_take_last_write() {
+        let m = MetricsRegistry::new();
+        m.set_gauge("g", 1.0);
+        m.set_gauge("g", -2.5);
+        assert_eq!(m.snapshot().gauges["g"], -2.5);
+    }
+
+    #[test]
+    fn histogram_summary_matches_util_stats() {
+        let m = MetricsRegistry::new();
+        let data: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        for &x in &data {
+            m.observe("h", x);
+        }
+        let h = m.snapshot().histograms["h"];
+        let mut sorted = data.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(h.count, 100);
+        assert_eq!(h.p50, percentile_sorted(&sorted, 50.0));
+        assert_eq!(h.p95, percentile_sorted(&sorted, 95.0));
+        assert_eq!(h.p99, percentile_sorted(&sorted, 99.0));
+        assert_eq!(h.min, 1.0);
+        assert_eq!(h.max, 100.0);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_json_valid() {
+        let m = MetricsRegistry::new();
+        m.inc("z.last");
+        m.inc("a.first");
+        m.set_gauge("mid", f64::NAN);
+        m.observe("lat", 3.0);
+        let snap = m.snapshot();
+        let keys: Vec<&String> = snap.counters.keys().collect();
+        assert_eq!(keys, ["a.first", "z.last"]);
+        let json = snap.to_json();
+        assert!(json.contains("\"mid\":null"));
+        crate::util::json::validate(&json).unwrap();
+        assert!(snap.to_text().contains("a.first 1"));
+    }
+
+    #[test]
+    fn empty_histograms_are_omitted() {
+        let m = MetricsRegistry::new();
+        m.observe("nan-only", f64::NAN);
+        assert!(m.snapshot().histograms.is_empty());
+    }
+}

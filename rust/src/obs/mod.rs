@@ -1,0 +1,32 @@
+//! Observability: tracing, metrics and search telemetry.
+//!
+//! Dependency-free and zero-cost when disabled, this layer answers
+//! *why* a configuration wins rather than only *how fast* it is:
+//!
+//! - [`trace`] — a [`TraceSink`] span API threaded through
+//!   [`crate::sim::Simulator`] and the `netsim` backends. The default
+//!   [`NoopSink`] is disabled, so pricing stays bit-identical to an
+//!   un-instrumented run; attach a [`Recorder`] (see
+//!   `cosmic simulate --trace out.json`) to capture the hierarchical
+//!   timeline — iteration → pipeline slots → per-op compute/collective
+//!   phases → per-dimension network drains — as Chrome/Perfetto JSON.
+//! - [`metrics`] — a lock-sharded [`MetricsRegistry`] of counters,
+//!   gauges and histograms (p50/p95/p99 via `util::stats`), snapshotted
+//!   deterministically as text or JSON.
+//! - [`timeline`] — a [`SearchTimeline`] of every DSE step (genome
+//!   fingerprint, fidelity rung, reward, cache outcome, wall time) fed
+//!   by a [`SearchObserver`] attached to [`crate::dse::DseRunner`]
+//!   (see `cosmic search --telemetry telemetry.json`).
+
+pub mod metrics;
+pub mod timeline;
+pub mod trace;
+
+pub use metrics::{HistogramSummary, MetricsRegistry, MetricsSnapshot};
+pub use timeline::{
+    invalid_category, CacheOutcome, Rung, SearchObserver, SearchStepRecord, SearchTimeline,
+};
+pub use trace::{
+    chrome_events, chrome_trace_json, tracks, ChromeEvent, NoopSink, Recorder, SpanRec, TraceSink,
+    Track,
+};

@@ -1,0 +1,271 @@
+//! Per-step DSE telemetry: a [`SearchTimeline`] of every evaluated
+//! genome (fingerprint, fidelity rung, reward, cache outcome, wall
+//! time) plus the [`SearchObserver`] that [`crate::dse::DseRunner`]
+//! feeds when one is attached. Staged-search promotions stay
+//! reconstructable post-hoc: finalists carry both their screening-rung
+//! and flow-level rewards.
+
+use super::metrics::MetricsRegistry;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// The fidelity rung a step was evaluated at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rung {
+    /// Fidelity chosen by the genome's own network-fidelity gene.
+    GenomeKnob,
+    /// Forced closed-form backend.
+    Analytical,
+    /// Forced flow-level backend.
+    FlowLevel,
+}
+
+impl Rung {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rung::GenomeKnob => "genome-knob",
+            Rung::Analytical => "analytical",
+            Rung::FlowLevel => "flow-level",
+        }
+    }
+
+    fn counter_name(&self) -> &'static str {
+        match self {
+            Rung::GenomeKnob => "dse.evals.rung.genome_knob",
+            Rung::Analytical => "dse.evals.rung.analytical",
+            Rung::FlowLevel => "dse.evals.rung.flow_level",
+        }
+    }
+}
+
+/// Whether the step was served from the per-genome memo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    Hit,
+    Miss,
+}
+
+/// One DSE step as the runner saw it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchStepRecord {
+    /// 1-based step index within the run.
+    pub step: u64,
+    /// [`crate::util::hash64`] fingerprint of the genome.
+    pub genome_fp: u64,
+    pub rung: Rung,
+    pub reward: f64,
+    pub best_so_far: f64,
+    pub cache: CacheOutcome,
+    /// Wall time attributed to this step (batch wall / batch size).
+    pub wall_us: f64,
+    /// Set when the genome was invalid; the category from
+    /// [`invalid_category`].
+    pub invalid_kind: Option<String>,
+}
+
+/// Ordered record of a whole search run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchTimeline {
+    pub steps: Vec<SearchStepRecord>,
+    /// Staged-search finalists as (genome fingerprint, screening-rung
+    /// reward, flow-level reward).
+    pub finalists: Vec<(u64, f64, f64)>,
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl SearchTimeline {
+    /// Serialize as a JSON object with `steps` and `finalists` arrays.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n\"steps\":[");
+        for (i, s) in self.steps.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let invalid = match &s.invalid_kind {
+                Some(k) => format!("\"{k}\""),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "\n{{\"step\":{},\"genome_fp\":\"{:016x}\",\"rung\":\"{}\",\"reward\":{},\
+                 \"best\":{},\"cache\":\"{}\",\"wall_us\":{},\"invalid\":{}}}",
+                s.step,
+                s.genome_fp,
+                s.rung.name(),
+                json_num(s.reward),
+                json_num(s.best_so_far),
+                match s.cache {
+                    CacheOutcome::Hit => "hit",
+                    CacheOutcome::Miss => "miss",
+                },
+                json_num(s.wall_us),
+                invalid
+            ));
+        }
+        out.push_str("\n],\n\"finalists\":[");
+        for (i, (fp, screen, flow)) in self.finalists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n{{\"genome_fp\":\"{:016x}\",\"screen_reward\":{},\"flow_reward\":{}}}",
+                fp,
+                json_num(*screen),
+                json_num(*flow)
+            ));
+        }
+        out.push_str("\n]\n}\n");
+        out
+    }
+}
+
+/// Reduce an invalid-genome reason to a low-cardinality counter label:
+/// the leading alphanumeric run, lowercased (`"Memory { .. }"` →
+/// `"memory"`, `"Config(..)"` → `"config"`), or `"other"`.
+pub fn invalid_category(reason: &str) -> String {
+    let cat: String =
+        reason.chars().take_while(|c| c.is_ascii_alphanumeric()).collect::<String>().to_lowercase();
+    if cat.is_empty() {
+        "other".to_string()
+    } else {
+        cat
+    }
+}
+
+/// Collects per-step records and aggregates them into a
+/// [`MetricsRegistry`]; optionally prints a progress line every
+/// `progress_every` steps (to stderr, keeping stdout parseable).
+#[derive(Debug)]
+pub struct SearchObserver {
+    pub metrics: MetricsRegistry,
+    timeline: Mutex<SearchTimeline>,
+    progress_every: u64,
+    started: Instant,
+}
+
+impl SearchObserver {
+    pub fn new() -> Self {
+        Self {
+            metrics: MetricsRegistry::new(),
+            timeline: Mutex::new(SearchTimeline::default()),
+            progress_every: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Print a progress line every `every` steps (0 = never).
+    pub fn with_progress(mut self, every: u64) -> Self {
+        self.progress_every = every;
+        self
+    }
+
+    /// Record one step: appends to the timeline and updates step,
+    /// cache-outcome, per-rung, reward and invalid-reason metrics.
+    pub fn record_step(&self, rec: SearchStepRecord, total_steps: u64) {
+        let m = &self.metrics;
+        m.inc("dse.steps");
+        m.inc(match rec.cache {
+            CacheOutcome::Hit => "dse.evals.cache_hit",
+            CacheOutcome::Miss => "dse.evals.cache_miss",
+        });
+        m.inc(rec.rung.counter_name());
+        match &rec.invalid_kind {
+            Some(kind) => m.inc(&format!("dse.invalid.{kind}")),
+            None => m.observe("dse.reward", rec.reward),
+        }
+        m.observe("dse.step_wall_us", rec.wall_us);
+        if self.progress_every > 0 && rec.step % self.progress_every == 0 {
+            let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+            eprintln!(
+                "[search] step {:>5}/{} reward {:>12.4e} best {:>12.4e} ({:.0} steps/s)",
+                rec.step,
+                total_steps,
+                rec.reward,
+                rec.best_so_far,
+                rec.step as f64 / secs
+            );
+        }
+        self.timeline.lock().unwrap().steps.push(rec);
+    }
+
+    /// Record staged-search finalists (fingerprint, screen reward,
+    /// flow reward).
+    pub fn record_finalists(&self, finalists: &[(u64, f64, f64)]) {
+        self.metrics.add("dse.finalists", finalists.len() as u64);
+        self.timeline.lock().unwrap().finalists.extend_from_slice(finalists);
+    }
+
+    /// Snapshot of the timeline recorded so far.
+    pub fn timeline(&self) -> SearchTimeline {
+        self.timeline.lock().unwrap().clone()
+    }
+
+    /// Combined `{"metrics": .., "timeline": ..}` JSON document — the
+    /// payload behind `cosmic search --telemetry`.
+    pub fn telemetry_json(&self) -> String {
+        format!(
+            "{{\n\"metrics\":{},\n\"timeline\":{}\n}}\n",
+            self.metrics.snapshot().to_json(),
+            self.timeline().to_json()
+        )
+    }
+}
+
+impl Default for SearchObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(i: u64, cache: CacheOutcome, invalid: Option<&str>) -> SearchStepRecord {
+        SearchStepRecord {
+            step: i,
+            genome_fp: 0xabcd + i,
+            rung: Rung::Analytical,
+            reward: 1.0 / i as f64,
+            best_so_far: 1.0,
+            cache,
+            wall_us: 10.0,
+            invalid_kind: invalid.map(invalid_category),
+        }
+    }
+
+    #[test]
+    fn invalid_categories_are_low_cardinality() {
+        assert_eq!(invalid_category("Memory { need_bytes: 1.0, budget_bytes: 0.5 }"), "memory");
+        assert_eq!(invalid_category("Config(\"tp too large\")"), "config");
+        assert_eq!(invalid_category("!?"), "other");
+    }
+
+    #[test]
+    fn observer_aggregates_steps() {
+        let obs = SearchObserver::new();
+        obs.record_step(step(1, CacheOutcome::Miss, None), 3);
+        obs.record_step(step(2, CacheOutcome::Hit, None), 3);
+        obs.record_step(step(3, CacheOutcome::Miss, Some("Memory { .. }")), 3);
+        obs.record_finalists(&[(1, 0.5, 0.4)]);
+        let m = &obs.metrics;
+        assert_eq!(m.counter("dse.steps"), 3);
+        assert_eq!(m.counter("dse.evals.cache_hit"), 1);
+        assert_eq!(m.counter("dse.evals.cache_miss"), 2);
+        assert_eq!(m.counter("dse.evals.rung.analytical"), 3);
+        assert_eq!(m.counter("dse.invalid.memory"), 1);
+        assert_eq!(m.counter("dse.finalists"), 1);
+        let tl = obs.timeline();
+        assert_eq!(tl.steps.len(), 3);
+        assert_eq!(tl.finalists, vec![(1, 0.5, 0.4)]);
+        // Rewards of invalid steps stay out of the reward histogram.
+        assert_eq!(obs.metrics.snapshot().histograms["dse.reward"].count, 2);
+        crate::util::json::validate(&obs.telemetry_json()).unwrap();
+    }
+}

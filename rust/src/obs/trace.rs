@@ -1,0 +1,373 @@
+//! Hierarchical timed spans and the Chrome-trace exporter.
+//!
+//! The simulator is analytical: nothing "runs", so span timestamps are
+//! **simulated microseconds** (the same unit as [`crate::sim::SimReport::latency_us`],
+//! before the layer-scale extrapolation), not wall time. A [`TraceSink`]
+//! is threaded through [`crate::sim::Simulator`] and the network
+//! backends; the default [`NoopSink`] reports `enabled() == false` so
+//! every emission site is skipped and the priced report is bit-identical
+//! to an un-instrumented run. A [`Recorder`] captures spans and exports
+//! them as Chrome `chrome://tracing` / Perfetto JSON.
+//!
+//! Export guarantees (asserted by `tests/obs_trace.rs`):
+//! - every `"B"` event has a matching `"E"` on the same pid/tid,
+//! - timestamps are non-decreasing per track,
+//! - overlapping spans on one track are nested by clamping a child's
+//!   end to its enclosing span's end (the simulator only emits properly
+//!   nested or disjoint spans per track, so clamping is a no-op there).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+/// A (process, thread) pair naming one horizontal lane in the trace UI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Track {
+    pub pid: u32,
+    pub tid: u32,
+}
+
+/// Well-known tracks. Constant pids/tids keep two runs of the same
+/// configuration byte-comparable (the golden/determinism tests rely on
+/// this).
+pub mod tracks {
+    use super::Track;
+
+    /// Simulator-side process: pipeline schedule, per-op walks,
+    /// gradient-sync windows.
+    pub const SIM_PID: u32 = 1;
+    /// Network-side process: drain admissions and per-dimension flows.
+    pub const NET_PID: u32 = 2;
+
+    /// Iteration window and per-microbatch pipeline slots.
+    pub const PIPELINE: Track = Track { pid: SIM_PID, tid: 1 };
+    /// Per-op forward walk of the first microbatch.
+    pub const FWD_OPS: Track = Track { pid: SIM_PID, tid: 2 };
+    /// Per-op backward walk of the last microbatch.
+    pub const BWD_OPS: Track = Track { pid: SIM_PID, tid: 3 };
+    /// Per-layer gradient-sync [issue, done] windows.
+    pub const GRAD_SYNC: Track = Track { pid: SIM_PID, tid: 4 };
+    /// Serialized (analytical) gradient drain: one busy span per job.
+    pub const SERIAL_DRAIN: Track = Track { pid: NET_PID, tid: 1 };
+    /// First tid of the per-topology-dimension flow tracks.
+    pub const NET_DIM_BASE: u32 = 16;
+
+    /// Track showing flow occupancy of topology dimension `dim`.
+    pub fn net_dim(dim: usize) -> Track {
+        Track { pid: NET_PID, tid: NET_DIM_BASE + dim as u32 }
+    }
+
+    /// Process name used in Chrome metadata events.
+    pub fn process_name(pid: u32) -> &'static str {
+        match pid {
+            SIM_PID => "simulator",
+            NET_PID => "network",
+            _ => "cosmic",
+        }
+    }
+
+    /// Thread name used in Chrome metadata events.
+    pub fn thread_name(pid: u32, tid: u32) -> String {
+        match (pid, tid) {
+            (SIM_PID, 1) => "pipeline".to_string(),
+            (SIM_PID, 2) => "fwd ops (microbatch 0)".to_string(),
+            (SIM_PID, 3) => "bwd ops (last microbatch)".to_string(),
+            (SIM_PID, 4) => "gradient sync".to_string(),
+            (NET_PID, 1) => "serial drain".to_string(),
+            (NET_PID, t) if t >= NET_DIM_BASE => format!("net dim {}", t - NET_DIM_BASE),
+            (_, t) => format!("track {t}"),
+        }
+    }
+}
+
+/// Consumer of timed spans. Implementations must be cheap to query:
+/// every emission site guards on [`TraceSink::enabled`] before doing
+/// any formatting work, so a disabled sink costs one virtual call per
+/// instrumented region.
+pub trait TraceSink: std::fmt::Debug + Send + Sync {
+    /// Whether spans should be emitted at all.
+    fn enabled(&self) -> bool;
+    /// Record one closed span on `track` covering `[start_us, end_us]`.
+    fn span(&self, track: Track, name: &str, start_us: f64, end_us: f64);
+}
+
+/// The default sink: disabled, drops everything.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn span(&self, _track: Track, _name: &str, _start_us: f64, _end_us: f64) {}
+}
+
+/// One recorded span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    pub pid: u32,
+    pub tid: u32,
+    pub name: String,
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+/// A [`TraceSink`] that buffers spans for export.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    spans: Mutex<Vec<SpanRec>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of all recorded spans, in emission order.
+    pub fn spans(&self) -> Vec<SpanRec> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Number of spans recorded so far.
+    pub fn span_count(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    /// Drop all recorded spans (the buffer is reused).
+    pub fn clear(&self) {
+        self.spans.lock().unwrap().clear();
+    }
+
+    /// Export everything recorded so far as Chrome-trace JSON.
+    pub fn chrome_trace_json(&self) -> String {
+        chrome_trace_json(&self.spans())
+    }
+}
+
+impl TraceSink for Recorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn span(&self, track: Track, name: &str, start_us: f64, end_us: f64) {
+        self.spans.lock().unwrap().push(SpanRec {
+            pid: track.pid,
+            tid: track.tid,
+            name: name.to_string(),
+            start_us,
+            end_us,
+        });
+    }
+}
+
+/// One Chrome duration event ready for serialization (`ph` is `'B'` or
+/// `'E'`). Exposed so tests can assert balance/monotonicity without
+/// parsing JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChromeEvent {
+    pub ph: char,
+    pub ts: f64,
+    pub pid: u32,
+    pub tid: u32,
+    pub name: String,
+}
+
+/// Lower spans to balanced `B`/`E` duration events, per track.
+///
+/// Per track, spans are sorted by (start asc, end desc, name) so an
+/// enclosing span precedes its children; a stack then closes spans as
+/// soon as the next start passes their end. A child whose end exceeds
+/// its parent's is clamped to the parent end, which makes balance and
+/// per-track timestamp monotonicity hold by construction for any input.
+/// Non-finite spans are dropped; `end < start` is clamped to zero width.
+pub fn chrome_events(spans: &[SpanRec]) -> Vec<ChromeEvent> {
+    let mut by_track: BTreeMap<(u32, u32), Vec<&SpanRec>> = BTreeMap::new();
+    for s in spans {
+        if !s.start_us.is_finite() || !s.end_us.is_finite() {
+            continue;
+        }
+        by_track.entry((s.pid, s.tid)).or_default().push(s);
+    }
+    let mut out = Vec::new();
+    for ((pid, tid), mut group) in by_track {
+        group.sort_by(|a, b| {
+            a.start_us
+                .partial_cmp(&b.start_us)
+                .unwrap()
+                .then(b.end_us.partial_cmp(&a.end_us).unwrap())
+                .then_with(|| a.name.cmp(&b.name))
+        });
+        let mut open_ends: Vec<f64> = Vec::new();
+        for s in group {
+            while open_ends.last().is_some_and(|&end| end <= s.start_us) {
+                let ts = open_ends.pop().unwrap();
+                out.push(ChromeEvent { ph: 'E', ts, pid, tid, name: String::new() });
+            }
+            let mut end = s.end_us.max(s.start_us);
+            if let Some(&parent_end) = open_ends.last() {
+                end = end.min(parent_end);
+            }
+            out.push(ChromeEvent { ph: 'B', ts: s.start_us, pid, tid, name: s.name.clone() });
+            open_ends.push(end);
+        }
+        while let Some(ts) = open_ends.pop() {
+            out.push(ChromeEvent { ph: 'E', ts, pid, tid, name: String::new() });
+        }
+    }
+    out
+}
+
+/// Serialize spans as a Chrome-trace / Perfetto JSON object
+/// (`{"traceEvents": [...]}`), including process/thread-name metadata
+/// for every track present. Deterministic for identical input.
+pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
+    let events = chrome_events(spans);
+    let mut pids: BTreeSet<u32> = BTreeSet::new();
+    let mut seen: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for e in &events {
+        pids.insert(e.pid);
+        seen.insert((e.pid, e.tid));
+    }
+    let mut items: Vec<String> = Vec::with_capacity(events.len() + seen.len() + pids.len());
+    for pid in &pids {
+        items.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"tid\":0,\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            pid,
+            escape(tracks::process_name(*pid))
+        ));
+    }
+    for (pid, tid) in &seen {
+        items.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            pid,
+            tid,
+            escape(&tracks::thread_name(*pid, *tid))
+        ));
+    }
+    for e in &events {
+        items.push(match e.ph {
+            'B' => format!(
+                "{{\"name\":\"{}\",\"cat\":\"cosmic\",\"ph\":\"B\",\"ts\":{:.3},\
+                 \"pid\":{},\"tid\":{}}}",
+                escape(&e.name),
+                e.ts,
+                e.pid,
+                e.tid
+            ),
+            _ => format!(
+                "{{\"ph\":\"E\",\"ts\":{:.3},\"pid\":{},\"tid\":{}}}",
+                e.ts, e.pid, e.tid
+            ),
+        });
+    }
+    let mut out = String::with_capacity(items.iter().map(|i| i.len() + 2).sum::<usize>() + 64);
+    out.push_str("{\"traceEvents\":[");
+    for (i, item) in items.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(item);
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(tid: u32, name: &str, start: f64, end: f64) -> SpanRec {
+        SpanRec {
+            pid: 1,
+            tid,
+            name: name.to_string(),
+            start_us: start,
+            end_us: end,
+        }
+    }
+
+    fn balance(events: &[ChromeEvent]) -> i64 {
+        events.iter().map(|e| if e.ph == 'B' { 1 } else { -1 }).sum()
+    }
+
+    #[test]
+    fn noop_sink_is_disabled() {
+        assert!(!NoopSink.enabled());
+    }
+
+    #[test]
+    fn nested_spans_emit_balanced_events() {
+        let spans = vec![
+            span(1, "outer", 0.0, 10.0),
+            span(1, "inner", 2.0, 5.0),
+            span(1, "tail", 6.0, 9.0),
+        ];
+        let ev = chrome_events(&spans);
+        assert_eq!(balance(&ev), 0);
+        // B outer, B inner, E inner, B tail, E tail, E outer.
+        let phases: String = ev.iter().map(|e| e.ph).collect();
+        assert_eq!(phases, "BBEBEE");
+        for w in ev.windows(2) {
+            assert!(w[0].ts <= w[1].ts, "timestamps must be monotone: {w:?}");
+        }
+    }
+
+    #[test]
+    fn child_overrunning_parent_is_clamped() {
+        let spans = vec![span(1, "outer", 0.0, 5.0), span(1, "runaway", 1.0, 50.0)];
+        let ev = chrome_events(&spans);
+        assert_eq!(balance(&ev), 0);
+        assert!(ev.iter().all(|e| e.ts <= 5.0));
+    }
+
+    #[test]
+    fn tracks_are_independent_and_ordered() {
+        let spans = vec![span(2, "b", 0.0, 1.0), span(1, "a", 0.0, 1.0)];
+        let ev = chrome_events(&spans);
+        assert_eq!(ev.len(), 4);
+        assert!(ev[0].tid == 1 && ev[2].tid == 2, "tracks sorted by (pid, tid)");
+    }
+
+    #[test]
+    fn non_finite_spans_are_dropped() {
+        let spans = vec![span(1, "bad", f64::NAN, 1.0), span(1, "ok", 0.0, 1.0)];
+        assert_eq!(chrome_events(&spans).len(), 2);
+    }
+
+    #[test]
+    fn json_escapes_and_wraps() {
+        let spans = vec![span(1, "quote\"back\\slash", 0.0, 1.0)];
+        let json = chrome_trace_json(&spans);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("quote\\\"back\\\\slash"));
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"thread_name\""));
+        crate::util::json::validate(&json).unwrap();
+    }
+
+    #[test]
+    fn recorder_round_trip_and_clear() {
+        let rec = Recorder::new();
+        rec.span(tracks::PIPELINE, "x", 0.0, 1.0);
+        assert_eq!(rec.span_count(), 1);
+        assert_eq!(rec.spans()[0].name, "x");
+        rec.clear();
+        assert_eq!(rec.span_count(), 0);
+    }
+}

@@ -31,9 +31,12 @@ pub use crate::netsim::EventQueue;
 
 use crate::collective::{CollAlgo, CollectiveConfig, CollectiveKind, MultiDimPolicy};
 use crate::compute::{ComputeDevice, MEM_LIMIT_BYTES};
+use crate::netsim::backend::collapse_per_layer;
 use crate::netsim::{
-    serial_drain, Analytical, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend, OverlapCall,
+    serial_drain, serial_drain_detailed, Analytical, CollectiveCall, FidelityMode, FlowLevel,
+    NetworkBackend, OverlapCall,
 };
+use crate::obs::{tracks, NoopSink, TraceSink, Track};
 use crate::topology::{DimCost, Topology};
 use crate::workload::{
     footprint, generate_trace, group_dim_costs, CommGroup, ExecutionMode, MemoryFootprint,
@@ -174,11 +177,18 @@ pub struct Simulator {
     pub mem_budget_bytes: f64,
     /// The network model (see [`crate::netsim`]); analytical by default.
     backend: Arc<dyn NetworkBackend>,
+    /// Span consumer (see [`crate::obs`]); the disabled [`NoopSink`] by
+    /// default, so pricing takes the identical code path.
+    sink: Arc<dyn TraceSink>,
 }
 
 impl Default for Simulator {
     fn default() -> Self {
-        Self { mem_budget_bytes: MEM_LIMIT_BYTES, backend: Arc::new(Analytical) }
+        Self {
+            mem_budget_bytes: MEM_LIMIT_BYTES,
+            backend: Arc::new(Analytical),
+            sink: Arc::new(NoopSink),
+        }
     }
 }
 
@@ -206,6 +216,22 @@ impl Simulator {
     /// The active network backend.
     pub fn backend(&self) -> &dyn NetworkBackend {
         self.backend.as_ref()
+    }
+
+    /// Attach a trace sink (e.g. [`crate::obs::Recorder`]). Spans cover
+    /// the priced timeline — iteration, pipeline slots, per-op
+    /// compute/collective phases, gradient drain — in *unscaled*
+    /// simulated microseconds. Emission never feeds back into pricing:
+    /// a run with any sink returns the same [`SimReport`] bits as one
+    /// with the default [`NoopSink`].
+    pub fn with_trace_sink(mut self, sink: Arc<dyn TraceSink>) -> Self {
+        self.sink = sink;
+        self
+    }
+
+    /// The active trace sink.
+    pub fn trace_sink(&self) -> &dyn TraceSink {
+        self.sink.as_ref()
     }
 
     /// The communicator group's rank-space stride and size.
@@ -247,6 +273,51 @@ impl Simulator {
             bytes,
             chunks: cluster.collectives.chunks,
         })
+    }
+
+    /// Emit per-phase child spans of one blocking collective. Only the
+    /// Baseline composition lays phases out sequentially; BlueConnect
+    /// overlaps them, which has no faithful single-track rendering, so
+    /// only the parent span is drawn there. Purely descriptive — the
+    /// priced cost comes from the memoized `coll_cost` path.
+    #[allow(clippy::too_many_arguments)]
+    fn trace_phases(
+        &self,
+        cluster: &ClusterConfig,
+        par: &Parallelization,
+        kind: CollectiveKind,
+        group: CommGroup,
+        bytes: f64,
+        start_us: f64,
+        track: Track,
+    ) {
+        if cluster.collectives.multidim != MultiDimPolicy::Baseline {
+            return;
+        }
+        let (stride, size) = Self::group_stride_size(par, group);
+        if size <= 1 {
+            return;
+        }
+        let span = group_dim_costs(&cluster.topology, stride, size);
+        if span.is_empty() {
+            return;
+        }
+        let algos: Vec<CollAlgo> =
+            span.iter().map(|(_, d)| cluster.collectives.algorithms[*d]).collect();
+        let phases = self.backend.phase_times_us(&CollectiveCall {
+            kind,
+            policy: cluster.collectives.multidim,
+            algos: &algos,
+            span: &span,
+            topology: &cluster.topology,
+            bytes,
+            chunks: cluster.collectives.chunks,
+        });
+        let mut t = start_us;
+        for (dim, dur) in phases {
+            self.sink.span(track, &format!("phase dim{dim}"), t, t + dur);
+            t += dur;
+        }
     }
 
     /// Point-to-point transfer between adjacent pipeline stages.
@@ -321,6 +392,7 @@ impl Simulator {
         memo: &mut dyn CollCostMemo,
     ) -> SimReport {
         let stage = &trace.stages[0];
+        let tracing = self.sink.enabled();
 
         let backend_fp = self.backend.cache_tag();
         let topo_fp = cluster.topology.fingerprint();
@@ -417,7 +489,20 @@ impl Simulator {
                         (*layer, bwd_start + frac * b_compute, coll_cost(*kind, *group, *bytes))
                     })
                     .collect();
-                serial_drain(&tuples, cluster.collectives.scheduling)
+                if tracing {
+                    let detailed = serial_drain_detailed(&tuples, cluster.collectives.scheduling);
+                    for &(layer, start, finish) in &detailed {
+                        self.sink.span(
+                            tracks::SERIAL_DRAIN,
+                            &format!("grad L{layer} drain"),
+                            start,
+                            finish,
+                        );
+                    }
+                    collapse_per_layer(detailed.into_iter().map(|(l, _, f)| (l, f)))
+                } else {
+                    serial_drain(&tuples, cluster.collectives.scheduling)
+                }
             } else {
                 // Holistic backends (flow-level contention) see all jobs
                 // at once; per-job costs are not separable, so nothing
@@ -455,14 +540,122 @@ impl Simulator {
                         }
                     })
                     .collect();
-                self.backend.drain_overlapped(&jobs, cluster.collectives.scheduling)
+                if tracing {
+                    self.backend.drain_overlapped_traced(
+                        &jobs,
+                        cluster.collectives.scheduling,
+                        self.sink.as_ref(),
+                    )
+                } else {
+                    self.backend.drain_overlapped(&jobs, cluster.collectives.scheduling)
+                }
             };
+            if tracing {
+                // Per-layer [issue, done] gradient-sync windows.
+                for &(layer, done_us) in &completions {
+                    let frac = (layers - layer) as f64 / layers as f64;
+                    let issue = bwd_start + frac * b_compute;
+                    self.sink.span(
+                        tracks::GRAD_SYNC,
+                        &format!("grad sync L{layer}"),
+                        issue,
+                        done_us.max(issue),
+                    );
+                }
+            }
             // Exposed tail: completion minus (iteration end + fwd slack).
             for (layer, done_us) in completions {
                 let slack = layer as f64 / layers as f64 * f_micro;
                 let exposure = done_us - pipeline_us - slack;
                 if exposure > exposed_us {
                     exposed_us = exposure;
+                }
+            }
+        }
+
+        // --- trace emission (skipped entirely when the sink is off) ---
+        // Timestamps are unscaled simulated us; the layer-scale
+        // extrapolation below multiplies the report, not the timeline.
+        // Emission only *reads* priced quantities (collective costs come
+        // back out of the warm memo), so it cannot perturb the report.
+        if tracing {
+            let training = matches!(mode, ExecutionMode::Training);
+            let iter_end = pipeline_us + exposed_us;
+            self.sink.span(tracks::PIPELINE, "iteration", 0.0, iter_end);
+            if exposed_us > 0.0 {
+                self.sink.span(tracks::PIPELINE, "exposed grad tail", pipeline_us, iter_end);
+            }
+            // 1F1B pipeline slots, capped so a huge microbatch count
+            // cannot blow up the trace file.
+            let slots = ((m + pp - 1.0) as u64).min(256);
+            let slot_us = if training { f_micro + b_micro } else { f_micro };
+            for k in 0..slots {
+                let t0 = k as f64 * slot_us;
+                self.sink.span(tracks::PIPELINE, &format!("slot {k} fwd"), t0, t0 + f_micro);
+                if training {
+                    self.sink.span(
+                        tracks::PIPELINE,
+                        &format!("slot {k} bwd"),
+                        t0 + f_micro,
+                        t0 + slot_us,
+                    );
+                }
+            }
+            // Per-op walk of the first microbatch's forward...
+            let mut tf = 0.0;
+            for op in &stage.forward {
+                match op {
+                    TraceOp::Compute { name, flops, bytes } => {
+                        let d = cluster.compute.op_time_us(*flops, *bytes);
+                        self.sink.span(tracks::FWD_OPS, &format!("fwd {name}"), tf, tf + d);
+                        tf += d;
+                    }
+                    TraceOp::Collective { kind, group, bytes, overlappable: false, .. } => {
+                        let d = coll_cost(*kind, *group, *bytes);
+                        self.sink.span(
+                            tracks::FWD_OPS,
+                            &format!("fwd {kind} {group:?}"),
+                            tf,
+                            tf + d,
+                        );
+                        self.trace_phases(cluster, par, *kind, *group, *bytes, tf, tracks::FWD_OPS);
+                        tf += d;
+                    }
+                    _ => {}
+                }
+            }
+            // ...and of the last microbatch's backward (whose layer
+            // retirements issue the gradient drain traced above).
+            if training {
+                let mut tb = pipeline_us - b_micro;
+                for op in &stage.backward {
+                    match op {
+                        TraceOp::Compute { name, flops, bytes } => {
+                            let d = cluster.compute.op_time_us(*flops, *bytes);
+                            self.sink.span(tracks::BWD_OPS, &format!("bwd {name}"), tb, tb + d);
+                            tb += d;
+                        }
+                        TraceOp::Collective { kind, group, bytes, overlappable: false, .. } => {
+                            let d = coll_cost(*kind, *group, *bytes);
+                            self.sink.span(
+                                tracks::BWD_OPS,
+                                &format!("bwd {kind} {group:?}"),
+                                tb,
+                                tb + d,
+                            );
+                            self.trace_phases(
+                                cluster,
+                                par,
+                                *kind,
+                                *group,
+                                *bytes,
+                                tb,
+                                tracks::BWD_OPS,
+                            );
+                            tb += d;
+                        }
+                        _ => {}
+                    }
                 }
             }
         }
@@ -723,6 +916,25 @@ mod tests {
             fair.comm_blocking_us
         );
         assert!(congested.latency_us > fair.latency_us);
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_report() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 2, 1, true);
+        let c = small_cluster(SchedulingPolicy::Lifo);
+        let plain = Simulator::new().run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        let rec = Arc::new(crate::obs::Recorder::new());
+        let traced = Simulator::new()
+            .with_trace_sink(rec.clone())
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        assert_eq!(plain, traced, "a recording sink must be bit-invisible to pricing");
+        let spans = rec.spans();
+        assert!(spans.iter().any(|s| s.name == "iteration"));
+        assert!(spans.iter().any(|s| s.name.starts_with("fwd ")));
+        assert!(spans.iter().any(|s| s.name.starts_with("grad sync")));
+        assert!(spans.iter().all(|s| s.start_us.is_finite() && s.end_us >= s.start_us - 1e-9));
     }
 
     #[test]

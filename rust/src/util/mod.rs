@@ -2,8 +2,10 @@
 //! available in this offline build (see DESIGN.md §Substitutions):
 //! [`rng`] replaces `rand`/`rand_chacha`, [`prop`] replaces `proptest`,
 //! [`par`] replaces `rayon`, [`stats`] provides the summary statistics
-//! the bench harness prints.
+//! the bench harness prints, [`json`] replaces a JSON parser for
+//! validating the documents `obs` emits.
 
+pub mod json;
 pub mod par;
 pub mod prop;
 pub mod rng;

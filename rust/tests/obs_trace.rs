@@ -1,0 +1,151 @@
+//! Integration tests for the `obs` subsystem: Chrome-trace export
+//! well-formedness, run-to-run determinism, zero perturbation of the
+//! priced reports, and DSE search telemetry end to end.
+
+use cosmic::agents::AgentKind;
+use cosmic::dse::{DseConfig, DseRunner, Objective, SearchStrategy, WorkloadSpec};
+use cosmic::harness::make_env;
+use cosmic::netsim::FidelityMode;
+use cosmic::obs::{chrome_events, chrome_trace_json, MetricsRegistry, Recorder, SearchObserver};
+use cosmic::pss::SearchScope;
+use cosmic::sim::{presets, SimReport, Simulator};
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, Parallelization};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One traced training run on System 1 (GPT3-13B, 4 layers, DP=64).
+fn traced_run(sim: Simulator) -> (Arc<Recorder>, SimReport) {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).unwrap();
+    let rec = Arc::new(Recorder::new());
+    let sim = sim.with_trace_sink(Arc::clone(&rec));
+    let report = sim.run(&cluster, &model, &par, 1024, ExecutionMode::Training).unwrap();
+    (rec, report)
+}
+
+#[test]
+fn chrome_trace_is_balanced_monotone_and_valid() {
+    let (rec, _) = traced_run(Simulator::new());
+    let spans = rec.spans();
+    assert!(!spans.is_empty());
+    assert!(spans.iter().any(|s| s.name == "iteration"));
+    assert!(spans.iter().any(|s| s.name.starts_with("fwd ")));
+    assert!(spans.iter().any(|s| s.name.starts_with("grad sync")));
+
+    // Every track's B/E events must balance with non-negative depth and
+    // non-decreasing timestamps — the Perfetto loadability invariants.
+    let events = chrome_events(&spans);
+    let mut depth: HashMap<(u32, u32), i64> = HashMap::new();
+    let mut last_ts: HashMap<(u32, u32), f64> = HashMap::new();
+    for e in &events {
+        let key = (e.pid, e.tid);
+        let d = depth.entry(key).or_insert(0);
+        match e.ph {
+            'B' => *d += 1,
+            'E' => *d -= 1,
+            other => panic!("unexpected phase '{other}'"),
+        }
+        assert!(*d >= 0, "E without matching B on track {key:?}");
+        let last = last_ts.entry(key).or_insert(f64::NEG_INFINITY);
+        assert!(e.ts >= *last, "timestamps regressed on track {key:?}");
+        *last = e.ts;
+    }
+    for (key, d) in depth {
+        assert_eq!(d, 0, "unbalanced B/E events on track {key:?}");
+    }
+
+    let json = chrome_trace_json(&spans);
+    cosmic::util::json::validate(&json).unwrap();
+    assert!(json.contains("\"traceEvents\""));
+    assert!(json.contains("process_name"), "PID metadata missing");
+    assert!(json.contains("thread_name"), "TID metadata missing");
+}
+
+#[test]
+fn repeated_runs_emit_identical_span_trees() {
+    let (a, report_a) = traced_run(Simulator::new());
+    let (b, report_b) = traced_run(Simulator::new());
+    assert_eq!(report_a, report_b);
+    assert_eq!(a.spans(), b.spans(), "span trees diverged across identical runs");
+    assert_eq!(chrome_trace_json(&a.spans()), chrome_trace_json(&b.spans()));
+}
+
+#[test]
+fn disabled_sink_report_is_bit_identical() {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).unwrap();
+    let plain =
+        Simulator::new().run(&cluster, &model, &par, 1024, ExecutionMode::Training).unwrap();
+    let (rec, traced) = traced_run(Simulator::new());
+    assert!(rec.span_count() > 0);
+    assert_eq!(plain, traced, "attaching a recorder changed the report");
+    assert_eq!(plain.latency_us.to_bits(), traced.latency_us.to_bits());
+}
+
+#[test]
+fn flow_level_traced_run_matches_untraced_and_emits_network_spans() {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).unwrap();
+    let untraced = Simulator::new()
+        .with_fidelity(FidelityMode::FlowLevel)
+        .run(&cluster, &model, &par, 1024, ExecutionMode::Training)
+        .unwrap();
+    let (rec, traced) = traced_run(Simulator::new().with_fidelity(FidelityMode::FlowLevel));
+    assert_eq!(untraced, traced, "tracing perturbed the flow-level report");
+    let spans = rec.spans();
+    assert!(
+        spans.iter().any(|s| s.pid == cosmic::obs::tracks::NET_PID),
+        "flow-level run emitted no network-process spans"
+    );
+}
+
+#[test]
+fn histogram_quantiles_match_util_stats() {
+    let m = MetricsRegistry::new();
+    let mut values: Vec<f64> = (0..500).map(|i| ((i * 7919) % 1000) as f64).collect();
+    for v in &values {
+        m.observe("lat", *v);
+    }
+    let h = m.snapshot().histograms["lat"];
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(h.count, 500);
+    assert_eq!(h.p50, cosmic::util::stats::percentile_sorted(&values, 50.0));
+    assert_eq!(h.p95, cosmic::util::stats::percentile_sorted(&values, 95.0));
+    assert_eq!(h.p99, cosmic::util::stats::percentile_sorted(&values, 99.0));
+}
+
+#[test]
+fn search_telemetry_end_to_end() {
+    let mut env = make_env(
+        presets::system1(),
+        vec![WorkloadSpec::training(wl::gpt3_13b().with_simulated_layers(2), 1024)],
+        Objective::PerfPerBwPerNpu,
+    );
+    let obs = Arc::new(SearchObserver::new());
+    let r = DseRunner::new(DseConfig::new(AgentKind::Ga, 25, 5), SearchScope::FullStack)
+        .with_strategy(SearchStrategy::Staged { promote_top_k: 3 })
+        .with_observer(Arc::clone(&obs))
+        .run(&mut env);
+    assert_eq!(r.history.len(), 25);
+    let tl = obs.timeline();
+    assert_eq!(tl.steps.len(), 25);
+    assert_eq!(tl.finalists.len(), r.finalists.len());
+    let m = obs.metrics.snapshot();
+    let hits = m.counters.get("dse.evals.cache_hit").copied().unwrap_or(0);
+    let misses = m.counters.get("dse.evals.cache_miss").copied().unwrap_or(0);
+    assert_eq!(hits + misses, 25, "every step is either a memo hit or a miss");
+    assert_eq!(m.counters.get("dse.evals.rung.analytical"), Some(&25));
+
+    env.export_metrics(&obs.metrics);
+    let snap = obs.metrics.snapshot();
+    assert!(snap.counters.contains_key("evalcache.trace_evictions"));
+    assert_eq!(snap.counters["env.flow_evals"], env.flow_evals());
+    let json = obs.telemetry_json();
+    cosmic::util::json::validate(&json).unwrap();
+    assert!(json.contains("\"timeline\""));
+    assert!(json.contains("\"genome_fp\""));
+}
