@@ -1,7 +1,7 @@
 //! DSE evaluation throughput: the perf deliverable of the staged
 //! multi-fidelity search + cross-evaluation cache work.
 //!
-//! Two measurements on a Table 5-scale setup (System 2, GPT3-175B):
+//! Measurements on a Table 5-scale setup (System 2, GPT3-175B):
 //!
 //! 1. **Cold vs warm cache** — evaluations/second through
 //!    `Environment::evaluate_uncached` (no caches at all) vs
@@ -18,6 +18,12 @@
 //!    default no-op trace sink vs an attached `obs::Recorder`. The
 //!    recorded run must produce a bit-identical report (hard gate:
 //!    tracing is observation-only); the slowdown ratio is advisory.
+//! 4. **Resilience suite evaluation** — evaluations/second through a
+//!    robust environment (nominal + 2 seeded fault scenarios per
+//!    point, `Environment::with_scenarios`); the rate is advisory, but
+//!    a hard gate requires the fault layer to be zero-cost when
+//!    disabled: a fault-free report must be bit-identical to a
+//!    nominal-scenario report with its goodput record stripped.
 //!
 //! Usage: `cargo bench --bench eval_throughput [-- --smoke] [-- --out FILE]`
 //! `--smoke` shrinks the workload for CI and keeps the regression
@@ -26,8 +32,11 @@
 //! given (see BENCH_eval_throughput.json for the recorded baseline).
 
 use cosmic::agents::AgentKind;
-use cosmic::dse::{DseConfig, DseRunner, Environment, Objective, SearchStrategy, WorkloadSpec};
-use cosmic::harness::make_env;
+use cosmic::dse::{
+    DseConfig, DseRunner, Environment, Objective, RobustAggregate, SearchStrategy, WorkloadSpec,
+};
+use cosmic::faults::FaultScenario;
+use cosmic::harness::{make_env, make_env_robust};
 use cosmic::netsim::{FidelityMode, FlowLevelConfig};
 use cosmic::obs::Recorder;
 use cosmic::pss::SearchScope;
@@ -174,6 +183,47 @@ fn main() {
         rec.span_count()
     );
 
+    // --- 4: resilience suite evaluation throughput ---
+    // The robust env carries its own schema (the checkpoint-interval
+    // knob changes the genome length), so it samples its own genomes.
+    let robust_env = make_env_robust(
+        presets::system2(),
+        vec![WorkloadSpec::training(wl::gpt3_175b().with_simulated_layers(8), 2048)],
+        Objective::PerfPerBwPerNpu,
+        7,
+        2,
+        RobustAggregate::Expected,
+    );
+    let robust_space = robust_env.pss.build_space(SearchScope::FullStack);
+    let mut rng = Rng::seed_from_u64(29);
+    let n_suite = if smoke { 24 } else { 96 };
+    let suite_genomes: Vec<Vec<usize>> =
+        (0..n_suite).filter_map(|_| robust_space.random_valid_genome(&mut rng, 500)).collect();
+    assert!(!suite_genomes.is_empty(), "sampled no valid robust genomes");
+    let t0 = Instant::now();
+    for g in &suite_genomes {
+        black_box(robust_env.evaluate_nomemo(g));
+    }
+    let suite_s = t0.elapsed().as_secs_f64();
+    let suite_rate = suite_genomes.len() as f64 / suite_s;
+    let suite_len = robust_env.scenario_suite().map(|(s, _)| s.len()).unwrap_or(0);
+    println!(
+        "\nrobust suite evaluation ({} scenarios/point): {suite_rate:>8.0} evals/s \
+         ({} points, {} suite evals; advisory)",
+        suite_len,
+        suite_genomes.len(),
+        robust_env.suite_evals()
+    );
+
+    // Fault-layer zero-cost check (hard gate below): the nominal
+    // scenario must reproduce the fault-free report bit for bit once
+    // its goodput record is stripped.
+    let nominal_sim = Simulator::new().with_faults(Arc::new(FaultScenario::nominal()));
+    let mut nominal_report =
+        nominal_sim.run(&cluster, &model, &par, 2048, ExecutionMode::Training).unwrap();
+    assert!(nominal_report.goodput.is_some(), "nominal scenario lost its goodput record");
+    nominal_report.goodput = None;
+
     // --- regression gates (computed first so the JSON records them) ---
     // Smoke thresholds are deliberately loose: same-process ratios on a
     // noisy shared runner, never validated on this hardware before CI.
@@ -208,6 +258,9 @@ fn main() {
         ("flow_evals_staged", staged.flow_evals.to_string()),
         ("trace_overhead_ratio", format!("{trace_ratio:.3}")),
         ("trace_spans_per_run", rec.span_count().to_string()),
+        ("suite_scenarios", suite_len.to_string()),
+        ("suite_points", suite_genomes.len().to_string()),
+        ("suite_evals_per_s", format!("{suite_rate:.1}")),
     ];
     let body: Vec<String> =
         fields.iter().map(|(k, v)| format!("  \"{k}\": {v}")).collect();
@@ -234,6 +287,12 @@ fn main() {
     // priced report (bit-identical to the untraced run).
     if plain_report != traced_report {
         failures.push("tracing perturbed the simulation report".to_string());
+    }
+    // Deterministic gate: the fault layer is zero-cost when disabled —
+    // a nominal scenario degrades nothing, so (goodput aside) its
+    // report must match the fault-free run bit for bit.
+    if plain_report.as_ref() != Some(&nominal_report) {
+        failures.push("nominal fault scenario perturbed the fault-free report".to_string());
     }
     if warm_speedup < min_warm {
         failures.push(format!("warm-cache speedup {warm_speedup:.2}x < {min_warm}x"));

@@ -25,6 +25,15 @@ pub use multidim::{
 };
 pub use scheduler::{ChunkScheduler, SchedulingPolicy};
 
+/// Max-over-participants completion under heterogeneous slowdown: a
+/// collective cannot finish before its slowest participant has
+/// contributed, so in lockstep SPMD execution per-group straggler
+/// multipliers collapse to the group maximum (never below `1.0`, the
+/// healthy rate). Used by [`crate::faults::StragglerModel`] to scale
+/// compute phases feeding each collective.
+pub fn straggler_factor(multipliers: &[f64]) -> f64 {
+    multipliers.iter().copied().fold(1.0, f64::max)
+}
 
 /// Full collective-stack configuration — the paper's "Collective Knob"
 /// rows in Tables 1 and 4.
@@ -102,6 +111,15 @@ mod tests {
         let mut bad = c;
         bad.chunks = 64;
         assert!(bad.validate(2).is_err());
+    }
+
+    #[test]
+    fn straggler_factor_is_max_over_participants() {
+        assert_eq!(straggler_factor(&[]), 1.0);
+        assert_eq!(straggler_factor(&[1.0, 1.0]), 1.0);
+        assert_eq!(straggler_factor(&[1.0, 1.4, 1.2]), 1.4);
+        // Faster-than-nominal groups never speed up the lockstep whole.
+        assert_eq!(straggler_factor(&[0.5]), 1.0);
     }
 
     #[test]

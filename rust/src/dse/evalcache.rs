@@ -9,9 +9,12 @@
 //!   knobs instantiates the *same* workload trace.
 //! - **Collective costs** depend only on the [`crate::sim::CollKey`]
 //!   tuple (backend tag, topology fingerprint, algorithm assignment,
-//!   kind, communicator stride/size, bytes, chunks) — every layer of
-//!   every trace, across every genome with the same network/collective
-//!   stack, re-prices the same handful of collectives.
+//!   kind, communicator stride/size, bytes, chunks, fault-scenario
+//!   fingerprint) — every layer of every trace, across every genome
+//!   with the same network/collective stack, re-prices the same handful
+//!   of collectives. Fault scenarios that degrade links join the key
+//!   (and the backend tag, via the fault view), so a robust suite never
+//!   cross-contaminates its scenarios' costs.
 //!
 //! [`EvalCache`] memoizes both, sharded behind `Mutex`es so
 //! `Environment::evaluate_batch` worker threads hit disjoint locks. The
@@ -317,6 +320,7 @@ mod tests {
             size: 8,
             bytes: 1e6f64.to_bits(),
             chunks: 4,
+            scenario: 0,
         }
     }
 
@@ -452,6 +456,39 @@ mod tests {
         // Re-pricing any key — evicted or not — stays deterministic.
         let v = memo.cost_us(&coll_key(0), &mut || 0.0);
         assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn coll_keys_differing_only_in_scenario_do_not_collide() {
+        // Deliberate-collision regression: two scenarios degrade the same
+        // physical collective differently, so a cache that ignored the
+        // scenario fingerprint would serve one scenario's cost to the
+        // other. Keys identical except `scenario` must keep both values.
+        let cache = EvalCache::new();
+        let mut memo = cache.coll_memo();
+        let nominal = coll_key(7);
+        let degraded = CollKey { scenario: 0xFA17, ..nominal };
+        let a = memo.cost_us(&nominal, &mut || 100.0);
+        let b = memo.cost_us(&degraded, &mut || 250.0);
+        assert_eq!((a, b), (100.0, 250.0), "scenario field must split the key space");
+        // Repeats hit their own entry, never the sibling's.
+        assert_eq!(memo.cost_us(&nominal, &mut || f64::NAN), 100.0);
+        assert_eq!(memo.cost_us(&degraded, &mut || f64::NAN), 250.0);
+        let s = cache.stats();
+        assert_eq!((s.coll_hits, s.coll_misses), (2, 2));
+    }
+
+    #[test]
+    fn trace_key_is_scenario_free_by_design() {
+        // Traces depend only on the workload, never on the fault
+        // scenario: a robust evaluation of K+1 scenarios generates the
+        // trace once and shares it across all of them.
+        let cache = EvalCache::new();
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let a = cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
+        let b = cache.trace(&m, &par(), 64, ExecutionMode::Training).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats().trace_misses, 1, "one generation serves every scenario");
     }
 
     #[test]

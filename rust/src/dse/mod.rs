@@ -18,13 +18,14 @@ pub use evalcache::{EvalCache, EvalCacheStats};
 pub use reward::{reward_from_report, Objective};
 
 use crate::agents::{Agent, AgentKind};
+use crate::faults::{FaultScenario, ScenarioSuite};
 use crate::netsim::{FidelityMode, FlowLevelConfig};
 use crate::obs::{
     invalid_category, CacheOutcome, MetricsRegistry, Rung, SearchObserver, SearchStepRecord,
 };
 use crate::pss::{Pss, SearchScope};
 use crate::sim::{ClusterConfig, CollCostMemo, Invalid, LocalCollMemo, SimReport, Simulator};
-use crate::util::parallel_map;
+use crate::util::parallel_map_catch;
 use crate::workload::{ExecutionMode, ModelConfig, Parallelization};
 use std::collections::HashMap;
 use std::hash::Hash;
@@ -82,6 +83,57 @@ fn fidelity_tag(forced: Option<FidelityMode>) -> u8 {
     }
 }
 
+/// How a robust (scenario-suite) evaluation folds per-scenario rewards
+/// into the single scalar the agents optimize.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RobustAggregate {
+    /// Mean reward over the suite — optimize expected goodput under the
+    /// scenario distribution.
+    #[default]
+    Expected,
+    /// Minimum reward over the suite — optimize the worst case, the
+    /// conservative deployment posture.
+    WorstCase,
+}
+
+impl RobustAggregate {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RobustAggregate::Expected => "expected",
+            RobustAggregate::WorstCase => "worst",
+        }
+    }
+
+    /// Parse a CLI spelling (`--robust expected|worst`).
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "expected" | "mean" => Some(RobustAggregate::Expected),
+            "worst" | "worst-case" | "min" => Some(RobustAggregate::WorstCase),
+            _ => None,
+        }
+    }
+
+    /// Fold per-scenario rewards into one scalar (`0.0` for an empty
+    /// suite, matching the invalid-point reward).
+    pub fn combine(&self, rewards: &[f64]) -> f64 {
+        if rewards.is_empty() {
+            return 0.0;
+        }
+        match self {
+            RobustAggregate::Expected => rewards.iter().sum::<f64>() / rewards.len() as f64,
+            RobustAggregate::WorstCase => rewards.iter().copied().fold(f64::INFINITY, f64::min),
+        }
+    }
+}
+
+/// Robust-mode state: the fault suite plus each scenario pre-wrapped in
+/// an `Arc` so per-evaluation simulator clones share one allocation.
+struct RobustConfig {
+    suite: ScenarioSuite,
+    aggregate: RobustAggregate,
+    scenarios: Vec<Arc<FaultScenario>>,
+}
+
 /// The environment side of the loop (PSS "Environment Side
 /// Configuration"): cost model + action/observation spaces + constraints.
 pub struct Environment {
@@ -101,10 +153,15 @@ pub struct Environment {
     /// *all* evaluations (including forced-fidelity ones): see
     /// [`evalcache::EvalCache`].
     eval_cache: EvalCache,
+    /// Robust mode: when set, every evaluation runs the whole fault
+    /// suite and aggregates — see [`Environment::with_scenarios`].
+    robust: Option<RobustConfig>,
     evals: AtomicU64,
     cache_hits: AtomicU64,
     invalid: AtomicU64,
     flow_evals: AtomicU64,
+    eval_panics: AtomicU64,
+    suite_evals: AtomicU64,
 }
 
 /// Outcome of evaluating one genome.
@@ -115,6 +172,35 @@ pub struct StepOutcome {
     /// from the memo cache — see [`RunResult::best_reports`]).
     pub reports: Vec<SimReport>,
     pub invalid_reason: Option<String>,
+}
+
+/// One scenario's share of a robust evaluation
+/// ([`Environment::evaluate_suite`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioScore {
+    /// Scenario name (`"nominal"`, `"seed42"`, …).
+    pub scenario: String,
+    /// The §5.4 reward under this scenario (goodput-adjusted latency).
+    pub reward: f64,
+    /// Weighted raw iteration latency (us) — faults already slow this
+    /// via stragglers and link degradation.
+    pub latency_us: f64,
+    /// Checkpoint/restart efficiency in `(0, 1]`: the fraction of
+    /// wall-clock doing useful work (exactly `1.0` for the nominal
+    /// scenario).
+    pub efficiency: f64,
+    /// Delivered useful compute across workloads (TFLOPs/s).
+    pub goodput_tflops: f64,
+}
+
+/// The per-scenario breakdown plus the aggregated robust reward.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteOutcome {
+    /// Per-scenario scores, nominal first (suite order).
+    pub scores: Vec<ScenarioScore>,
+    /// The aggregated reward the search optimizes.
+    pub reward: f64,
+    pub aggregate: RobustAggregate,
 }
 
 impl Environment {
@@ -128,10 +214,13 @@ impl Environment {
             objective,
             cache: (0..CACHE_SHARDS * FIDELITY_TAGS).map(|_| Mutex::new(HashMap::new())).collect(),
             eval_cache: EvalCache::new(),
+            robust: None,
             evals: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             invalid: AtomicU64::new(0),
             flow_evals: AtomicU64::new(0),
+            eval_panics: AtomicU64::new(0),
+            suite_evals: AtomicU64::new(0),
         }
     }
 
@@ -153,6 +242,28 @@ impl Environment {
         self
     }
 
+    /// Enable robust mode (builder style): every evaluation — whatever
+    /// the [`SearchStrategy`] — runs the whole `suite` and folds the
+    /// per-scenario rewards with `aggregate`. The per-evaluation
+    /// simulators are rebuilt from the current base simulators on each
+    /// call, so this composes with [`Environment::with_flow_config`] in
+    /// either order. Genome-memo and cross-evaluation cache keys stay
+    /// correct: the fault link view changes the backend `cache_tag` and
+    /// the collective keys' scenario fingerprint, so scenarios never
+    /// share collective costs they shouldn't (traces, which depend only
+    /// on the workload, *are* shared — deliberately).
+    pub fn with_scenarios(mut self, suite: ScenarioSuite, aggregate: RobustAggregate) -> Self {
+        assert!(!suite.is_empty(), "scenario suite needs at least the nominal scenario");
+        let scenarios = suite.scenarios.iter().cloned().map(Arc::new).collect();
+        self.robust = Some(RobustConfig { suite, aggregate, scenarios });
+        self
+    }
+
+    /// The active fault suite and aggregate, if robust mode is on.
+    pub fn scenario_suite(&self) -> Option<(&ScenarioSuite, RobustAggregate)> {
+        self.robust.as_ref().map(|r| (&r.suite, r.aggregate))
+    }
+
     /// Genomes evaluated (cache misses).
     pub fn evals(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
@@ -172,6 +283,18 @@ impl Environment {
     /// rung) — the denominator of the staged-search budget claims.
     pub fn flow_evals(&self) -> u64 {
         self.flow_evals.load(Ordering::Relaxed)
+    }
+
+    /// Batch evaluations that panicked and were isolated to an invalid
+    /// outcome instead of aborting the run (see
+    /// [`crate::util::parallel_map_catch`]).
+    pub fn eval_panics(&self) -> u64 {
+        self.eval_panics.load(Ordering::Relaxed)
+    }
+
+    /// Robust evaluations: each one runs the full scenario suite.
+    pub fn suite_evals(&self) -> u64 {
+        self.suite_evals.load(Ordering::Relaxed)
     }
 
     /// Hit/miss counters of the cross-evaluation trace/collective cache.
@@ -196,6 +319,11 @@ impl Environment {
         metrics.set_counter("env.cache_hits", self.cache_hits());
         metrics.set_counter("env.invalid", self.invalid());
         metrics.set_counter("env.flow_evals", self.flow_evals());
+        metrics.set_counter("env.eval_panics", self.eval_panics());
+        metrics.set_counter("env.suite_evals", self.suite_evals());
+        if let Some((suite, _)) = self.scenario_suite() {
+            metrics.set_counter("env.fault_scenarios", suite.len() as u64);
+        }
         let s = self.eval_cache_stats();
         metrics.set_counter("evalcache.trace_hits", s.trace_hits);
         metrics.set_counter("evalcache.trace_misses", s.trace_misses);
@@ -311,9 +439,25 @@ impl Environment {
         let mut misses: Vec<(&[usize], Vec<usize>)> = miss_positions.into_iter().collect();
         // HashMap order is nondeterministic; restore batch order.
         misses.sort_by_key(|(_, positions)| positions[0]);
-        let results = parallel_map(&misses, |(g, _)| self.evaluate_raw(g, forced, true));
-        for ((g, positions), outcome) in misses.iter().zip(results.into_iter()) {
-            self.cache_store(g, tag, &outcome);
+        let results = parallel_map_catch(&misses, |(g, _)| self.evaluate_raw(g, forced, true));
+        for ((g, positions), result) in misses.iter().zip(results.into_iter()) {
+            let outcome = match result {
+                Ok(outcome) => {
+                    self.cache_store(g, tag, &outcome);
+                    outcome
+                }
+                // A panicked evaluation is isolated to its own slot: it
+                // scores like an invalid point (reward 0, categorized
+                // reason) but is *not* memoized — a retry re-evaluates.
+                Err(msg) => {
+                    self.eval_panics.fetch_add(1, Ordering::Relaxed);
+                    StepOutcome {
+                        reward: 0.0,
+                        reports: Vec::new(),
+                        invalid_reason: Some(format!("Panic({msg})")),
+                    }
+                }
+            };
             // The first occurrence carries the full outcome (as a serial
             // evaluate would); later duplicates mirror cache hits.
             for &i in positions.iter().skip(1) {
@@ -367,12 +511,38 @@ impl Environment {
             }
         };
         let fidelity = forced.unwrap_or_else(|| self.pss.fidelity_of(&point));
-        let sim = match fidelity {
-            FidelityMode::FlowLevel => &self.flow_simulator,
-            FidelityMode::Analytical => &self.simulator,
-        };
         let mut priced_any = false;
-        let outcome = self.simulate_point(sim, &cluster, &par, use_eval_cache, &mut priced_any);
+        let outcome = if let Some(robust) = &self.robust {
+            self.suite_evals.fetch_add(1, Ordering::Relaxed);
+            let ckpt = self.pss.checkpoint_interval_of(&point);
+            match self.robust_outcomes(
+                robust,
+                &cluster,
+                &par,
+                ckpt,
+                fidelity,
+                use_eval_cache,
+                &mut priced_any,
+            ) {
+                Err(invalid) => invalid,
+                Ok(outcomes) => {
+                    let rewards: Vec<f64> = outcomes.iter().map(|o| o.reward).collect();
+                    let reward = robust.aggregate.combine(&rewards);
+                    // The nominal scenario's reports (index 0) stand in
+                    // for the point's reports, mirroring the fault-free
+                    // shape callers expect.
+                    let reports =
+                        outcomes.into_iter().next().map(|o| o.reports).unwrap_or_default();
+                    StepOutcome { reward, reports, invalid_reason: None }
+                }
+            }
+        } else {
+            let sim = match fidelity {
+                FidelityMode::FlowLevel => &self.flow_simulator,
+                FidelityMode::Analytical => &self.simulator,
+            };
+            self.simulate_point(sim, &cluster, &par, use_eval_cache, &mut priced_any)
+        };
         // Count flow-level *simulations*, not attempts: preflight/trace
         // rejects never touch the flow backend.
         if priced_any && matches!(fidelity, FidelityMode::FlowLevel) {
@@ -428,7 +598,14 @@ impl Environment {
                 };
             match run {
                 Ok(rep) => {
-                    total_latency_us += rep.latency_us * w.weight;
+                    // Goodput-adjusted effective latency: a scenario
+                    // delivering efficiency e needs 1/e wall-clock per
+                    // useful iteration. Fault-free reports carry no
+                    // goodput (e = 1) and the nominal scenario's
+                    // efficiency is exactly 1.0, so `x / 1.0` keeps both
+                    // bit-identical to the historical reward.
+                    let eff = rep.goodput.map(|g| g.efficiency).unwrap_or(1.0);
+                    total_latency_us += rep.latency_us * w.weight / eff.max(1e-12);
                     reports.push(rep);
                 }
                 Err(e) => {
@@ -442,6 +619,91 @@ impl Environment {
         }
         let reward = self.objective.reward(total_latency_us / 1e6, &cluster.topology);
         StepOutcome { reward, reports, invalid_reason: None }
+    }
+
+    /// Run one materialized design through every scenario of the suite
+    /// at one fidelity. `Ok` carries one outcome per scenario (nominal
+    /// first, reports attached); `Err` carries the invalid outcome (a
+    /// design rejected under any scenario is rejected outright — the
+    /// preflight and trace stages are scenario-independent, so in
+    /// practice all scenarios agree).
+    #[allow(clippy::too_many_arguments)]
+    fn robust_outcomes(
+        &self,
+        robust: &RobustConfig,
+        cluster: &ClusterConfig,
+        par: &Parallelization,
+        ckpt: Option<u64>,
+        fidelity: FidelityMode,
+        use_eval_cache: bool,
+        priced_any: &mut bool,
+    ) -> Result<Vec<StepOutcome>, StepOutcome> {
+        let base = match fidelity {
+            FidelityMode::FlowLevel => &self.flow_simulator,
+            FidelityMode::Analytical => &self.simulator,
+        };
+        let mut outcomes = Vec::with_capacity(robust.scenarios.len());
+        for scenario in &robust.scenarios {
+            let sim =
+                base.clone().with_faults(Arc::clone(scenario)).with_checkpoint_interval(ckpt);
+            let out = self.simulate_point(&sim, cluster, par, use_eval_cache, priced_any);
+            if out.invalid_reason.is_some() {
+                return Err(out);
+            }
+            outcomes.push(out);
+        }
+        Ok(outcomes)
+    }
+
+    /// Score one genome against the configured fault suite, scenario by
+    /// scenario — the detailed view behind the robust reward (the CLI's
+    /// per-scenario table). Errors if robust mode is off
+    /// ([`Environment::with_scenarios`]) or the genome is invalid.
+    /// Bypasses the genome memo (full reports are needed) but reuses the
+    /// cross-evaluation cache, so re-scoring a searched point is cheap.
+    pub fn evaluate_suite(
+        &self,
+        genome: &[usize],
+        forced: Option<FidelityMode>,
+    ) -> Result<SuiteOutcome, String> {
+        let robust = self
+            .robust
+            .as_ref()
+            .ok_or_else(|| "robust mode is off (Environment::with_scenarios)".to_string())?;
+        let point = self.pss.schema.decode_valid(genome)?;
+        let (cluster, par) = self.pss.materialize(&point)?;
+        let fidelity = forced.unwrap_or_else(|| self.pss.fidelity_of(&point));
+        let ckpt = self.pss.checkpoint_interval_of(&point);
+        let mut priced_any = false;
+        self.suite_evals.fetch_add(1, Ordering::Relaxed);
+        let outcomes = self
+            .robust_outcomes(robust, &cluster, &par, ckpt, fidelity, true, &mut priced_any)
+            .map_err(|inv| inv.invalid_reason.unwrap_or_else(|| "invalid design".to_string()))?;
+        let mut scores = Vec::with_capacity(outcomes.len());
+        for (scenario, out) in robust.suite.scenarios.iter().zip(outcomes.iter()) {
+            let mut raw_us = 0.0;
+            let mut effective_us = 0.0;
+            let mut goodput_tflops = 0.0;
+            for (w, rep) in self.workloads.iter().zip(out.reports.iter()) {
+                let eff = rep.goodput.map(|g| g.efficiency).unwrap_or(1.0);
+                raw_us += rep.latency_us * w.weight;
+                effective_us += rep.latency_us * w.weight / eff.max(1e-12);
+                goodput_tflops += rep.goodput.map(|g| g.goodput_tflops).unwrap_or(0.0);
+            }
+            scores.push(ScenarioScore {
+                scenario: scenario.name.clone(),
+                reward: out.reward,
+                latency_us: raw_us,
+                efficiency: if effective_us > 0.0 { raw_us / effective_us } else { 0.0 },
+                goodput_tflops,
+            });
+        }
+        let rewards: Vec<f64> = scores.iter().map(|s| s.reward).collect();
+        Ok(SuiteOutcome {
+            scores,
+            reward: robust.aggregate.combine(&rewards),
+            aggregate: robust.aggregate,
+        })
     }
 
     /// Latency (us) of a genome, ignoring the regularizer — used by the
@@ -1137,6 +1399,115 @@ mod tests {
         assert_eq!(plain.best_reward.to_bits(), observed.best_reward.to_bits());
         assert_eq!(plain.best_genome, observed.best_genome);
         assert_eq!(plain.history.len(), observed.history.len());
+    }
+
+    /// A paper schema extended with the checkpoint knob, no scenarios.
+    fn make_ckpt_env(objective: Objective) -> Environment {
+        let pss = Pss::new(
+            crate::psa::with_checkpoint_param(paper_table4_schema(1024, 4)),
+            presets::system2(),
+            Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+        );
+        let model = wl::gpt3_175b().with_simulated_layers(4);
+        Environment::new(pss, vec![WorkloadSpec::training(model, 2048)], objective)
+    }
+
+    fn make_robust_env(aggregate: RobustAggregate) -> Environment {
+        make_ckpt_env(Objective::PerfPerBwPerNpu)
+            .with_scenarios(ScenarioSuite::generate(7, 2, 4), aggregate)
+    }
+
+    #[test]
+    fn robust_aggregates_combine_correctly() {
+        assert_eq!(RobustAggregate::Expected.combine(&[1.0, 3.0]), 2.0);
+        assert_eq!(RobustAggregate::WorstCase.combine(&[1.0, 3.0]), 1.0);
+        assert_eq!(RobustAggregate::Expected.combine(&[]), 0.0);
+        assert_eq!(RobustAggregate::WorstCase.combine(&[]), 0.0);
+        assert_eq!(RobustAggregate::from_name("expected"), Some(RobustAggregate::Expected));
+        assert_eq!(RobustAggregate::from_name("worst"), Some(RobustAggregate::WorstCase));
+        assert_eq!(RobustAggregate::from_name("bogus"), None);
+        assert_eq!(RobustAggregate::Expected.name(), "expected");
+        assert_eq!(RobustAggregate::WorstCase.name(), "worst");
+    }
+
+    #[test]
+    fn robust_reward_is_bounded_by_nominal() {
+        // Faults only slow a design down, so: worst <= expected <= nominal.
+        let plain = make_ckpt_env(Objective::PerfPerBwPerNpu);
+        let g = plain.pss.baseline_genome();
+        let nominal = plain.evaluate(&g).reward;
+        let expected = make_robust_env(RobustAggregate::Expected).evaluate(&g).reward;
+        let worst = make_robust_env(RobustAggregate::WorstCase).evaluate(&g).reward;
+        assert!(nominal > 0.0 && expected > 0.0 && worst > 0.0);
+        assert!(expected <= nominal, "expected {expected:.6e} > nominal {nominal:.6e}");
+        assert!(worst <= expected, "worst {worst:.6e} > expected {expected:.6e}");
+    }
+
+    #[test]
+    fn robust_evaluation_is_deterministic() {
+        let env = make_robust_env(RobustAggregate::Expected);
+        let g = env.pss.baseline_genome();
+        let a = env.evaluate_nomemo(&g);
+        let b = env.evaluate_nomemo(&g);
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+        assert_eq!(env.suite_evals(), 2);
+        assert_eq!(env.eval_panics(), 0);
+    }
+
+    #[test]
+    fn evaluate_suite_scores_every_scenario() {
+        let env = make_robust_env(RobustAggregate::WorstCase);
+        let g = env.pss.baseline_genome();
+        let suite = env.evaluate_suite(&g, None).unwrap();
+        assert_eq!(suite.scores.len(), 3); // nominal + 2 seeded
+        assert_eq!(suite.scores[0].scenario, "nominal");
+        assert_eq!(suite.scores[0].efficiency, 1.0);
+        assert!(suite.scores[0].goodput_tflops > 0.0);
+        let min = suite.scores.iter().map(|s| s.reward).fold(f64::INFINITY, f64::min);
+        assert_eq!(suite.reward, min);
+        for s in &suite.scores[1..] {
+            assert!(s.reward <= suite.scores[0].reward, "{}: faults sped things up", s.scenario);
+            assert!(s.efficiency > 0.0 && s.efficiency <= 1.0);
+        }
+        // Without a configured suite the detailed view refuses.
+        let plain = make_env(Objective::PerfPerBwPerNpu);
+        assert!(plain.evaluate_suite(&plain.pss.baseline_genome(), None).is_err());
+    }
+
+    #[test]
+    fn checkpoint_knob_changes_robust_reward() {
+        let env = make_robust_env(RobustAggregate::Expected);
+        let g = env.pss.baseline_genome();
+        let slots = env.pss.schema.param_slots(crate::psa::builders::names::CKPT_INTERVAL);
+        assert_eq!(slots.len(), 1);
+        let mut g2 = g.clone();
+        g2[slots[0]] = 7; // 1024-iteration interval vs the baseline's 8
+        let r1 = env.evaluate_nomemo(&g).reward;
+        let r2 = env.evaluate_nomemo(&g2).reward;
+        assert!(r1 > 0.0 && r2 > 0.0);
+        assert_ne!(r1.to_bits(), r2.to_bits(), "checkpoint knob must flow into goodput");
+        // Fault-free, the knob is inert: both genomes score identically.
+        let plain = make_ckpt_env(Objective::PerfPerBwPerNpu);
+        let p1 = plain.evaluate_nomemo(&g).reward;
+        let p2 = plain.evaluate_nomemo(&g2).reward;
+        assert_eq!(p1.to_bits(), p2.to_bits());
+    }
+
+    #[test]
+    fn robust_runner_works_with_every_strategy() {
+        for strategy in [
+            SearchStrategy::GenomeFidelity,
+            SearchStrategy::Fixed(FidelityMode::Analytical),
+            SearchStrategy::Staged { promote_top_k: 2 },
+        ] {
+            let mut env = make_robust_env(RobustAggregate::Expected);
+            let cfg = DseConfig::new(AgentKind::Rw, 8, 5);
+            let r = DseRunner::new(cfg, SearchScope::FullStack)
+                .with_strategy(strategy)
+                .run(&mut env);
+            assert_eq!(r.history.len(), 8, "{strategy:?}");
+            assert!(env.suite_evals() > 0, "{strategy:?} never ran the suite");
+        }
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! First-order goodput accounting under checkpoint/restart: the
+//! classic Young/Daly model. A run checkpointing every `tau` seconds
+//! with write cost `delta` spends `tau/(tau+delta)` of its time on
+//! useful work; each failure (cluster MTBF `M`) loses on average half
+//! an interval plus the restart cost, so the delivered fraction is
+//!
+//! `eff(tau) = tau/(tau+delta) * max(0, 1 - (tau/2 + restart)/M)`
+//!
+//! maximized near the Young/Daly interval `tau* = sqrt(2*delta*M)`.
+//! Goodput is `achieved_tflops * eff` — throughput net of checkpoint
+//! overhead and lost work.
+
+use super::FailureModel;
+
+/// Resilience accounting attached to a [`crate::sim::SimReport`] when a
+/// fault scenario is active (`None` on fault-free runs, preserving
+/// bit-identity with the pre-fault pipeline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Goodput {
+    /// Checkpoint interval used, seconds (Young/Daly optimum unless a
+    /// checkpoint-interval knob forced one).
+    pub checkpoint_interval_s: f64,
+    /// Cluster-level MTBF, seconds (device MTBF / device count).
+    pub cluster_mtbf_s: f64,
+    /// Fraction of raw throughput delivered, in `[0, 1]`.
+    pub efficiency: f64,
+    /// `achieved_tflops * efficiency`.
+    pub goodput_tflops: f64,
+    /// Young/Daly optimal interval for this scenario, seconds — the
+    /// baseline the checkpoint knob is judged against.
+    pub young_daly_interval_s: f64,
+    /// Efficiency at the Young/Daly interval.
+    pub young_daly_efficiency: f64,
+}
+
+/// Young/Daly optimal checkpoint interval `sqrt(2 * delta * M)` in
+/// seconds; infinite when the cluster never fails (never checkpoint).
+pub fn young_daly_interval_s(checkpoint_write_s: f64, cluster_mtbf_s: f64) -> f64 {
+    if !cluster_mtbf_s.is_finite() {
+        return f64::INFINITY;
+    }
+    (2.0 * checkpoint_write_s.max(0.0) * cluster_mtbf_s).sqrt()
+}
+
+/// Delivered-work fraction for a checkpoint interval of `interval_s`
+/// seconds. Exactly `1.0` when the cluster never fails and no
+/// checkpoint overhead is paid; clamped to `[0, 1]` otherwise.
+pub fn efficiency(
+    interval_s: f64,
+    checkpoint_write_s: f64,
+    restart_s: f64,
+    cluster_mtbf_s: f64,
+) -> f64 {
+    if cluster_mtbf_s <= 0.0 {
+        return 0.0;
+    }
+    let delta = checkpoint_write_s.max(0.0);
+    let ckpt = if delta <= 0.0 || interval_s.is_infinite() {
+        1.0
+    } else {
+        interval_s / (interval_s + delta)
+    };
+    let lost = if cluster_mtbf_s.is_finite() {
+        // An unbounded interval on a failing cluster still cannot lose
+        // more than ~one MTBF of work per failure on average.
+        let tau = if interval_s.is_finite() { interval_s } else { cluster_mtbf_s };
+        (1.0 - (tau / 2.0 + restart_s.max(0.0)) / cluster_mtbf_s).max(0.0)
+    } else {
+        1.0
+    };
+    (ckpt * lost).clamp(0.0, 1.0)
+}
+
+/// Price one iteration's resilience: `iteration_s` is the simulated
+/// iteration time, `achieved_tflops` the raw cluster throughput,
+/// `interval_iters` the checkpoint-interval knob in iterations (`None`
+/// = use the Young/Daly optimum).
+pub fn goodput_of(
+    iteration_s: f64,
+    achieved_tflops: f64,
+    npus: u64,
+    failures: &FailureModel,
+    interval_iters: Option<u64>,
+) -> Goodput {
+    let m = failures.cluster_mtbf_s(npus);
+    let yd = young_daly_interval_s(failures.checkpoint_write_s, m);
+    let tau = match interval_iters {
+        Some(k) => k.max(1) as f64 * iteration_s,
+        None => yd,
+    };
+    let eff = efficiency(tau, failures.checkpoint_write_s, failures.restart_s, m);
+    Goodput {
+        checkpoint_interval_s: tau,
+        cluster_mtbf_s: m,
+        efficiency: eff,
+        goodput_tflops: achieved_tflops * eff,
+        young_daly_interval_s: yd,
+        young_daly_efficiency: efficiency(yd, failures.checkpoint_write_s, failures.restart_s, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing() -> FailureModel {
+        FailureModel { device_mtbf_hours: 2e4, checkpoint_write_s: 60.0, restart_s: 120.0 }
+    }
+
+    #[test]
+    fn nominal_cluster_delivers_exactly_one() {
+        let g = goodput_of(0.5, 123.456, 4096, &FailureModel::nominal(), None);
+        assert_eq!(g.efficiency, 1.0);
+        assert_eq!(g.goodput_tflops, 123.456);
+        assert!(g.young_daly_interval_s.is_infinite());
+    }
+
+    #[test]
+    fn failures_cost_throughput() {
+        let g = goodput_of(0.5, 100.0, 4096, &failing(), None);
+        assert!(g.efficiency > 0.0 && g.efficiency < 1.0);
+        assert!(g.goodput_tflops < 100.0);
+        assert!(g.cluster_mtbf_s > 0.0 && g.cluster_mtbf_s.is_finite());
+    }
+
+    #[test]
+    fn young_daly_interval_is_near_optimal() {
+        let f = failing();
+        let m = f.cluster_mtbf_s(4096);
+        let yd = young_daly_interval_s(f.checkpoint_write_s, m);
+        let at = |tau: f64| efficiency(tau, f.checkpoint_write_s, f.restart_s, m);
+        assert!(at(yd) >= at(yd * 0.25) - 1e-12);
+        assert!(at(yd) >= at(yd * 4.0) - 1e-12);
+    }
+
+    #[test]
+    fn efficiency_monotone_in_mtbf() {
+        let f = failing();
+        let mut prev = -1.0;
+        for mtbf_s in [1e3, 1e4, 1e5, 1e6, 1e9] {
+            let yd = young_daly_interval_s(f.checkpoint_write_s, mtbf_s);
+            let e = efficiency(yd, f.checkpoint_write_s, f.restart_s, mtbf_s);
+            assert!(e >= prev, "efficiency not monotone in MTBF: {e} < {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn forced_interval_reported_in_seconds() {
+        let g = goodput_of(2.0, 100.0, 16, &failing(), Some(32));
+        assert_eq!(g.checkpoint_interval_s, 64.0);
+        assert!(g.efficiency <= g.young_daly_efficiency + 1e-12);
+    }
+
+    #[test]
+    fn dead_cluster_delivers_nothing() {
+        assert_eq!(efficiency(10.0, 1.0, 1.0, 0.0), 0.0);
+    }
+}

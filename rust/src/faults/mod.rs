@@ -1,0 +1,35 @@
+//! Deterministic fault injection: seeded failure scenarios and the
+//! resilience accounting that turns raw throughput into *goodput*.
+//!
+//! COSMIC's DSE scores every candidate configuration on a perfectly
+//! healthy cluster; at scale, stragglers, flaky links, and device
+//! failures dominate delivered throughput, and the nominal optimum is
+//! often fragile under them. This module makes failure a first-class,
+//! reproducible scenario axis:
+//!
+//! - [`FaultScenario`] — one deterministic failure world, drawn from a
+//!   seed: per-device-group straggler compute multipliers, per-dim link
+//!   bandwidth/latency degradation, and an MTBF-based device-failure
+//!   model with checkpoint-restart recovery costs.
+//! - [`ScenarioSuite`] — the nominal scenario plus K seeded ones, the
+//!   unit over which robust search aggregates (see
+//!   [`crate::dse::Environment::with_scenarios`]).
+//! - [`FaultView`] — a [`crate::netsim::NetworkBackend`] wrapper that
+//!   applies a scenario's link degradation underneath *any* fidelity
+//!   rung (Analytical or FlowLevel) without the rung knowing.
+//! - [`Goodput`] — throughput net of checkpoint overhead and lost work,
+//!   with a Young/Daly optimal-interval baseline, attached to
+//!   [`crate::sim::SimReport`] whenever a scenario is active.
+//!
+//! Everything is seed-reproducible: the same seed yields bit-identical
+//! scenarios, and a simulation under the nominal scenario is
+//! bit-identical to the fault-free path (gated in tests and in
+//! `benches/eval_throughput.rs`).
+
+mod goodput;
+mod scenario;
+mod view;
+
+pub use goodput::{efficiency, goodput_of, young_daly_interval_s, Goodput};
+pub use scenario::{FailureModel, FaultScenario, LinkFaults, ScenarioSuite, StragglerModel};
+pub use view::FaultView;

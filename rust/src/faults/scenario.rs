@@ -1,0 +1,378 @@
+//! Seeded fault scenarios: straggler, link-degradation, and
+//! device-failure models, plus the suite the robust DSE scores against.
+
+use crate::util::{hash64, Rng};
+use std::hash::Hash;
+
+/// Per-device-group compute slowdown multipliers (`>= 1.0`; `1.0` =
+/// healthy). In lockstep SPMD training every collective waits for its
+/// slowest participant, so the groups collapse to the worst multiplier
+/// (see [`crate::collective::straggler_factor`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerModel {
+    /// Compute-time multiplier per device group.
+    pub group_multipliers: Vec<f64>,
+}
+
+impl StragglerModel {
+    /// No stragglers: every group at `1.0`.
+    pub fn nominal() -> Self {
+        Self { group_multipliers: vec![1.0] }
+    }
+
+    /// True when no group is slowed at all.
+    pub fn is_nominal(&self) -> bool {
+        self.group_multipliers.iter().all(|&m| m <= 1.0)
+    }
+
+    /// The max-over-participants factor the whole lockstep iteration
+    /// inherits (never below `1.0`).
+    pub fn worst_multiplier(&self) -> f64 {
+        crate::collective::straggler_factor(&self.group_multipliers)
+    }
+}
+
+/// Per-topology-dimension link degradation: bandwidth multipliers in
+/// `(0, 1]` and latency multipliers `>= 1.0`. Dimensions beyond the
+/// stored vectors are treated as healthy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkFaults {
+    /// Bandwidth multiplier per dim (`1.0` = full rate).
+    pub bandwidth_factor: Vec<f64>,
+    /// Latency multiplier per dim (`1.0` = nominal).
+    pub latency_factor: Vec<f64>,
+}
+
+impl LinkFaults {
+    /// All links healthy.
+    pub fn nominal() -> Self {
+        Self { bandwidth_factor: Vec::new(), latency_factor: Vec::new() }
+    }
+
+    /// Bandwidth multiplier for `dim` (`1.0` when out of range).
+    pub fn bw_factor(&self, dim: usize) -> f64 {
+        self.bandwidth_factor.get(dim).copied().unwrap_or(1.0)
+    }
+
+    /// Latency multiplier for `dim` (`1.0` when out of range).
+    pub fn lat_factor(&self, dim: usize) -> f64 {
+        self.latency_factor.get(dim).copied().unwrap_or(1.0)
+    }
+
+    /// True when no dim is degraded.
+    pub fn is_nominal(&self) -> bool {
+        self.bandwidth_factor.iter().all(|&f| f >= 1.0)
+            && self.latency_factor.iter().all(|&f| f <= 1.0)
+    }
+
+    /// Stable fingerprint of the degradation, `0` for nominal links —
+    /// so nominal-link scenarios share collective-cost cache entries
+    /// with plain fault-free runs (see `sim::CollKey::scenario`).
+    pub fn fingerprint(&self) -> u64 {
+        if self.is_nominal() {
+            return 0;
+        }
+        hash64(|h| {
+            0xFA17u64.hash(h);
+            self.bandwidth_factor.len().hash(h);
+            for f in &self.bandwidth_factor {
+                f.to_bits().hash(h);
+            }
+            self.latency_factor.len().hash(h);
+            for f in &self.latency_factor {
+                f.to_bits().hash(h);
+            }
+        })
+    }
+}
+
+/// Transient device failures: a per-device MTBF with checkpoint-restart
+/// recovery costs, priced by the first-order Young/Daly model in
+/// [`super::goodput`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailureModel {
+    /// Mean time between failures per device, in hours
+    /// (`f64::INFINITY` = devices never fail).
+    pub device_mtbf_hours: f64,
+    /// Time to write one checkpoint, seconds.
+    pub checkpoint_write_s: f64,
+    /// Fixed restart/rollback cost after a failure, seconds.
+    pub restart_s: f64,
+}
+
+impl FailureModel {
+    /// Devices never fail; checkpointing is free and unnecessary.
+    pub fn nominal() -> Self {
+        Self { device_mtbf_hours: f64::INFINITY, checkpoint_write_s: 0.0, restart_s: 0.0 }
+    }
+
+    /// True when failures can never occur.
+    pub fn is_nominal(&self) -> bool {
+        self.device_mtbf_hours.is_infinite()
+    }
+
+    /// Cluster-level MTBF in seconds: independent failures shrink the
+    /// mean time to *any* failure by the device count.
+    pub fn cluster_mtbf_s(&self, npus: u64) -> f64 {
+        self.device_mtbf_hours * 3600.0 / npus.max(1) as f64
+    }
+}
+
+/// One deterministic failure world. Equal seeds yield bit-identical
+/// scenarios; the nominal scenario prices bit-identically to the
+/// fault-free path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultScenario {
+    /// Human-readable label (`"nominal"`, `"seed7"`, ...).
+    pub name: String,
+    /// The seed this scenario was drawn from (`0` for nominal).
+    pub seed: u64,
+    /// Straggler compute multipliers per device group.
+    pub stragglers: StragglerModel,
+    /// Per-dim link degradation.
+    pub links: LinkFaults,
+    /// Device-failure / checkpoint-restart model.
+    pub failures: FailureModel,
+}
+
+/// Number of device groups the straggler draw partitions the cluster
+/// into; only the max matters under lockstep execution, but keeping
+/// groups makes scenarios interpretable in traces.
+const STRAGGLER_GROUPS: usize = 4;
+
+impl FaultScenario {
+    /// The healthy cluster: no stragglers, no link faults, no failures.
+    pub fn nominal() -> Self {
+        Self {
+            name: "nominal".to_string(),
+            seed: 0,
+            stragglers: StragglerModel::nominal(),
+            links: LinkFaults::nominal(),
+            failures: FailureModel::nominal(),
+        }
+    }
+
+    /// Draw one scenario deterministically from `seed` for a topology
+    /// with `dims` network dimensions. Equal `(seed, dims)` give
+    /// bit-identical scenarios across runs and platforms.
+    pub fn from_seed(seed: u64, dims: usize) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xFA01_7D5E_ED00_C0DE);
+        // Stragglers: each group slowed with prob 1/2, by up to +60%
+        // (quadratic bias toward mild skew — severe stragglers are rare).
+        let group_multipliers: Vec<f64> = (0..STRAGGLER_GROUPS)
+            .map(|_| {
+                if rng.gen_bool(0.5) {
+                    let u = rng.gen_f64();
+                    1.0 + 0.6 * u * u
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        // Links: each dim degraded with prob 0.4 — bandwidth down to
+        // 40% of nominal, latency up to 3x.
+        let mut bandwidth_factor = Vec::with_capacity(dims);
+        let mut latency_factor = Vec::with_capacity(dims);
+        for _ in 0..dims {
+            if rng.gen_bool(0.4) {
+                bandwidth_factor.push(1.0 - 0.6 * rng.gen_f64());
+                latency_factor.push(1.0 + 2.0 * rng.gen_f64());
+            } else {
+                bandwidth_factor.push(1.0);
+                latency_factor.push(1.0);
+            }
+        }
+        // Failures: device MTBF log-uniform in ~[5e3, 1e5] hours,
+        // checkpoint writes 10–120 s, restarts 30–300 s.
+        let device_mtbf_hours = 10f64.powf(3.7 + 1.3 * rng.gen_f64());
+        let checkpoint_write_s = 10.0 + 110.0 * rng.gen_f64();
+        let restart_s = 30.0 + 270.0 * rng.gen_f64();
+        Self {
+            name: format!("seed{seed}"),
+            seed,
+            stragglers: StragglerModel { group_multipliers },
+            links: LinkFaults { bandwidth_factor, latency_factor },
+            failures: FailureModel { device_mtbf_hours, checkpoint_write_s, restart_s },
+        }
+    }
+
+    /// True when the scenario degrades nothing (prices identically to
+    /// the fault-free path, modulo the attached goodput record).
+    pub fn is_nominal(&self) -> bool {
+        self.stragglers.is_nominal() && self.links.is_nominal() && self.failures.is_nominal()
+    }
+
+    /// Stable fingerprint over every model parameter (bit patterns, not
+    /// rounded values) — used by determinism tests and telemetry.
+    pub fn fingerprint(&self) -> u64 {
+        hash64(|h| {
+            self.seed.hash(h);
+            self.stragglers.group_multipliers.len().hash(h);
+            for m in &self.stragglers.group_multipliers {
+                m.to_bits().hash(h);
+            }
+            self.links.fingerprint().hash(h);
+            self.failures.device_mtbf_hours.to_bits().hash(h);
+            self.failures.checkpoint_write_s.to_bits().hash(h);
+            self.failures.restart_s.to_bits().hash(h);
+        })
+    }
+
+    /// Rescale every degradation by `severity`: `0.0` is nominal,
+    /// `1.0` is this scenario, `> 1.0` amplifies it. Goodput is
+    /// monotone non-increasing along a severity ladder (property-tested
+    /// in `rust/tests/faults.rs`).
+    pub fn scaled(&self, severity: f64) -> Self {
+        let s = severity.max(0.0);
+        let amp = |m: f64| 1.0 + (m - 1.0) * s;
+        Self {
+            name: format!("{}x{s:.2}", self.name),
+            seed: self.seed,
+            stragglers: StragglerModel {
+                group_multipliers: self
+                    .stragglers
+                    .group_multipliers
+                    .iter()
+                    .map(|&m| amp(m))
+                    .collect(),
+            },
+            links: LinkFaults {
+                bandwidth_factor: self
+                    .links
+                    .bandwidth_factor
+                    .iter()
+                    .map(|&f| (1.0 - (1.0 - f) * s).max(0.05))
+                    .collect(),
+                latency_factor: self.links.latency_factor.iter().map(|&f| amp(f)).collect(),
+            },
+            failures: FailureModel {
+                device_mtbf_hours: if s > 0.0 {
+                    self.failures.device_mtbf_hours / s
+                } else {
+                    f64::INFINITY
+                },
+                checkpoint_write_s: self.failures.checkpoint_write_s,
+                restart_s: self.failures.restart_s,
+            },
+        }
+    }
+}
+
+/// The nominal scenario plus K seeded ones — the unit robust search
+/// aggregates over. `scenarios[0]` is always nominal so reports and
+/// baselines stay anchored to the healthy cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSuite {
+    /// `[nominal, seeded #1, ..., seeded #K]`.
+    pub scenarios: Vec<FaultScenario>,
+}
+
+impl ScenarioSuite {
+    /// Nominal + `k` scenarios drawn deterministically from `seed` for
+    /// a `dims`-dimensional topology.
+    pub fn generate(seed: u64, k: usize, dims: usize) -> Self {
+        let mut scenarios = Vec::with_capacity(k + 1);
+        scenarios.push(FaultScenario::nominal());
+        for i in 1..=k as u64 {
+            scenarios.push(FaultScenario::from_seed(
+                seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                dims,
+            ));
+        }
+        Self { scenarios }
+    }
+
+    /// Number of scenarios including nominal.
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    /// True when the suite holds no scenarios at all.
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    /// Fingerprint over every member scenario.
+    pub fn fingerprint(&self) -> u64 {
+        hash64(|h| {
+            self.scenarios.len().hash(h);
+            for s in &self.scenarios {
+                s.fingerprint().hash(h);
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_scenario() {
+        let a = FaultScenario::from_seed(42, 3);
+        let b = FaultScenario::from_seed(42, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = FaultScenario::from_seed(43, 3);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn nominal_is_nominal_everywhere() {
+        let n = FaultScenario::nominal();
+        assert!(n.is_nominal());
+        assert!(n.stragglers.is_nominal());
+        assert!(n.links.is_nominal());
+        assert!(n.failures.is_nominal());
+        assert_eq!(n.links.fingerprint(), 0);
+        assert_eq!(n.stragglers.worst_multiplier(), 1.0);
+    }
+
+    #[test]
+    fn seeded_scenario_factors_in_range() {
+        for seed in 0..50u64 {
+            let s = FaultScenario::from_seed(seed, 4);
+            for &m in &s.stragglers.group_multipliers {
+                assert!((1.0..=1.6).contains(&m), "straggler {m}");
+            }
+            for d in 0..4 {
+                let bw = s.links.bw_factor(d);
+                let lat = s.links.lat_factor(d);
+                assert!((0.4..=1.0).contains(&bw), "bw {bw}");
+                assert!((1.0..=3.0).contains(&lat), "lat {lat}");
+            }
+            assert!(s.failures.device_mtbf_hours >= 5e3 * 0.99);
+            assert!(s.failures.device_mtbf_hours <= 1e5 * 1.01);
+        }
+    }
+
+    #[test]
+    fn scaled_zero_is_nominal_and_one_is_identity() {
+        let s = FaultScenario::from_seed(7, 3);
+        assert!(s.scaled(0.0).is_nominal());
+        let id = s.scaled(1.0);
+        assert_eq!(id.stragglers, s.stragglers);
+        assert_eq!(id.links, s.links);
+        assert_eq!(id.failures, s.failures);
+    }
+
+    #[test]
+    fn suite_starts_nominal_and_is_deterministic() {
+        let a = ScenarioSuite::generate(9, 3, 2);
+        let b = ScenarioSuite::generate(9, 3, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.scenarios[0].is_nominal());
+        assert!(a.scenarios[1..].iter().any(|s| !s.is_nominal()));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), ScenarioSuite::generate(10, 3, 2).fingerprint());
+    }
+
+    #[test]
+    fn link_fingerprint_distinguishes_degradations() {
+        let a = LinkFaults { bandwidth_factor: vec![0.5, 1.0], latency_factor: vec![1.0, 1.0] };
+        let b = LinkFaults { bandwidth_factor: vec![1.0, 0.5], latency_factor: vec![1.0, 1.0] };
+        assert_ne!(a.fingerprint(), 0);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

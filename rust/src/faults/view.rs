@@ -1,0 +1,258 @@
+//! [`FaultView`]: apply a scenario's link degradation underneath any
+//! [`NetworkBackend`] fidelity rung.
+//!
+//! The view rewrites each call's alpha/beta span (latency multiplied
+//! up, bandwidth multiplied down, per spanned dimension) and hands the
+//! inner backend a correspondingly degraded [`Topology`], so both the
+//! Analytical closed forms and the FlowLevel congestion model price the
+//! degraded fabric without knowing faults exist. `cache_tag` folds the
+//! degradation fingerprint over the inner tag, keeping the cross-eval
+//! collective-cost cache scenario-correct.
+
+use super::LinkFaults;
+use crate::collective::SchedulingPolicy;
+use crate::netsim::{CollectiveCall, FidelityMode, NetworkBackend, OverlapCall};
+use crate::obs::TraceSink;
+use crate::topology::{DimCost, Topology};
+use crate::util::hash64;
+use std::hash::Hash;
+use std::sync::Arc;
+
+/// Link-degrading wrapper around an inner backend. Construct via
+/// [`FaultView::wrap`], which skips wrapping entirely for nominal links
+/// (zero cost when nothing is degraded, and maximal cache sharing).
+#[derive(Debug)]
+pub struct FaultView {
+    inner: Arc<dyn NetworkBackend>,
+    links: LinkFaults,
+}
+
+impl FaultView {
+    /// Wrap `inner` under `links`; returns `inner` unchanged when the
+    /// links are nominal.
+    pub fn wrap(inner: Arc<dyn NetworkBackend>, links: &LinkFaults) -> Arc<dyn NetworkBackend> {
+        if links.is_nominal() {
+            inner
+        } else {
+            Arc::new(Self { inner, links: links.clone() })
+        }
+    }
+
+    fn degraded_topology(&self, topo: &Topology) -> Topology {
+        let mut t = topo.clone();
+        for (d, dim) in t.dims.iter_mut().enumerate() {
+            dim.bandwidth_gbps *= self.links.bw_factor(d);
+            dim.latency_us *= self.links.lat_factor(d);
+        }
+        t
+    }
+
+    fn degraded_span(&self, span: &[(DimCost, usize)]) -> Vec<(DimCost, usize)> {
+        span.iter()
+            .map(|&(c, d)| {
+                (
+                    DimCost {
+                        alpha_us: c.alpha_us * self.links.lat_factor(d),
+                        beta_bytes_per_us: c.beta_bytes_per_us * self.links.bw_factor(d),
+                        npus: c.npus,
+                    },
+                    d,
+                )
+            })
+            .collect()
+    }
+
+    /// Degrade a drain's jobs, preserving span identity: jobs sharing
+    /// one healthy span share one degraded span, so inner backends that
+    /// memoize per span pointer (Analytical) keep their hit rate.
+    fn drain_with(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        run: impl FnOnce(&[OverlapCall<'_>]) -> Vec<(u64, f64)>,
+    ) -> Vec<(u64, f64)> {
+        let Some(first) = jobs.first() else {
+            return Vec::new();
+        };
+        let topo = self.degraded_topology(first.call.topology);
+        let mut spans: Vec<(*const (DimCost, usize), Vec<(DimCost, usize)>)> = Vec::new();
+        for j in jobs {
+            let p = j.call.span.as_ptr();
+            if !spans.iter().any(|(q, _)| *q == p) {
+                spans.push((p, self.degraded_span(j.call.span)));
+            }
+        }
+        let degraded: Vec<OverlapCall<'_>> = jobs
+            .iter()
+            .map(|j| {
+                let p = j.call.span.as_ptr();
+                let span = &spans.iter().find(|(q, _)| *q == p).expect("span interned").1;
+                OverlapCall {
+                    layer: j.layer,
+                    issue_us: j.issue_us,
+                    call: CollectiveCall { span, topology: &topo, ..j.call },
+                }
+            })
+            .collect();
+        run(&degraded)
+    }
+}
+
+impl NetworkBackend for FaultView {
+    fn name(&self) -> &'static str {
+        "fault-view"
+    }
+
+    fn fidelity(&self) -> FidelityMode {
+        self.inner.fidelity()
+    }
+
+    fn cache_tag(&self) -> u64 {
+        hash64(|h| {
+            0xFA17_u64.hash(h);
+            self.inner.cache_tag().hash(h);
+            self.links.fingerprint().hash(h);
+        })
+    }
+
+    fn drain_is_serial(&self) -> bool {
+        self.inner.drain_is_serial()
+    }
+
+    fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {
+        let topo = self.degraded_topology(call.topology);
+        let span = self.degraded_span(call.span);
+        self.inner.collective_time_us(&CollectiveCall { span: &span, topology: &topo, ..*call })
+    }
+
+    fn drain_overlapped(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+    ) -> Vec<(u64, f64)> {
+        self.drain_with(jobs, |degraded| self.inner.drain_overlapped(degraded, policy))
+    }
+
+    fn drain_overlapped_traced(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+        sink: &dyn TraceSink,
+    ) -> Vec<(u64, f64)> {
+        self.drain_with(jobs, |degraded| {
+            self.inner.drain_overlapped_traced(degraded, policy, sink)
+        })
+    }
+
+    fn phase_times_us(&self, call: &CollectiveCall<'_>) -> Vec<(usize, f64)> {
+        let topo = self.degraded_topology(call.topology);
+        let span = self.degraded_span(call.span);
+        self.inner.phase_times_us(&CollectiveCall { span: &span, topology: &topo, ..*call })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{CollAlgo, CollectiveKind, MultiDimPolicy};
+    use crate::netsim::{Analytical, FlowLevel};
+    use crate::topology::{DimKind, NetworkDim};
+
+    fn topo() -> Topology {
+        Topology {
+            dims: vec![
+                NetworkDim::new(DimKind::Ring, 4, 200.0, 1.0),
+                NetworkDim::new(DimKind::Switch, 16, 100.0, 2.0),
+            ],
+        }
+    }
+
+    fn span_of(t: &Topology) -> Vec<(DimCost, usize)> {
+        t.dims.iter().enumerate().map(|(d, dim)| (DimCost::from_dim(dim), d)).collect()
+    }
+
+    fn degraded() -> LinkFaults {
+        LinkFaults { bandwidth_factor: vec![0.5, 1.0], latency_factor: vec![1.0, 2.0] }
+    }
+
+    fn call<'a>(
+        span: &'a [(DimCost, usize)],
+        t: &'a Topology,
+        algos: &'a [CollAlgo],
+    ) -> CollectiveCall<'a> {
+        CollectiveCall {
+            kind: CollectiveKind::AllReduce,
+            policy: MultiDimPolicy::Baseline,
+            algos,
+            span,
+            topology: t,
+            bytes: 4.0e6,
+            chunks: 4,
+        }
+    }
+
+    #[test]
+    fn nominal_links_skip_the_wrapper() {
+        let inner: Arc<dyn NetworkBackend> = Arc::new(Analytical);
+        let wrapped = FaultView::wrap(Arc::clone(&inner), &LinkFaults::nominal());
+        assert_eq!(wrapped.cache_tag(), inner.cache_tag());
+        assert_eq!(wrapped.name(), inner.name());
+    }
+
+    #[test]
+    fn degraded_links_never_price_faster() {
+        let t = topo();
+        let span = span_of(&t);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&span, &t, &algos);
+        for inner in [
+            Arc::new(Analytical) as Arc<dyn NetworkBackend>,
+            Arc::new(FlowLevel::default()) as Arc<dyn NetworkBackend>,
+        ] {
+            let healthy = inner.collective_time_us(&c);
+            let view = FaultView::wrap(Arc::clone(&inner), &degraded());
+            let faulted = view.collective_time_us(&c);
+            assert!(
+                faulted >= healthy,
+                "{}: faulted {faulted} < healthy {healthy}",
+                inner.name()
+            );
+        }
+    }
+
+    #[test]
+    fn cache_tag_differs_from_inner_and_tracks_links() {
+        let inner: Arc<dyn NetworkBackend> = Arc::new(Analytical);
+        let a = FaultView::wrap(Arc::clone(&inner), &degraded());
+        let mut other = degraded();
+        other.bandwidth_factor[0] = 0.25;
+        let b = FaultView::wrap(Arc::clone(&inner), &other);
+        assert_ne!(a.cache_tag(), inner.cache_tag());
+        assert_ne!(a.cache_tag(), b.cache_tag());
+    }
+
+    #[test]
+    fn drain_matches_serial_semantics_on_analytical() {
+        let t = topo();
+        let span = span_of(&t);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let view = FaultView::wrap(Arc::new(Analytical), &degraded());
+        let jobs: Vec<OverlapCall<'_>> = (0..3)
+            .map(|i| OverlapCall {
+                layer: i as u64,
+                issue_us: i as f64 * 10.0,
+                call: call(&span, &t, &algos),
+            })
+            .collect();
+        let drained = view.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        assert_eq!(drained.len(), 3);
+        let dur = view.collective_time_us(&jobs[0].call);
+        let tuples: Vec<(u64, f64, f64)> =
+            jobs.iter().map(|j| (j.layer, j.issue_us, dur)).collect();
+        let expect = crate::netsim::serial_drain(&tuples, SchedulingPolicy::Fifo);
+        for (a, b) in drained.iter().zip(expect.iter()) {
+            assert_eq!(a.0, b.0);
+            assert!((a.1 - b.1).abs() < 1e-9);
+        }
+        assert!(view.drain_overlapped(&[], SchedulingPolicy::Fifo).is_empty());
+    }
+}

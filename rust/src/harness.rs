@@ -87,6 +87,30 @@ pub fn make_env_with_fidelity(
     Environment::new(pss, workloads, objective)
 }
 
+/// Like [`make_env`], but robust: the schema gains the resilience
+/// "Checkpoint Interval" knob and every evaluation scores the whole
+/// fault suite (nominal + `k` seeded scenarios from `faults_seed`),
+/// aggregated per `aggregate` — the `cosmic search --robust` setup.
+pub fn make_env_robust(
+    cluster: ClusterConfig,
+    workloads: Vec<WorkloadSpec>,
+    objective: Objective,
+    faults_seed: u64,
+    k: usize,
+    aggregate: crate::dse::RobustAggregate,
+) -> Environment {
+    let npus = cluster.npus();
+    let dims = cluster.topology.num_dims();
+    let baseline = median_baseline_par(&cluster, &workloads[0]);
+    let pss = Pss::new(
+        crate::psa::with_checkpoint_param(paper_table4_schema(npus, dims)),
+        cluster,
+        baseline,
+    );
+    Environment::new(pss, workloads, objective)
+        .with_scenarios(crate::faults::ScenarioSuite::generate(faults_seed, k, dims), aggregate)
+}
+
 /// Outcome of one scoped search, with the quantities the paper reports.
 #[derive(Debug, Clone)]
 pub struct ScopedResult {

@@ -29,6 +29,14 @@
 //!   ([`dse::EvalCache`]) and the staged multi-fidelity search mode
 //!   ([`dse::SearchStrategy::Staged`]: screen analytically, promote the
 //!   running top-K to flow-level re-scoring).
+//! - **Faults** ([`faults`]) — deterministic fault injection: seeded
+//!   [`faults::FaultScenario`]s of compute stragglers, degraded links
+//!   and MTBF device-failure models, applied across the whole stack
+//!   (compute times, collective completion, both netsim fidelity rungs)
+//!   with Young/Daly checkpoint-restart goodput accounting
+//!   ([`sim::SimReport::goodput`]). Robust DSE optimizes expected or
+//!   worst-case goodput over a [`faults::ScenarioSuite`]
+//!   (`Environment::with_scenarios`, `cosmic search --robust`).
 //! - **Runtime** ([`runtime`]) — the PJRT bridge that loads the
 //!   AOT-compiled JAX/Pallas batched cost model and GP surrogate
 //!   (`artifacts/*.hlo.txt`) plus a bit-equivalent pure-Rust fallback.
@@ -65,6 +73,7 @@ pub mod agents;
 pub mod collective;
 pub mod compute;
 pub mod dse;
+pub mod faults;
 pub mod harness;
 pub mod netsim;
 pub mod obs;
@@ -83,8 +92,10 @@ pub mod prelude {
     };
     pub use crate::compute::ComputeDevice;
     pub use crate::dse::{
-        DseConfig, DseRunner, Environment, EvalCache, Objective, SearchStrategy, WorkloadSpec,
+        DseConfig, DseRunner, Environment, EvalCache, Objective, RobustAggregate, SearchStrategy,
+        WorkloadSpec,
     };
+    pub use crate::faults::{FaultScenario, Goodput, ScenarioSuite};
     pub use crate::netsim::{FidelityMode, FlowLevelConfig, NetworkBackend};
     pub use crate::obs::{MetricsRegistry, Recorder, SearchObserver, TraceSink};
     pub use crate::psa::{DesignPoint, ParamDef, Schema, Stack};

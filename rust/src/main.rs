@@ -14,10 +14,15 @@
 //! DESIGN.md §Substitutions).
 
 use cosmic::agents::AgentKind;
-use cosmic::dse::{DseConfig, DseRunner, Environment, Objective, SearchStrategy, WorkloadSpec};
+use cosmic::dse::{
+    DseConfig, DseRunner, Environment, Objective, RobustAggregate, SearchStrategy, WorkloadSpec,
+};
+use cosmic::faults::{FaultScenario, ScenarioSuite};
 use cosmic::netsim::FidelityMode;
 use cosmic::obs::{Recorder, SearchObserver};
-use cosmic::psa::{design_space_size, paper_table4_schema, space::exhaustive_search_years};
+use cosmic::psa::{
+    design_space_size, paper_table4_schema, space::exhaustive_search_years, with_checkpoint_param,
+};
 use cosmic::pss::{Pss, SearchScope};
 use cosmic::sim::{presets, Simulator};
 use cosmic::workload::models::presets as models;
@@ -63,10 +68,12 @@ USAGE:
   cosmic simulate [--system 1|2|3] [--model NAME] [--batch N]
                   [--dp N --sp N --pp N --shard 0|1] [--layers N] [--mode train|prefill|decode]
                   [--fidelity analytical|flow] [--trace FILE.json]
+                  [--faults SEED] [--ckpt ITERS]
   cosmic search   [--system 1|2|3] [--model NAME] [--batch N] [--agent RW|GA|ACO|BO]
                   [--scope full|workload|collective|network] [--steps N] [--seed N]
                   [--objective bw|cost|latency] [--strategy genome|analytical|flow|staged]
                   [--promote K] [--cache-cap N] [--progress N] [--telemetry FILE.json]
+                  [--robust expected|worst] [--scenarios K] [--faults-seed N]
   cosmic space    [--npus N] [--dims N]
   cosmic validate-json FILE...
   cosmic runtime
@@ -140,6 +147,25 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     if let Some(rec) = &recorder {
         sim = sim.with_trace_sink(Arc::clone(rec));
     }
+    if let Some(v) = opts.get("faults") {
+        let seed: u64 = v.parse().map_err(|_| format!("--faults needs a seed, got '{v}'"))?;
+        let scenario = FaultScenario::from_seed(seed, cluster.topology.num_dims());
+        let degraded_dims = (0..cluster.topology.num_dims())
+            .filter(|&d| scenario.links.bw_factor(d) < 1.0 || scenario.links.lat_factor(d) > 1.0)
+            .count();
+        println!(
+            "faults: {} (straggler x{:.2}, {} degraded dims, MTBF/device {:.0} h)",
+            scenario.name,
+            scenario.stragglers.worst_multiplier(),
+            degraded_dims,
+            scenario.failures.device_mtbf_hours
+        );
+        sim = sim.with_faults(Arc::new(scenario));
+    }
+    if let Some(v) = opts.get("ckpt") {
+        let iters: u64 = v.parse().map_err(|_| format!("--ckpt needs iterations, got '{v}'"))?;
+        sim = sim.with_checkpoint_interval(Some(iters));
+    }
     println!("system: {} ({} NPUs)", cluster.topology, cluster.npus());
     println!("model:  {} (simulating {} layers)", model.name, model.simulated_layers);
     println!("par:    {par}");
@@ -152,6 +178,12 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
             println!("memory/NPU:     {:>12.3} GB", r.memory.total() / 1e9);
             println!("microbatches:   {:>12}", r.microbatches);
             println!("cluster TFLOPs: {:>12.1}", r.achieved_tflops);
+            if let Some(g) = &r.goodput {
+                println!("ckpt interval:  {:>12.1} s", g.checkpoint_interval_s);
+                println!("cluster MTBF:   {:>12.1} s", g.cluster_mtbf_s);
+                println!("efficiency:     {:>12.4}", g.efficiency);
+                println!("goodput TFLOPs: {:>12.1}", g.goodput_tflops);
+            }
             if let (Some(rec), Some(path)) = (&recorder, opts.get("trace")) {
                 let json = cosmic::obs::chrome_trace_json(&rec.spans());
                 cosmic::util::json::validate(&json)
@@ -192,11 +224,31 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         s => return Err(format!("unknown strategy '{s}'")),
     };
 
+    let robust = opts
+        .get("robust")
+        .map(|v| {
+            RobustAggregate::from_name(v)
+                .ok_or_else(|| format!("unknown robust aggregate '{v}' (expected|worst)"))
+        })
+        .transpose()?;
+    let scenarios = opt_u64(opts, "scenarios", 4) as usize;
+    let faults_seed = opt_u64(opts, "faults-seed", 7);
+
     let npus = cluster.npus();
+    let dims = cluster.topology.num_dims();
     let baseline_par = Parallelization::derive(npus, npus.min(64), 1, 1, true)?;
-    let pss =
-        Pss::new(paper_table4_schema(npus, cluster.topology.num_dims()), cluster, baseline_par);
+    // Robust searches co-optimize the checkpoint interval, so the knob
+    // joins the action space alongside the paper's Table 4 parameters.
+    let schema = if robust.is_some() {
+        with_checkpoint_param(paper_table4_schema(npus, dims))
+    } else {
+        paper_table4_schema(npus, dims)
+    };
+    let pss = Pss::new(schema, cluster, baseline_par);
     let mut env = Environment::new(pss, vec![WorkloadSpec::training(model, batch)], objective);
+    if let Some(aggregate) = robust {
+        env = env.with_scenarios(ScenarioSuite::generate(faults_seed, scenarios, dims), aggregate);
+    }
     let cache_cap = opt_u64(opts, "cache-cap", 0) as usize;
     if cache_cap > 0 {
         env = env.with_eval_cache_capacity(cache_cap, cache_cap);
@@ -212,6 +264,12 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         scope.name(),
         objective.name()
     );
+    if let Some(aggregate) = robust {
+        println!(
+            "robust: aggregate={} suite=nominal+{scenarios} faults-seed={faults_seed}",
+            aggregate.name()
+        );
+    }
     let started = std::time::Instant::now();
     let mut runner =
         DseRunner::new(DseConfig::new(agent, steps, seed), scope).with_strategy(strategy);
@@ -275,6 +333,29 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
             best_cluster.collectives.multidim.name()
         );
         println!("  workload:   {best_par}");
+        if robust.is_some() {
+            match env.evaluate_suite(&result.best_genome, None) {
+                Ok(suite) => {
+                    println!("scenario breakdown of the best design:");
+                    println!(
+                        "  {:<12} {:>12} {:>8} {:>12} {:>14}",
+                        "scenario", "latency ms", "eff", "goodput TF", "reward"
+                    );
+                    for s in &suite.scores {
+                        println!(
+                            "  {:<12} {:>12.3} {:>8.4} {:>12.1} {:>14.6e}",
+                            s.scenario,
+                            s.latency_us / 1e3,
+                            s.efficiency,
+                            s.goodput_tflops,
+                            s.reward
+                        );
+                    }
+                    println!("  {} reward: {:.6e}", suite.aggregate.name(), suite.reward);
+                }
+                Err(e) => println!("scenario breakdown unavailable: {e}"),
+            }
+        }
     }
     Ok(())
 }

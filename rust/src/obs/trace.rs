@@ -37,6 +37,9 @@ pub mod tracks {
     pub const SIM_PID: u32 = 1;
     /// Network-side process: drain admissions and per-dimension flows.
     pub const NET_PID: u32 = 2;
+    /// Fault-injection process: active scenario elements (stragglers,
+    /// degraded links, failure model) as iteration-wide spans.
+    pub const FAULT_PID: u32 = 3;
 
     /// Iteration window and per-microbatch pipeline slots.
     pub const PIPELINE: Track = Track { pid: SIM_PID, tid: 1 };
@@ -48,6 +51,8 @@ pub mod tracks {
     pub const GRAD_SYNC: Track = Track { pid: SIM_PID, tid: 4 };
     /// Serialized (analytical) gradient drain: one busy span per job.
     pub const SERIAL_DRAIN: Track = Track { pid: NET_PID, tid: 1 };
+    /// Active fault-scenario elements (see [`crate::faults`]).
+    pub const FAULTS: Track = Track { pid: FAULT_PID, tid: 1 };
     /// First tid of the per-topology-dimension flow tracks.
     pub const NET_DIM_BASE: u32 = 16;
 
@@ -61,6 +66,7 @@ pub mod tracks {
         match pid {
             SIM_PID => "simulator",
             NET_PID => "network",
+            FAULT_PID => "faults",
             _ => "cosmic",
         }
     }
@@ -73,6 +79,7 @@ pub mod tracks {
             (SIM_PID, 3) => "bwd ops (last microbatch)".to_string(),
             (SIM_PID, 4) => "gradient sync".to_string(),
             (NET_PID, 1) => "serial drain".to_string(),
+            (FAULT_PID, 1) => "fault injection".to_string(),
             (NET_PID, t) if t >= NET_DIM_BASE => format!("net dim {}", t - NET_DIM_BASE),
             (_, t) => format!("track {t}"),
         }

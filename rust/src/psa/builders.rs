@@ -18,6 +18,9 @@ pub mod names {
     pub const BW_PER_DIM: &str = "Bandwidth per Dim";
     /// The netsim fidelity knob (optional; see [`super::with_fidelity_param`]).
     pub const NET_FIDELITY: &str = "Network Fidelity";
+    /// The resilience checkpoint-interval knob, in iterations between
+    /// checkpoints (optional; see [`super::with_checkpoint_param`]).
+    pub const CKPT_INTERVAL: &str = "Checkpoint Interval";
 }
 
 /// Append the netsim "Network Fidelity" knob ({Analytical, FlowLevel})
@@ -31,6 +34,24 @@ pub fn with_fidelity_param(mut schema: Schema) -> Schema {
         names::NET_FIDELITY,
         Stack::Network,
         Domain::cats(&["Analytical", "FlowLevel"]),
+    ));
+    schema
+}
+
+/// Append the resilience "Checkpoint Interval" knob (iterations between
+/// checkpoints, powers of two) to any schema. Like the fidelity knob it
+/// is opt-in — the paper's Table 1/4 schemas ship without it. Under a
+/// fault suite (`cosmic search --robust`, or
+/// `Environment::with_scenarios`) the PSS resolves the knob into the
+/// goodput model: short intervals burn time writing checkpoints, long
+/// ones lose more work per failure, and the Young/Daly optimum depends
+/// on the scenario's MTBF — so the best setting co-varies with every
+/// other stack and is worth searching.
+pub fn with_checkpoint_param(mut schema: Schema) -> Schema {
+    schema.params.push(ParamDef::scalar(
+        names::CKPT_INTERVAL,
+        Stack::Workload,
+        Domain::Ints(vec![8, 16, 32, 64, 128, 256, 512, 1024]),
     ));
     schema
 }
@@ -212,5 +233,19 @@ mod tests {
         assert_eq!(p.domain.cardinality(), 2);
         // The paper schemas stay untouched.
         assert!(base.param(names::NET_FIDELITY).is_none());
+    }
+
+    #[test]
+    fn checkpoint_param_appends_one_workload_slot() {
+        let base = paper_table4_schema(1024, 4);
+        let with = with_checkpoint_param(paper_table4_schema(1024, 4));
+        assert_eq!(with.genome_len(), base.genome_len() + 1);
+        let p = with.param(names::CKPT_INTERVAL).expect("checkpoint knob present");
+        assert_eq!(p.stack, Stack::Workload);
+        assert_eq!(p.domain.cardinality(), 8);
+        assert!(base.param(names::CKPT_INTERVAL).is_none());
+        // Knobs compose: fidelity + checkpoint together.
+        let both = with_checkpoint_param(with_fidelity_param(paper_table4_schema(1024, 4)));
+        assert_eq!(both.genome_len(), base.genome_len() + 2);
     }
 }

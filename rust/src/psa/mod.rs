@@ -21,7 +21,9 @@
 pub mod builders;
 pub mod space;
 
-pub use builders::{paper_table1_schema, paper_table4_schema, with_fidelity_param};
+pub use builders::{
+    paper_table1_schema, paper_table4_schema, with_checkpoint_param, with_fidelity_param,
+};
 pub use space::{design_space_size, DesignSpace};
 
 use std::collections::HashMap;

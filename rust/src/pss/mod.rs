@@ -220,6 +220,14 @@ impl Pss {
             _ => FidelityMode::Analytical,
         }
     }
+
+    /// The checkpoint interval (iterations) a design point asks for,
+    /// `None` when the schema lacks the optional "Checkpoint Interval"
+    /// knob (see [`crate::psa::with_checkpoint_param`]) — goodput
+    /// accounting then uses the scenario's Young/Daly optimum.
+    pub fn checkpoint_interval_of(&self, point: &DesignPoint) -> Option<u64> {
+        point.get(names::CKPT_INTERVAL).and_then(|v| v.as_int()).map(|v| v.max(1) as u64)
+    }
 }
 
 /// Index of the closest value in an integer domain.
@@ -344,6 +352,31 @@ mod tests {
         let bare = pss();
         let bp = bare.schema.decode_valid(&bare.baseline_genome()).unwrap();
         assert_eq!(bare.fidelity_of(&bp), FidelityMode::Analytical);
+    }
+
+    #[test]
+    fn checkpoint_knob_resolves_and_defaults_to_none() {
+        use crate::psa::with_checkpoint_param;
+        let cluster = presets::system2();
+        let par = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+        let p = Pss::new(with_checkpoint_param(paper_table4_schema(1024, 4)), cluster, par);
+        let g = p.baseline_genome();
+        assert_eq!(g.len(), p.schema.genome_len());
+        let point = p.schema.decode_valid(&g).unwrap();
+        // Baseline slot 0 = 8 iterations.
+        assert_eq!(p.checkpoint_interval_of(&point), Some(8));
+        let mut g2 = g.clone();
+        *g2.last_mut().unwrap() = 4;
+        let point2 = p.schema.decode_valid(&g2).unwrap();
+        assert_eq!(p.checkpoint_interval_of(&point2), Some(128));
+        // Materialization ignores the knob (same cluster either way).
+        let (c1, _) = p.materialize(&point).unwrap();
+        let (c2, _) = p.materialize(&point2).unwrap();
+        assert_eq!(c1.topology, c2.topology);
+        // Schemas without the knob resolve to None (Young/Daly default).
+        let bare = pss();
+        let bp = bare.schema.decode_valid(&bare.baseline_genome()).unwrap();
+        assert_eq!(bare.checkpoint_interval_of(&bp), None);
     }
 
     #[test]

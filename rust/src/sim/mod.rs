@@ -31,6 +31,7 @@ pub use crate::netsim::EventQueue;
 
 use crate::collective::{CollAlgo, CollectiveConfig, CollectiveKind, MultiDimPolicy};
 use crate::compute::{ComputeDevice, MEM_LIMIT_BYTES};
+use crate::faults::{goodput_of, FaultScenario, FaultView, Goodput};
 use crate::netsim::backend::collapse_per_layer;
 use crate::netsim::{
     serial_drain, serial_drain_detailed, Analytical, CollectiveCall, FidelityMode, FlowLevel,
@@ -71,6 +72,13 @@ pub struct CollKey {
     /// Per-NPU payload bytes, exact bit pattern.
     pub bytes: u64,
     pub chunks: u32,
+    /// Fault-scenario link-degradation fingerprint
+    /// ([`crate::faults::LinkFaults::fingerprint`]); `0` on fault-free
+    /// runs *and* under nominal-link scenarios, so those share entries.
+    /// Belt-and-suspenders with the [`FaultView`] `cache_tag` (which
+    /// already flows into `backend`): fault-scenario evaluations can
+    /// never alias nominal ones even if a backend tag collides.
+    pub scenario: u64,
 }
 
 /// The collective-cost memo consulted by [`Simulator::price`]: `cost_us`
@@ -156,6 +164,12 @@ pub struct SimReport {
     pub microbatches: u64,
     /// Cluster-wide achieved TFLOP/s (all NPUs).
     pub achieved_tflops: f64,
+    /// Resilience accounting (throughput net of lost work + checkpoint
+    /// overhead). `None` on fault-free runs — the pre-fault pipeline is
+    /// bit-identical — and `Some` whenever a
+    /// [`crate::faults::FaultScenario`] is attached, even the nominal
+    /// one (where efficiency is exactly `1.0`).
+    pub goodput: Option<Goodput>,
 }
 
 impl SimReport {
@@ -175,19 +189,33 @@ impl SimReport {
 pub struct Simulator {
     /// Per-NPU memory budget in bytes (paper: 24 GB).
     pub mem_budget_bytes: f64,
-    /// The network model (see [`crate::netsim`]); analytical by default.
+    /// The *effective* network model: `base_backend`, wrapped in a
+    /// [`FaultView`] when the active scenario degrades links.
     backend: Arc<dyn NetworkBackend>,
+    /// The configured backend before fault wrapping (what
+    /// [`Simulator::with_backend`] set); analytical by default.
+    base_backend: Arc<dyn NetworkBackend>,
     /// Span consumer (see [`crate::obs`]); the disabled [`NoopSink`] by
     /// default, so pricing takes the identical code path.
     sink: Arc<dyn TraceSink>,
+    /// Active fault scenario; `None` = fault-free (reports carry no
+    /// goodput and price bit-identically to the pre-fault pipeline).
+    faults: Option<Arc<FaultScenario>>,
+    /// Checkpoint interval in iterations for goodput accounting;
+    /// `None` = the scenario's Young/Daly optimum.
+    ckpt_interval_iters: Option<u64>,
 }
 
 impl Default for Simulator {
     fn default() -> Self {
+        let backend: Arc<dyn NetworkBackend> = Arc::new(Analytical);
         Self {
             mem_budget_bytes: MEM_LIMIT_BYTES,
-            backend: Arc::new(Analytical),
+            backend: Arc::clone(&backend),
+            base_backend: backend,
             sink: Arc::new(NoopSink),
+            faults: None,
+            ckpt_interval_iters: None,
         }
     }
 }
@@ -197,10 +225,50 @@ impl Simulator {
         Self::default()
     }
 
+    /// Recompute the effective backend after the base backend or the
+    /// fault scenario changed — builders compose in any order.
+    fn refresh_backend(&mut self) {
+        self.backend = match &self.faults {
+            Some(f) => FaultView::wrap(Arc::clone(&self.base_backend), &f.links),
+            None => Arc::clone(&self.base_backend),
+        };
+    }
+
     /// Swap the network backend (builder style).
     pub fn with_backend(mut self, backend: Arc<dyn NetworkBackend>) -> Self {
-        self.backend = backend;
+        self.base_backend = backend;
+        self.refresh_backend();
         self
+    }
+
+    /// Attach a fault scenario: compute phases stretch by the straggler
+    /// factor, the network prices through a link-degrading
+    /// [`FaultView`], and reports gain a [`Goodput`] record. The
+    /// nominal scenario reproduces the fault-free report bit for bit
+    /// (modulo the attached goodput, whose efficiency is exactly 1).
+    pub fn with_faults(mut self, scenario: Arc<FaultScenario>) -> Self {
+        self.faults = Some(scenario);
+        self.refresh_backend();
+        self
+    }
+
+    /// Detach any fault scenario (back to the fault-free fast path).
+    pub fn without_faults(mut self) -> Self {
+        self.faults = None;
+        self.refresh_backend();
+        self
+    }
+
+    /// Force the checkpoint interval (iterations) used by goodput
+    /// accounting; `None` restores the Young/Daly optimum.
+    pub fn with_checkpoint_interval(mut self, iters: Option<u64>) -> Self {
+        self.ckpt_interval_iters = iters;
+        self
+    }
+
+    /// The active fault scenario, if any.
+    pub fn faults(&self) -> Option<&FaultScenario> {
+        self.faults.as_deref()
     }
 
     /// Select a fidelity rung with its default backend configuration.
@@ -394,9 +462,18 @@ impl Simulator {
         let stage = &trace.stages[0];
         let tracing = self.sink.enabled();
 
+        // Lockstep SPMD: every collective waits for its slowest
+        // participant, so per-group straggler multipliers collapse to
+        // the max (see `collective::straggler_factor`). 1.0 on the
+        // fault-free path — and `x * 1.0` is exact in IEEE 754, so the
+        // scaling below preserves bit-identity when no faults are set.
+        let straggler =
+            self.faults.as_ref().map(|f| f.stragglers.worst_multiplier()).unwrap_or(1.0);
+
         let backend_fp = self.backend.cache_tag();
         let topo_fp = cluster.topology.fingerprint();
         let algos_fp = algos_fingerprint(&cluster.collectives.algorithms);
+        let scenario_fp = self.faults.as_ref().map(|f| f.links.fingerprint()).unwrap_or(0);
         let mut coll_cost = |kind: CollectiveKind, group: CommGroup, bytes: f64| -> f64 {
             let (stride, size) = Self::group_stride_size(par, group);
             let key = CollKey {
@@ -409,6 +486,7 @@ impl Simulator {
                 size,
                 bytes: bytes.to_bits(),
                 chunks: cluster.collectives.chunks,
+                scenario: scenario_fp,
             };
             memo.cost_us(&key, &mut || self.collective_cost_us(cluster, par, kind, group, bytes))
         };
@@ -421,7 +499,7 @@ impl Simulator {
         for op in &stage.forward {
             match op {
                 TraceOp::Compute { flops, bytes, .. } => {
-                    f_compute += cluster.compute.op_time_us(*flops, *bytes);
+                    f_compute += cluster.compute.op_time_us(*flops, *bytes) * straggler;
                     flops_per_micro += *flops;
                 }
                 TraceOp::Collective { kind, group, bytes, overlappable: false, .. } => {
@@ -437,7 +515,7 @@ impl Simulator {
         for op in &stage.backward {
             match op {
                 TraceOp::Compute { flops, bytes, .. } => {
-                    b_compute += cluster.compute.op_time_us(*flops, *bytes);
+                    b_compute += cluster.compute.op_time_us(*flops, *bytes) * straggler;
                     flops_per_micro += *flops;
                 }
                 TraceOp::Collective { kind, group, bytes, overlappable, layer } => {
@@ -585,6 +663,47 @@ impl Simulator {
             if exposed_us > 0.0 {
                 self.sink.span(tracks::PIPELINE, "exposed grad tail", pipeline_us, iter_end);
             }
+            // Active fault-scenario elements, one span each over the
+            // iteration window. The nominal scenario (and the
+            // fault-free path) emits none, keeping traced output
+            // aligned with the plain pipeline.
+            if let Some(f) = &self.faults {
+                for (g, mult) in f.stragglers.group_multipliers.iter().enumerate() {
+                    if *mult > 1.0 {
+                        self.sink.span(
+                            tracks::FAULTS,
+                            &format!("straggler group {g} x{mult:.2}"),
+                            0.0,
+                            iter_end,
+                        );
+                    }
+                }
+                for d in 0..f.links.bandwidth_factor.len().max(f.links.latency_factor.len()) {
+                    let bw = f.links.bw_factor(d);
+                    let lat = f.links.lat_factor(d);
+                    if bw < 1.0 || lat > 1.0 {
+                        self.sink.span(
+                            tracks::FAULTS,
+                            &format!("degraded link dim{d} bw x{bw:.2} lat x{lat:.2}"),
+                            0.0,
+                            iter_end,
+                        );
+                    }
+                }
+                if f.failures.device_mtbf_hours.is_finite() {
+                    self.sink.span(
+                        tracks::FAULTS,
+                        &format!(
+                            "failures: mtbf/device {:.0} h, ckpt {:.0} s, restart {:.0} s",
+                            f.failures.device_mtbf_hours,
+                            f.failures.checkpoint_write_s,
+                            f.failures.restart_s
+                        ),
+                        0.0,
+                        iter_end,
+                    );
+                }
+            }
             // 1F1B pipeline slots, capped so a huge microbatch count
             // cannot blow up the trace file.
             let slots = ((m + pp - 1.0) as u64).min(256);
@@ -606,7 +725,7 @@ impl Simulator {
             for op in &stage.forward {
                 match op {
                     TraceOp::Compute { name, flops, bytes } => {
-                        let d = cluster.compute.op_time_us(*flops, *bytes);
+                        let d = cluster.compute.op_time_us(*flops, *bytes) * straggler;
                         self.sink.span(tracks::FWD_OPS, &format!("fwd {name}"), tf, tf + d);
                         tf += d;
                     }
@@ -631,7 +750,7 @@ impl Simulator {
                 for op in &stage.backward {
                     match op {
                         TraceOp::Compute { name, flops, bytes } => {
-                            let d = cluster.compute.op_time_us(*flops, *bytes);
+                            let d = cluster.compute.op_time_us(*flops, *bytes) * straggler;
                             self.sink.span(tracks::BWD_OPS, &format!("bwd {name}"), tb, tb + d);
                             tb += d;
                         }
@@ -668,6 +787,19 @@ impl Simulator {
         let achieved_tflops =
             if latency_us > 0.0 { total_flops / (latency_us * 1e6) } else { 0.0 };
 
+        // Resilience accounting: only when a scenario is attached, so
+        // fault-free reports stay bit-identical to the pre-fault
+        // pipeline (goodput = None and no other field is touched).
+        let goodput = self.faults.as_ref().map(|f| {
+            goodput_of(
+                latency_us / 1e6,
+                achieved_tflops,
+                cluster.npus(),
+                &f.failures,
+                self.ckpt_interval_iters,
+            )
+        });
+
         SimReport {
             latency_us,
             compute_us,
@@ -676,6 +808,7 @@ impl Simulator {
             memory: mem,
             microbatches: trace.microbatches,
             achieved_tflops,
+            goodput,
         }
     }
 }
@@ -946,5 +1079,110 @@ mod tests {
         let a = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
         let b = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nominal_scenario_is_bit_identical_to_fault_free() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 2, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let plain = Simulator::new().run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        assert!(plain.goodput.is_none());
+        let nominal = Simulator::new()
+            .with_faults(Arc::new(FaultScenario::nominal()))
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        let g = nominal.goodput.expect("scenario attached => goodput attached");
+        assert_eq!(g.efficiency, 1.0);
+        assert_eq!(g.goodput_tflops, nominal.achieved_tflops);
+        let mut stripped = nominal.clone();
+        stripped.goodput = None;
+        assert_eq!(plain, stripped, "nominal scenario must price bit-identically");
+    }
+
+    #[test]
+    fn faults_never_speed_up_either_rung() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let scenario = Arc::new(FaultScenario::from_seed(3, c.topology.num_dims()));
+        for mode in [
+            crate::netsim::FidelityMode::Analytical,
+            crate::netsim::FidelityMode::FlowLevel,
+        ] {
+            let plain = Simulator::new()
+                .with_fidelity(mode)
+                .run(&c, &m, &p, 128, ExecutionMode::Training)
+                .unwrap();
+            let faulted = Simulator::new()
+                .with_fidelity(mode)
+                .with_faults(Arc::clone(&scenario))
+                .run(&c, &m, &p, 128, ExecutionMode::Training)
+                .unwrap();
+            assert!(
+                faulted.latency_us >= plain.latency_us - 1e-9,
+                "{mode:?}: faulted {} < plain {}",
+                faulted.latency_us,
+                plain.latency_us
+            );
+            let g = faulted.goodput.unwrap();
+            assert!(g.efficiency > 0.0 && g.efficiency < 1.0);
+            assert!(g.goodput_tflops < faulted.achieved_tflops);
+        }
+    }
+
+    #[test]
+    fn builder_order_does_not_matter_for_faults() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let scenario = Arc::new(FaultScenario::from_seed(11, c.topology.num_dims()));
+        let a = Simulator::new()
+            .with_faults(Arc::clone(&scenario))
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        let b = Simulator::new()
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .with_faults(Arc::clone(&scenario))
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        assert_eq!(a, b);
+        // ...and detaching restores the fault-free report exactly.
+        let plain = Simulator::new()
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        let detached = Simulator::new()
+            .with_faults(scenario)
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .without_faults()
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        assert_eq!(plain, detached);
+    }
+
+    #[test]
+    fn shared_memo_isolates_fault_scenarios() {
+        // One memo shared across fault-free, nominal-scenario and
+        // degraded-scenario pricing must reproduce each independent
+        // result — the scenario fingerprint keys the collective costs.
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let sims = [
+            Simulator::new(),
+            Simulator::new().with_faults(Arc::new(FaultScenario::nominal())),
+            Simulator::new().with_faults(Arc::new(FaultScenario::from_seed(3, 2))),
+            Simulator::new().with_faults(Arc::new(FaultScenario::from_seed(5, 2))),
+        ];
+        let mut memo = LocalCollMemo::default();
+        for sim in &sims {
+            let fresh = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+            let mem = sim.preflight(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+            let trace = generate_trace(&m, &p, 128, ExecutionMode::Training).unwrap();
+            let shared = sim.price(&c, &p, &trace, mem, ExecutionMode::Training, &mut memo);
+            assert_eq!(fresh, shared, "memo leaked across fault scenarios");
+        }
     }
 }

@@ -11,7 +11,7 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 
-pub use par::parallel_map;
+pub use par::{parallel_map, parallel_map_catch};
 pub use rng::Rng;
 
 /// Fold a stream of `Hash`ed fields into a stable 64-bit fingerprint —

@@ -3,53 +3,94 @@
 //! so the closure may borrow the caller's environment; work is pulled
 //! from a shared atomic index, which balances the uneven per-item cost
 //! of simulator evaluations.
+//!
+//! Panics are isolated per item: [`parallel_map_catch`] runs each call
+//! under `catch_unwind`, so one poisoned evaluation surfaces as an
+//! `Err` for its own slot instead of aborting the whole batch (the DSE
+//! maps those to invalid outcomes and counts them — see
+//! `Environment::eval_panics`). [`parallel_map`] keeps the original
+//! propagate-the-panic contract on top of it.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Render a `catch_unwind` payload as the panic message.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Map `f` over `items` on up to `available_parallelism` threads,
-/// preserving order. Falls back to a plain serial map for tiny inputs.
-/// Panics in `f` propagate to the caller.
-pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+/// preserving order, with per-item panic isolation: a panic in `f(x)`
+/// yields `Err(message)` in `x`'s slot while every other item completes
+/// normally.
+pub fn parallel_map_catch<T, U, F>(items: &[T], f: F) -> Vec<Result<U, String>>
 where
     T: Sync,
     U: Send,
     F: Fn(&T) -> U + Sync,
 {
+    let run = |t: &T| catch_unwind(AssertUnwindSafe(|| f(t))).map_err(panic_message);
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
         .min(items.len());
     if threads <= 1 {
-        return items.iter().map(|t| f(t)).collect();
+        return items.iter().map(run).collect();
     }
     let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<U>> = Vec::with_capacity(items.len());
+    let mut out: Vec<Option<Result<U, String>>> = Vec::with_capacity(items.len());
     out.resize_with(items.len(), || None);
     std::thread::scope(|s| {
         let next = &next;
-        let f = &f;
+        let run = &run;
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 s.spawn(move || {
-                    let mut local: Vec<(usize, U)> = Vec::new();
+                    let mut local: Vec<(usize, Result<U, String>)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= items.len() {
                             break;
                         }
-                        local.push((i, f(&items[i])));
+                        local.push((i, run(&items[i])));
                     }
                     local
                 })
             })
             .collect();
         for h in handles {
-            for (i, u) in h.join().expect("parallel_map worker panicked") {
+            // Workers never unwind (every item runs under catch_unwind),
+            // so a join failure is a bug, not a user panic.
+            for (i, u) in h.join().expect("parallel_map worker died") {
                 out[i] = Some(u);
             }
         }
     });
     out.into_iter().map(|o| o.expect("parallel_map missed a slot")).collect()
+}
+
+/// Map `f` over `items` on up to `available_parallelism` threads,
+/// preserving order. Falls back to a plain serial map for tiny inputs.
+/// Panics in `f` propagate to the caller (first panicking index wins).
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    parallel_map_catch(items, f)
+        .into_iter()
+        .map(|r| match r {
+            Ok(u) => u,
+            Err(msg) => panic!("parallel_map worker panicked: {msg}"),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -75,5 +116,45 @@ mod tests {
         let offset = 10u64;
         let out = parallel_map(&[1u64, 2, 3], |&x| x + offset);
         assert_eq!(out, vec![11, 12, 13]);
+    }
+
+    #[test]
+    fn catch_isolates_panicking_items() {
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map_catch(&items, |&x| {
+            if x % 10 == 3 {
+                panic!("boom at {x}");
+            }
+            x * 2
+        });
+        assert_eq!(out.len(), items.len());
+        for (i, r) in out.iter().enumerate() {
+            if i % 10 == 3 {
+                let msg = r.as_ref().unwrap_err();
+                assert!(msg.contains(&format!("boom at {i}")), "got {msg}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as u64 * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn catch_serial_path_isolates_too() {
+        // Single-item input takes the serial fallback.
+        let out = parallel_map_catch(&[7u64], |_| -> u64 { panic!("solo") });
+        assert_eq!(out.len(), 1);
+        assert!(out[0].as_ref().unwrap_err().contains("solo"));
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel_map worker panicked")]
+    fn plain_map_still_propagates() {
+        let items: Vec<u64> = (0..8).collect();
+        let _ = parallel_map(&items, |&x| {
+            if x == 5 {
+                panic!("die");
+            }
+            x
+        });
     }
 }

@@ -1,0 +1,184 @@
+//! End-to-end tests of the fault-injection subsystem and the
+//! resilience-aware DSE: seed determinism, nominal/fault-free
+//! bit-identity, goodput monotonicity along severity ladders (via the
+//! in-crate `util::prop` harness), fault spans in the trace timeline,
+//! and a robust search driven through the public API.
+
+use cosmic::agents::AgentKind;
+use cosmic::dse::{DseConfig, DseRunner, Objective, RobustAggregate, WorkloadSpec};
+use cosmic::faults::{FaultScenario, ScenarioSuite};
+use cosmic::harness::make_env_robust;
+use cosmic::obs::{tracks, Recorder};
+use cosmic::pss::SearchScope;
+use cosmic::sim::{presets, ClusterConfig, SimReport, Simulator};
+use cosmic::util::prop::check;
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, ModelConfig, Parallelization};
+use std::sync::Arc;
+
+fn setup() -> (ClusterConfig, ModelConfig, Parallelization) {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).unwrap();
+    (cluster, model, par)
+}
+
+fn run_with(
+    cluster: &ClusterConfig,
+    model: &ModelConfig,
+    par: &Parallelization,
+    scenario: Option<FaultScenario>,
+) -> SimReport {
+    let mut sim = Simulator::new();
+    if let Some(s) = scenario {
+        sim = sim.with_faults(Arc::new(s));
+    }
+    sim.run(cluster, model, par, 1024, ExecutionMode::Training).unwrap()
+}
+
+#[test]
+fn prop_equal_seeds_reproduce_bit_identical_reports() {
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    check("fault seed determinism", 16, |rng| {
+        let seed = rng.next_u64() % 1000;
+        let a = FaultScenario::from_seed(seed, dims);
+        let b = FaultScenario::from_seed(seed, dims);
+        if a != b {
+            return Err(format!("seed {seed}: scenarios differ"));
+        }
+        if a.fingerprint() != b.fingerprint() {
+            return Err(format!("seed {seed}: fingerprints differ"));
+        }
+        let ra = run_with(&cluster, &model, &par, Some(a));
+        let rb = run_with(&cluster, &model, &par, Some(b));
+        if ra.latency_us.to_bits() != rb.latency_us.to_bits() {
+            return Err(format!("seed {seed}: latency not bit-identical"));
+        }
+        let (ga, gb) = (ra.goodput.unwrap(), rb.goodput.unwrap());
+        if ga.goodput_tflops.to_bits() != gb.goodput_tflops.to_bits() {
+            return Err(format!("seed {seed}: goodput not bit-identical"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nominal_scenario_matches_fault_free_bit_for_bit() {
+    let (cluster, model, par) = setup();
+    let plain = run_with(&cluster, &model, &par, None);
+    let faulted = run_with(&cluster, &model, &par, Some(FaultScenario::nominal()));
+    assert!(plain.goodput.is_none(), "fault-free runs must not grow a goodput record");
+    let g = faulted.goodput.expect("nominal scenario still reports goodput");
+    assert_eq!(g.efficiency, 1.0, "nominal efficiency must be exactly 1");
+    assert_eq!(g.goodput_tflops.to_bits(), faulted.achieved_tflops.to_bits());
+    // Everything else is bit-identical: the fault layer is zero-cost
+    // when it degrades nothing.
+    let mut stripped = faulted.clone();
+    stripped.goodput = None;
+    assert_eq!(plain, stripped);
+}
+
+#[test]
+fn prop_goodput_monotone_along_severity_ladder() {
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    check("goodput monotone in severity", 10, |rng| {
+        let base = FaultScenario::from_seed(rng.next_u64() % 512, dims);
+        let mut prev_latency = 0.0f64;
+        let mut prev_goodput = f64::INFINITY;
+        for s in [0.0, 0.5, 1.0, 2.0] {
+            let rep = run_with(&cluster, &model, &par, Some(base.scaled(s)));
+            let g = rep.goodput.ok_or("missing goodput")?;
+            if rep.latency_us < prev_latency * (1.0 - 1e-9) {
+                return Err(format!("{}: latency shrank at severity {s}", base.name));
+            }
+            if g.goodput_tflops > prev_goodput * (1.0 + 1e-9) {
+                return Err(format!("{}: goodput grew at severity {s}", base.name));
+            }
+            prev_latency = rep.latency_us;
+            prev_goodput = g.goodput_tflops;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fault_spans_land_on_the_fault_track() {
+    let (cluster, model, par) = setup();
+    // Every seeded scenario has a finite MTBF, so at minimum the
+    // failure-model span is always present when tracing is on.
+    let scenario = FaultScenario::from_seed(3, cluster.topology.num_dims());
+    let rec = Arc::new(Recorder::new());
+    Simulator::new()
+        .with_faults(Arc::new(scenario))
+        .with_trace_sink(Arc::clone(&rec))
+        .run(&cluster, &model, &par, 1024, ExecutionMode::Training)
+        .unwrap();
+    let spans = rec.spans();
+    let fault_spans: Vec<_> = spans.iter().filter(|s| s.pid == tracks::FAULT_PID).collect();
+    assert!(!fault_spans.is_empty(), "no spans on the fault-injection track");
+    assert!(fault_spans.iter().any(|s| s.name.starts_with("failures:")));
+    // The Chrome trace stays valid JSON with the new track present.
+    cosmic::util::json::validate(&cosmic::obs::chrome_trace_json(&spans)).unwrap();
+}
+
+#[test]
+fn robust_search_end_to_end() {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let mut env = make_env_robust(
+        cluster,
+        vec![WorkloadSpec::training(model, 1024)],
+        Objective::PerfPerBwPerNpu,
+        7,
+        2,
+        RobustAggregate::Expected,
+    );
+    let cfg = DseConfig::new(AgentKind::Ga, 60, 42);
+    let result = DseRunner::new(cfg, SearchScope::FullStack).run(&mut env);
+    assert_eq!(result.history.len(), 60);
+    assert!(result.best_reward > 0.0, "robust search found no valid design");
+    assert!(env.suite_evals() > 0, "robust mode never ran the suite");
+    assert_eq!(env.eval_panics(), 0);
+    // Best reports are the nominal scenario's, goodput attached.
+    assert!(!result.best_reports.is_empty());
+    let g = result.best_reports[0].goodput.expect("robust reports carry goodput");
+    assert_eq!(g.efficiency, 1.0, "nominal-scenario reports anchor the breakdown");
+    // The winner has a full per-scenario breakdown: nominal + 2 seeded.
+    let suite = env.evaluate_suite(&result.best_genome, None).unwrap();
+    assert_eq!(suite.scores.len(), 3);
+    assert_eq!(suite.scores[0].scenario, "nominal");
+    for s in &suite.scores[1..] {
+        assert!(s.reward > 0.0, "{}: degraded scenario scored invalid", s.scenario);
+        assert!(s.reward <= suite.scores[0].reward, "{}: faults sped things up", s.scenario);
+        assert!(s.efficiency > 0.0 && s.efficiency <= 1.0);
+    }
+    // The aggregate the search optimized matches the breakdown.
+    assert_eq!(suite.aggregate, RobustAggregate::Expected);
+    let mean: f64 =
+        suite.scores.iter().map(|s| s.reward).sum::<f64>() / suite.scores.len() as f64;
+    assert_eq!(suite.reward.to_bits(), mean.to_bits());
+}
+
+#[test]
+fn worst_case_bounds_expected_from_below() {
+    let suite = ScenarioSuite::generate(11, 3, presets::system1().topology.num_dims());
+    let build = |aggregate| {
+        let cluster = presets::system1();
+        let model = wl::gpt3_13b().with_simulated_layers(4);
+        cosmic::harness::make_env(
+            cluster,
+            vec![WorkloadSpec::training(model, 1024)],
+            Objective::PerfPerBwPerNpu,
+        )
+        .with_scenarios(suite.clone(), aggregate)
+    };
+    let expected_env = build(RobustAggregate::Expected);
+    let worst_env = build(RobustAggregate::WorstCase);
+    let g = expected_env.pss.baseline_genome();
+    let expected = expected_env.evaluate_nomemo(&g).reward;
+    let worst = worst_env.evaluate_nomemo(&g).reward;
+    assert!(expected > 0.0 && worst > 0.0);
+    assert!(worst <= expected, "min over scenarios exceeded their mean");
+}
