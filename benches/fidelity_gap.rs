@@ -9,11 +9,14 @@
 //!    dims are oversubscribed or the fabric carries co-tenant traffic?
 //! 3. What does the PsA "Network Fidelity" knob cost/buy inside a DSE —
 //!    screen analytically, re-rank the finalists under contention.
+//! 4. What does the packet rung add on top of the flow rung — the
+//!    Packet-vs-FlowLevel cost gap under 4:1 oversubscription and the
+//!    wall-clock overhead of discretizing the drain into MTU packets.
 
 use cosmic::agents::AgentKind;
 use cosmic::dse::{DseConfig, DseRunner, Objective, WorkloadSpec};
 use cosmic::harness::{make_env_with_fidelity, median_baseline_par, print_table};
-use cosmic::netsim::{FidelityMode, FlowLevelConfig};
+use cosmic::netsim::{FidelityMode, FlowLevelConfig, PacketLevelConfig};
 use cosmic::pss::SearchScope;
 use cosmic::sim::{presets, Simulator};
 use cosmic::workload::models::presets as wl;
@@ -26,6 +29,7 @@ fn main() {
 
     // --- 1 & 2: backend gap on the Table 3 systems ---
     let mut rows = Vec::new();
+    let mut pkt_rows = Vec::new();
     for sys in 1..=3usize {
         let cluster = presets::by_index(sys).unwrap();
         let spec = WorkloadSpec::training(model.clone(), 2048);
@@ -37,8 +41,10 @@ fn main() {
         };
         let analytical = run(&Simulator::new());
         let flow = run(&Simulator::new().with_fidelity(FidelityMode::FlowLevel));
+        let flow_started = Instant::now();
         let oversub =
             run(&Simulator::new().with_flow_config(FlowLevelConfig::oversubscribed(4.0)));
+        let flow_wall = flow_started.elapsed().as_secs_f64();
         let tenant = run(&Simulator::new().with_flow_config(
             FlowLevelConfig::default().with_background_load(0.3),
         ));
@@ -54,11 +60,34 @@ fn main() {
             format!("{:.1} ({:+.1}%)", oversub / 1e3, (oversub / analytical - 1.0) * 100.0),
             format!("{:.1} ({:+.1}%)", tenant / 1e3, (tenant / analytical - 1.0) * 100.0),
         ]);
+
+        // --- 4: the packet rung on the same configs ---
+        let packet = run(&Simulator::new().with_fidelity(FidelityMode::Packet));
+        let pkt_started = Instant::now();
+        let pkt_oversub =
+            run(&Simulator::new().with_packet_config(PacketLevelConfig::oversubscribed(4.0)));
+        let pkt_wall = pkt_started.elapsed().as_secs_f64();
+        let pkt_gap = (packet - flow).abs() / flow * 100.0;
+        assert!(
+            pkt_gap < 5.0,
+            "system {sys}: uncongested packet rung diverged {pkt_gap:.2}% from flow-level"
+        );
+        pkt_rows.push(vec![
+            format!("System {sys}"),
+            format!("{:.1} ({pkt_gap:+.2}% vs flow)", packet / 1e3),
+            format!("{:.1} ({:+.1}%)", pkt_oversub / 1e3, (pkt_oversub / oversub - 1.0) * 100.0),
+            format!("{:.1}x", pkt_wall / flow_wall.max(1e-9)),
+        ]);
     }
     print_table(
         "Fidelity gap — GPT3-175B iteration latency (ms)",
         &["system", "analytical", "flow (uncongested)", "flow (4:1 oversub)", "flow (30% tenant)"],
         &rows,
+    );
+    print_table(
+        "Packet rung — GPT3-175B iteration latency (ms) and overhead vs the flow rung",
+        &["system", "packet (uncongested)", "packet (4:1 oversub)", "wall-clock vs flow 4:1"],
+        &pkt_rows,
     );
 
     // --- 3: PsA fidelity knob inside a DSE + finalist re-ranking ---

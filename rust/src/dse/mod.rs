@@ -70,16 +70,17 @@ struct CachedEval {
 }
 
 /// Tag for the fidelity a memoized outcome was evaluated at (0 = the
-/// genome's own PsA knob, 1 = forced Analytical, 2 = forced FlowLevel).
-/// The genome memo keeps one shard group per tag, so staged screening
-/// and re-ranking never read each other's rewards.
-const FIDELITY_TAGS: usize = 3;
+/// genome's own PsA knob, 1 = forced Analytical, 2 = forced FlowLevel,
+/// 3 = forced Packet). The genome memo keeps one shard group per tag,
+/// so staged screening and re-ranking never read each other's rewards.
+const FIDELITY_TAGS: usize = 4;
 
 fn fidelity_tag(forced: Option<FidelityMode>) -> u8 {
     match forced {
         None => 0,
         Some(FidelityMode::Analytical) => 1,
         Some(FidelityMode::FlowLevel) => 2,
+        Some(FidelityMode::Packet) => 3,
     }
 }
 
@@ -143,6 +144,9 @@ pub struct Environment {
     /// The flow-level twin, used when a genome's PsA fidelity knob (or a
     /// caller via [`Environment::evaluate_with`]) asks for congestion.
     flow_simulator: Simulator,
+    /// The packet-level twin, the most expensive rung (staged-packet
+    /// finalists, or a genome/caller asking for `FidelityMode::Packet`).
+    packet_simulator: Simulator,
     pub workloads: Vec<WorkloadSpec>,
     pub objective: Objective,
     /// Sharded memo of evaluations keyed by genome, one shard group per
@@ -160,6 +164,7 @@ pub struct Environment {
     cache_hits: AtomicU64,
     invalid: AtomicU64,
     flow_evals: AtomicU64,
+    packet_evals: AtomicU64,
     eval_panics: AtomicU64,
     suite_evals: AtomicU64,
 }
@@ -210,6 +215,7 @@ impl Environment {
             pss,
             simulator: Simulator::new(),
             flow_simulator: Simulator::new().with_fidelity(FidelityMode::FlowLevel),
+            packet_simulator: Simulator::new().with_fidelity(FidelityMode::Packet),
             workloads,
             objective,
             cache: (0..CACHE_SHARDS * FIDELITY_TAGS).map(|_| Mutex::new(HashMap::new())).collect(),
@@ -219,6 +225,7 @@ impl Environment {
             cache_hits: AtomicU64::new(0),
             invalid: AtomicU64::new(0),
             flow_evals: AtomicU64::new(0),
+            packet_evals: AtomicU64::new(0),
             eval_panics: AtomicU64::new(0),
             suite_evals: AtomicU64::new(0),
         }
@@ -230,6 +237,15 @@ impl Environment {
         let mut sim = Simulator::new().with_flow_config(config);
         sim.mem_budget_bytes = self.simulator.mem_budget_bytes;
         self.flow_simulator = sim;
+        self
+    }
+
+    /// Reconfigure the packet-level twin's fabric and packet parameters
+    /// (MTU, queue depth, ECMP width, seed) — builder style.
+    pub fn with_packet_config(mut self, config: crate::netsim::PacketLevelConfig) -> Self {
+        let mut sim = Simulator::new().with_packet_config(config);
+        sim.mem_budget_bytes = self.simulator.mem_budget_bytes;
+        self.packet_simulator = sim;
         self
     }
 
@@ -285,6 +301,12 @@ impl Environment {
         self.flow_evals.load(Ordering::Relaxed)
     }
 
+    /// Evaluations that ran the packet-level simulator (the most
+    /// expensive rung).
+    pub fn packet_evals(&self) -> u64 {
+        self.packet_evals.load(Ordering::Relaxed)
+    }
+
     /// Batch evaluations that panicked and were isolated to an invalid
     /// outcome instead of aborting the run (see
     /// [`crate::util::parallel_map_catch`]).
@@ -319,6 +341,7 @@ impl Environment {
         metrics.set_counter("env.cache_hits", self.cache_hits());
         metrics.set_counter("env.invalid", self.invalid());
         metrics.set_counter("env.flow_evals", self.flow_evals());
+        metrics.set_counter("env.packet_evals", self.packet_evals());
         metrics.set_counter("env.eval_panics", self.eval_panics());
         metrics.set_counter("env.suite_evals", self.suite_evals());
         if let Some((suite, _)) = self.scenario_suite() {
@@ -539,14 +562,18 @@ impl Environment {
         } else {
             let sim = match fidelity {
                 FidelityMode::FlowLevel => &self.flow_simulator,
+                FidelityMode::Packet => &self.packet_simulator,
                 FidelityMode::Analytical => &self.simulator,
             };
             self.simulate_point(sim, &cluster, &par, use_eval_cache, &mut priced_any)
         };
-        // Count flow-level *simulations*, not attempts: preflight/trace
-        // rejects never touch the flow backend.
+        // Count flow/packet-level *simulations*, not attempts:
+        // preflight/trace rejects never touch the expensive backends.
         if priced_any && matches!(fidelity, FidelityMode::FlowLevel) {
             self.flow_evals.fetch_add(1, Ordering::Relaxed);
+        }
+        if priced_any && matches!(fidelity, FidelityMode::Packet) {
+            self.packet_evals.fetch_add(1, Ordering::Relaxed);
         }
         outcome
     }
@@ -640,6 +667,7 @@ impl Environment {
     ) -> Result<Vec<StepOutcome>, StepOutcome> {
         let base = match fidelity {
             FidelityMode::FlowLevel => &self.flow_simulator,
+            FidelityMode::Packet => &self.packet_simulator,
             FidelityMode::Analytical => &self.simulator,
         };
         let mut outcomes = Vec::with_capacity(robust.scenarios.len());
@@ -751,10 +779,17 @@ pub struct RunResult {
     /// Flow-level simulations this run spent (staged runs budget these:
     /// `promote_top_k` instead of one per step).
     pub flow_evals: u64,
+    /// Packet-level simulations this run spent (staged-packet runs
+    /// budget these: `packet_top_k` instead of one per step).
+    pub packet_evals: u64,
     /// Staged runs only: the promoted finalists as
     /// `(genome, screening reward, flow-level reward)`, best-screened
     /// first. Empty for single-fidelity strategies.
     pub finalists: Vec<(Vec<usize>, f64, f64)>,
+    /// Staged-packet runs only: the packet-rung finalists as
+    /// `(genome, flow-level reward, packet reward)`, best-at-flow
+    /// first. Empty for every other strategy.
+    pub packet_finalists: Vec<(Vec<usize>, f64, f64)>,
 }
 
 impl RunResult {
@@ -794,6 +829,12 @@ pub enum SearchStrategy {
     /// flow-level winner. Spends `promote_top_k` flow-level simulations
     /// instead of one per step.
     Staged { promote_top_k: usize },
+    /// Three-rung staging: Analytical screen, FlowLevel re-score of the
+    /// running top-K, then a Packet re-score of the `packet_top_k` best
+    /// flow-level finalists — the packet reward picks the winner.
+    /// Spends `promote_top_k` flow-level plus `packet_top_k`
+    /// packet-level simulations.
+    StagedPacket { promote_top_k: usize, packet_top_k: usize },
 }
 
 /// Running top-K distinct genomes by screening reward (K is small, so
@@ -890,15 +931,19 @@ impl DseRunner {
         let screen_fidelity = match self.strategy {
             SearchStrategy::GenomeFidelity => None,
             SearchStrategy::Fixed(f) => Some(f),
-            SearchStrategy::Staged { .. } => Some(FidelityMode::Analytical),
+            SearchStrategy::Staged { .. } | SearchStrategy::StagedPacket { .. } => {
+                Some(FidelityMode::Analytical)
+            }
         };
         let rung = match screen_fidelity {
             None => Rung::GenomeKnob,
             Some(FidelityMode::Analytical) => Rung::Analytical,
             Some(FidelityMode::FlowLevel) => Rung::FlowLevel,
+            Some(FidelityMode::Packet) => Rung::Packet,
         };
         let mut topk = match self.strategy {
-            SearchStrategy::Staged { promote_top_k } => {
+            SearchStrategy::Staged { promote_top_k }
+            | SearchStrategy::StagedPacket { promote_top_k, .. } => {
                 // Under forced-fidelity screening the PsA fidelity knob is
                 // dead: canonicalize it away so one physical design never
                 // occupies two promotion slots.
@@ -915,6 +960,7 @@ impl DseRunner {
         let evals0 = env.evals();
         let invalid0 = env.invalid();
         let flow0 = env.flow_evals();
+        let packet0 = env.packet_evals();
 
         loop {
             let proposals = agent.ask();
@@ -977,6 +1023,7 @@ impl DseRunner {
         // flow-level result can never lose to "screen analytically, then
         // re-rank just the argmax".
         let mut finalists: Vec<(Vec<usize>, f64, f64)> = Vec::new();
+        let mut packet_finalists: Vec<(Vec<usize>, f64, f64)> = Vec::new();
         let mut report_fidelity: Option<FidelityMode> = screen_fidelity;
         if let Some(topk) = topk {
             let genomes: Vec<Vec<usize>> =
@@ -997,6 +1044,31 @@ impl DseRunner {
                 }
             }
             report_fidelity = Some(FidelityMode::FlowLevel);
+            // Staged-packet: promote the best flow-level finalists one
+            // rung further and let the packet reward pick the winner.
+            if let SearchStrategy::StagedPacket { packet_top_k, .. } = self.strategy {
+                let mut by_flow: Vec<usize> = (0..finalists.len()).collect();
+                by_flow.sort_by(|&a, &b| {
+                    finalists[b].2.partial_cmp(&finalists[a].2).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                by_flow.truncate(packet_top_k.max(1));
+                let genomes: Vec<Vec<usize>> =
+                    by_flow.iter().map(|&i| finalists[i].0.clone()).collect();
+                if !genomes.is_empty() {
+                    let outcomes = env.evaluate_batch_at(&genomes, Some(FidelityMode::Packet));
+                    best_reward = 0.0;
+                    best_genome = Vec::new();
+                    for (&i, out) in by_flow.iter().zip(outcomes.iter()) {
+                        if out.reward > best_reward {
+                            best_reward = out.reward;
+                            best_genome = finalists[i].0.clone();
+                            steps_to_peak = topk.entries[i].1;
+                        }
+                        packet_finalists.push((finalists[i].0.clone(), finalists[i].2, out.reward));
+                    }
+                    report_fidelity = Some(FidelityMode::Packet);
+                }
+            }
         }
         if let Some(obs) = self.observer.as_deref() {
             if !finalists.is_empty() {
@@ -1013,6 +1085,7 @@ impl DseRunner {
         let evals_spent = env.evals() - evals0;
         let invalid_spent = env.invalid() - invalid0;
         let flow_spent = env.flow_evals() - flow0;
+        let packet_spent = env.packet_evals() - packet0;
 
         // Re-materialize the winning design's reports (cache hits elide
         // them during the search) at the fidelity that scored it.
@@ -1032,7 +1105,9 @@ impl DseRunner {
             evals: evals_spent,
             invalid: invalid_spent,
             flow_evals: flow_spent,
+            packet_evals: packet_spent,
             finalists,
+            packet_finalists,
         }
     }
 }
@@ -1303,6 +1378,50 @@ mod tests {
     }
 
     #[test]
+    fn staged_packet_promotes_flow_finalists_and_picks_packet_winner() {
+        let mut env = make_env(Objective::PerfPerBwPerNpu)
+            .with_flow_config(FlowLevelConfig::oversubscribed(4.0))
+            .with_packet_config(crate::netsim::PacketLevelConfig::oversubscribed(4.0));
+        let cfg = DseConfig::new(AgentKind::Ga, 60, 42);
+        let r = DseRunner::new(cfg, SearchScope::FullStack)
+            .with_strategy(SearchStrategy::StagedPacket { promote_top_k: 5, packet_top_k: 2 })
+            .run(&mut env);
+        assert!(r.best_reward > 0.0);
+        assert!(!r.finalists.is_empty() && r.finalists.len() <= 5);
+        assert!(!r.packet_finalists.is_empty() && r.packet_finalists.len() <= 2);
+        assert!(r.packet_evals > 0 && r.packet_evals <= 2, "spent {}", r.packet_evals);
+        // The winner carries the max packet reward over the finalists.
+        let max_pkt = r.packet_finalists.iter().map(|(_, _, p)| *p).fold(0.0, f64::max);
+        assert_eq!(r.best_reward, max_pkt);
+        // Every packet finalist is one of the flow finalists, carrying
+        // its flow-level reward along.
+        for (g, flow, _) in &r.packet_finalists {
+            assert!(r.finalists.iter().any(|(fg, _, fr)| fg == g && fr == flow));
+        }
+        assert_eq!(r.best_reports.len(), env.workloads.len());
+    }
+
+    #[test]
+    fn staged_packet_is_bit_reproducible() {
+        let cfg = DseConfig::new(AgentKind::Ga, 40, 9);
+        let run = || {
+            let mut env = make_env(Objective::PerfPerBwPerNpu)
+                .with_flow_config(FlowLevelConfig::oversubscribed(4.0))
+                .with_packet_config(crate::netsim::PacketLevelConfig::oversubscribed(4.0));
+            DseRunner::new(cfg, SearchScope::FullStack)
+                .with_strategy(SearchStrategy::StagedPacket { promote_top_k: 4, packet_top_k: 2 })
+                .run(&mut env)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.best_genome, b.best_genome);
+        assert_eq!(a.best_reward.to_bits(), b.best_reward.to_bits());
+        assert_eq!(a.finalists, b.finalists);
+        assert_eq!(a.packet_finalists, b.packet_finalists);
+        assert_eq!(a.best_reports, b.best_reports);
+    }
+
+    #[test]
     fn fixed_strategy_forces_flow_fidelity() {
         let mut env = make_env(Objective::PerfPerBwPerNpu);
         let cfg = DseConfig::new(AgentKind::Rw, 48, 3);
@@ -1499,6 +1618,7 @@ mod tests {
             SearchStrategy::GenomeFidelity,
             SearchStrategy::Fixed(FidelityMode::Analytical),
             SearchStrategy::Staged { promote_top_k: 2 },
+            SearchStrategy::StagedPacket { promote_top_k: 2, packet_top_k: 1 },
         ] {
             let mut env = make_robust_env(RobustAggregate::Expected);
             let cfg = DseConfig::new(AgentKind::Rw, 8, 5);

@@ -67,12 +67,14 @@ fn print_usage() {
 USAGE:
   cosmic simulate [--system 1|2|3] [--model NAME] [--batch N]
                   [--dp N --sp N --pp N --shard 0|1] [--layers N] [--mode train|prefill|decode]
-                  [--fidelity analytical|flow] [--trace FILE.json]
+                  [--fidelity analytical|flow|packet] [--trace FILE.json]
                   [--faults SEED] [--ckpt ITERS]
   cosmic search   [--system 1|2|3] [--model NAME] [--batch N] [--agent RW|GA|ACO|BO]
                   [--scope full|workload|collective|network] [--steps N] [--seed N]
-                  [--objective bw|cost|latency] [--strategy genome|analytical|flow|staged]
-                  [--promote K] [--cache-cap N] [--progress N] [--telemetry FILE.json]
+                  [--objective bw|cost|latency]
+                  [--strategy genome|analytical|flow|packet|staged|staged-packet]
+                  [--promote K] [--packet-top K]
+                  [--cache-cap N] [--progress N] [--telemetry FILE.json]
                   [--robust expected|worst] [--scenarios K] [--faults-seed N]
   cosmic space    [--npus N] [--dims N]
   cosmic validate-json FILE...
@@ -140,6 +142,7 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     let fidelity = match opt_str(opts, "fidelity", "analytical") {
         "analytical" => FidelityMode::Analytical,
         "flow" => FidelityMode::FlowLevel,
+        "packet" => FidelityMode::Packet,
         f => return Err(format!("unknown fidelity '{f}'")),
     };
     let mut sim = Simulator::new().with_fidelity(fidelity);
@@ -220,7 +223,12 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         "genome" => SearchStrategy::GenomeFidelity,
         "analytical" => SearchStrategy::Fixed(FidelityMode::Analytical),
         "flow" => SearchStrategy::Fixed(FidelityMode::FlowLevel),
+        "packet" => SearchStrategy::Fixed(FidelityMode::Packet),
         "staged" => SearchStrategy::Staged { promote_top_k: opt_u64(opts, "promote", 8) as usize },
+        "staged-packet" => SearchStrategy::StagedPacket {
+            promote_top_k: opt_u64(opts, "promote", 8) as usize,
+            packet_top_k: opt_u64(opts, "packet-top", 3) as usize,
+        },
         s => return Err(format!("unknown strategy '{s}'")),
     };
 
@@ -297,11 +305,20 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         cs.coll_misses,
         cs.coll_evictions
     );
-    println!("fidelity spend: {} flow-level / {} total evals", result.flow_evals, result.evals);
+    println!(
+        "fidelity spend: {} flow-level / {} packet-level / {} total evals",
+        result.flow_evals, result.packet_evals, result.evals
+    );
     if !result.finalists.is_empty() {
         println!("finalists (screening reward -> flow-level reward):");
         for (g, screen, flow) in &result.finalists {
             println!("  {screen:.6e} -> {flow:.6e}  {g:?}");
+        }
+    }
+    if !result.packet_finalists.is_empty() {
+        println!("packet finalists (flow-level reward -> packet reward):");
+        for (g, flow, pkt) in &result.packet_finalists {
+            println!("  {flow:.6e} -> {pkt:.6e}  {g:?}");
         }
     }
     println!(

@@ -1,7 +1,7 @@
 //! Pluggable network backends: the simulation-fidelity ladder.
 //!
 //! [`NetworkBackend`] is the seam between the end-to-end simulator and
-//! the network model. Two rungs ship today:
+//! the network model. Three rungs ship today:
 //!
 //! - [`Analytical`] — the closed-form alpha-beta path: collectives see
 //!   ideal per-dimension bandwidth, and overlappable gradient
@@ -12,9 +12,10 @@
 //!   ([`FlowLevelConfig`]), and concurrent overlappable collectives are
 //!   simulated as event-driven flow chains sharing each dimension's
 //!   capacity max-min fairly ([`super::flow::FlowSim`]).
-//!
-//! A packet-level rung (per-message queueing, adaptive routing) is the
-//! natural next step and would slot in behind the same trait.
+//! - [`super::packet::PacketLevel`] — the packet-level rung: flows are
+//!   discretized into MTU-sized packets served by per-port FIFO queues
+//!   with seeded ECMP hashing and incast serialization
+//!   ([`super::packet`]).
 
 use std::fmt;
 use std::sync::Arc;
@@ -35,15 +36,20 @@ pub enum FidelityMode {
     Analytical,
     /// Flow-level max-min contention; slower, congestion-aware.
     FlowLevel,
+    /// Packet-level FIFO queueing with ECMP and incast; slowest,
+    /// queueing-aware.
+    Packet,
 }
 
 impl FidelityMode {
-    pub const ALL: [FidelityMode; 2] = [FidelityMode::Analytical, FidelityMode::FlowLevel];
+    pub const ALL: [FidelityMode; 3] =
+        [FidelityMode::Analytical, FidelityMode::FlowLevel, FidelityMode::Packet];
 
     pub fn name(&self) -> &'static str {
         match self {
             FidelityMode::Analytical => "Analytical",
             FidelityMode::FlowLevel => "FlowLevel",
+            FidelityMode::Packet => "Packet",
         }
     }
 
@@ -51,6 +57,7 @@ impl FidelityMode {
         match s.trim().to_ascii_lowercase().as_str() {
             "analytical" | "analytic" => Some(FidelityMode::Analytical),
             "flowlevel" | "flow-level" | "flow" => Some(FidelityMode::FlowLevel),
+            "packet" | "packetlevel" | "packet-level" => Some(FidelityMode::Packet),
             _ => None,
         }
     }
@@ -60,6 +67,7 @@ impl FidelityMode {
         match self {
             FidelityMode::Analytical => Arc::new(Analytical),
             FidelityMode::FlowLevel => Arc::new(FlowLevel::default()),
+            FidelityMode::Packet => Arc::new(super::packet::PacketLevel::default()),
         }
     }
 }
@@ -384,8 +392,9 @@ impl FlowLevel {
     /// phase of the first chunk, then a tail flow on the bottleneck
     /// phase carrying the remaining `chunks-1` pipelined pieces — alone
     /// on the fabric this reproduces the Baseline pipeline makespan
-    /// exactly.
-    fn chain_of(&self, call: &CollectiveCall<'_>) -> Vec<FlowSpec> {
+    /// exactly. The packet rung reuses the same chains (it discretizes
+    /// *how* the bytes move, not *what* is sent).
+    pub(crate) fn chain_of(&self, call: &CollectiveCall<'_>) -> Vec<FlowSpec> {
         let chunks = call.chunks.max(1);
         let plan = Self::chunk_plan(call);
         let mut specs: Vec<FlowSpec> = plan

@@ -1,0 +1,184 @@
+//! Calibrate the flow-level fabric against the packet rung.
+//!
+//! The fluid model is the DSE's mid-fidelity workhorse; the packet rung
+//! is its ground truth for queueing effects the fluid shares cannot see
+//! (ECMP hash collisions, incast serialization granularity). This
+//! module closes the loop: [`calibrate_flow_config`] drains a saturating
+//! single-dimension sweep on both rungs and fits per-dimension
+//! oversubscription factors so the cheap model reproduces the expensive
+//! one's makespans.
+//!
+//! The fit is exact by construction for the sweep itself: a dimension
+//! whose packet drain runs `r`× slower than the fluid drain gets its
+//! oversubscription multiplied by `r` (capacity divided by `r`), which
+//! rescales the fluid makespan to the packet one. On other traffic the
+//! fitted config is an approximation — the point is that it is fitted
+//! to queueing behavior rather than guessed.
+
+use super::fabric::FlowLevelConfig;
+use super::flow::{FlowSim, FlowSpec};
+use super::packet::{PacketLevelConfig, PacketSim};
+use crate::topology::Topology;
+
+/// One dimension's packet-vs-fluid measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationSample {
+    /// Topology dimension index.
+    pub dim: usize,
+    /// Makespan of the sweep on the packet rung (us).
+    pub packet_us: f64,
+    /// Makespan of the same sweep on the fluid rung (us).
+    pub flow_us: f64,
+    /// `packet_us / flow_us` (1.0 when the fluid model already matches).
+    pub ratio: f64,
+    /// The fitted oversubscription factor (`base * ratio`, clamped to
+    /// the fabric model's `>= 1` floor).
+    pub fitted_oversubscription: f64,
+}
+
+/// Result of [`calibrate_flow_config`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationReport {
+    /// Per-dimension measurements, one per topology dimension.
+    pub samples: Vec<CalibrationSample>,
+    /// The calibrated fabric: the packet config's fabric with
+    /// `per_dim_oversubscription` replaced by the fitted factors.
+    pub fitted: FlowLevelConfig,
+}
+
+impl CalibrationReport {
+    /// The fitted per-dimension oversubscription factors, in dimension
+    /// order.
+    pub fn per_dim_oversubscription(&self) -> Vec<f64> {
+        self.samples.iter().map(|s| s.fitted_oversubscription).collect()
+    }
+}
+
+/// Fit a [`FlowLevelConfig`] against packet-level drains: for every
+/// topology dimension, drain `concurrency` concurrent equal flows of
+/// `bytes_per_flow` bytes through that dimension on both rungs and
+/// scale the dimension's oversubscription by the observed
+/// packet-to-fluid makespan ratio.
+///
+/// With `ecmp_width == 1` the two rungs agree (round-robin FIFO service
+/// is work-conserving) and the fit is the identity; widths `> 1`
+/// surface hash-collision hotspots as extra effective oversubscription.
+pub fn calibrate_flow_config(
+    topo: &Topology,
+    packet: &PacketLevelConfig,
+    concurrency: usize,
+    bytes_per_flow: f64,
+) -> CalibrationReport {
+    let k = concurrency.max(1);
+    let bytes = bytes_per_flow.max(packet.mtu_bytes.max(1.0));
+    let psim = PacketSim::new(topo, packet);
+    let fsim = FlowSim::new(packet.fabric.dim_capacities(topo));
+    let makespan = |finishes: &[f64]| finishes.iter().copied().fold(0.0, f64::max);
+    let mut samples = Vec::with_capacity(topo.dims.len());
+    for (d, nd) in topo.dims.iter().enumerate() {
+        let chains: Vec<(f64, Vec<FlowSpec>)> = (0..k)
+            .map(|_| (0.0, vec![FlowSpec { uses: vec![d], bytes, latency_us: 0.0 }]))
+            .collect();
+        let pkt: Vec<f64> = psim.run(&chains).iter().map(|r| r.finish_us).collect();
+        let fluid: Vec<f64> = fsim.run(&chains).iter().map(|r| r.finish_us).collect();
+        let packet_us = makespan(&pkt);
+        let flow_us = makespan(&fluid);
+        let ratio = if flow_us > 0.0 { packet_us / flow_us } else { 1.0 };
+        let base = packet.fabric.oversubscription(nd.kind, d);
+        samples.push(CalibrationSample {
+            dim: d,
+            packet_us,
+            flow_us,
+            ratio,
+            fitted_oversubscription: (base * ratio).max(1.0),
+        });
+    }
+    let mut fitted = packet.fabric.clone();
+    fitted.per_dim_oversubscription =
+        Some(samples.iter().map(|s| s.fitted_oversubscription).collect());
+    CalibrationReport { samples, fitted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::DimKind;
+
+    fn topo() -> Topology {
+        Topology::from_arrays(
+            &[DimKind::Ring, DimKind::Switch],
+            &[4, 8],
+            &[200.0, 100.0],
+            &[0.5, 1.0],
+        )
+    }
+
+    #[test]
+    fn width_one_fit_is_the_identity() {
+        let topo = topo();
+        let packet = PacketLevelConfig::oversubscribed(4.0);
+        let report = calibrate_flow_config(&topo, &packet, 6, 4e6);
+        for s in &report.samples {
+            assert!(
+                (s.ratio - 1.0).abs() < 1e-6,
+                "dim {}: ratio {} should be 1 at width 1",
+                s.dim,
+                s.ratio
+            );
+            let base = packet.fabric.oversubscription(topo.dims[s.dim].kind, s.dim);
+            assert!((s.fitted_oversubscription - base).abs() < 1e-6 * base);
+        }
+    }
+
+    #[test]
+    fn ecmp_collisions_surface_as_extra_oversubscription() {
+        let topo = topo();
+        let packet = PacketLevelConfig::oversubscribed(4.0).with_ecmp_width(4);
+        let report = calibrate_flow_config(&topo, &packet, 6, 4e6);
+        // Ring dims have no path diversity: identity fit.
+        assert!((report.samples[0].ratio - 1.0).abs() < 1e-6);
+        // 6 flows hashed onto 4 equal-cost paths collide somewhere
+        // (pigeonhole): the hot path serves >= 2 flows at cap/4, so the
+        // packet drain runs >= 8/6 of the fluid one.
+        assert!(
+            report.samples[1].ratio > 1.2,
+            "switch ratio {} should expose collisions",
+            report.samples[1].ratio
+        );
+        assert!(
+            report.samples[1].fitted_oversubscription
+                > packet.fabric.oversubscription(DimKind::Switch, 1)
+        );
+    }
+
+    #[test]
+    fn fitted_fluid_reproduces_packet_makespans() {
+        let topo = topo();
+        let packet = PacketLevelConfig::oversubscribed(4.0).with_ecmp_width(4);
+        let report = calibrate_flow_config(&topo, &packet, 6, 4e6);
+        let fitted_sim = FlowSim::new(report.fitted.dim_capacities(&topo));
+        for s in &report.samples {
+            let chains: Vec<(f64, Vec<FlowSpec>)> = (0..6)
+                .map(|_| (0.0, vec![FlowSpec { uses: vec![s.dim], bytes: 4e6, latency_us: 0.0 }]))
+                .collect();
+            let refit =
+                fitted_sim.run(&chains).iter().map(|r| r.finish_us).fold(0.0, f64::max);
+            assert!(
+                (refit - s.packet_us).abs() < 0.05 * s.packet_us,
+                "dim {}: fitted fluid {} vs packet {}",
+                s.dim,
+                refit,
+                s.packet_us
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_is_deterministic() {
+        let topo = topo();
+        let packet = PacketLevelConfig::oversubscribed(2.0).with_ecmp_width(4).with_seed(11);
+        let a = calibrate_flow_config(&topo, &packet, 8, 2e6);
+        let b = calibrate_flow_config(&topo, &packet, 8, 2e6);
+        assert_eq!(a, b);
+    }
+}

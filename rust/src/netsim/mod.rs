@@ -16,8 +16,16 @@
 //!   ([`FlowSim`]).
 //! - [`fabric`] — what congests: switch oversubscription and co-tenant
 //!   background load ([`FlowLevelConfig`]).
-//! - [`backend`] — the [`NetworkBackend`] trait with the two rungs,
-//!   [`Analytical`] and [`FlowLevel`], selected by [`FidelityMode`].
+//! - [`backend`] — the [`NetworkBackend`] trait with the first two
+//!   rungs, [`Analytical`] and [`FlowLevel`], selected by
+//!   [`FidelityMode`].
+//! - [`packet`] — the third rung, [`PacketLevel`]: flows discretized
+//!   into MTU-sized packets served by per-port FIFO queues, with
+//!   seeded deterministic ECMP across equal-cost paths and incast
+//!   serialization at receiver ports ([`PacketLevelConfig`]).
+//! - [`calibrate`] — fit [`FlowLevelConfig`] oversubscription factors
+//!   against packet-level drains ([`calibrate_flow_config`]), so the
+//!   cheap fluid rung tracks the expensive queueing rung.
 //!
 //! Select a backend on the simulator:
 //!
@@ -43,14 +51,21 @@
 //! flow-level contention (`Environment::evaluate_with`).
 
 pub mod backend;
+pub mod calibrate;
 pub mod engine;
 pub mod fabric;
 pub mod flow;
+pub mod packet;
 
 pub use backend::{
     serial_drain, serial_drain_detailed, Analytical, CollectiveCall, FidelityMode, FlowLevel,
     NetworkBackend, OverlapCall,
 };
+pub use calibrate::{calibrate_flow_config, CalibrationReport, CalibrationSample};
 pub use engine::EventQueue;
 pub use fabric::FlowLevelConfig;
 pub use flow::{maxmin_rates, ChainResult, FlowSegment, FlowSim, FlowSpec};
+pub use packet::{
+    ecmp_path, FlowSpan, PacketChainResult, PacketLevel, PacketLevelConfig, PacketSim,
+    PacketTrace, PortWindow, ServedPacket,
+};

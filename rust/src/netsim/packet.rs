@@ -1,0 +1,916 @@
+//! Packet-level fidelity rung: per-port FIFO queueing, seeded ECMP
+//! hashing, and incast serialization over the [`EventQueue`] engine.
+//!
+//! The third rung of the `netsim` ladder discretizes each collective
+//! phase's flows into MTU-sized packets and pushes them through
+//! per-(dimension, path) ports:
+//!
+//! - **Capacity.** A dimension's aggregate service rate equals the
+//!   fluid model's effective capacity
+//!   ([`FlowLevelConfig::dim_capacities`]), split evenly across its
+//!   `ecmp_width` equal-cost paths (Switch dimensions only — direct
+//!   Ring/Torus dimensions have no path diversity). With width 1 the
+//!   packet rung is the fluid capacity model, packet-quantized: a
+//!   single uncontended flow costs exactly `alpha + bytes/rate`, which
+//!   is what pins the cross-fidelity conformance suite.
+//! - **ECMP.** Every flow is pinned to one path by a pure hash of
+//!   `(seed, chain, flow, dim)` — bit-reproducible, and order-preserving
+//!   per flow (no packet reordering). Widths > 1 model hash collisions
+//!   on an oversubscribed core: two flows colliding on one path share
+//!   `cap/width` while another path idles, which is strictly pessimistic
+//!   versus the fluid max-min share — the htsim-style ECMP effect.
+//! - **Incast.** A port serves one packet at a time, FIFO; concurrent
+//!   flows targeting the same port serialize packet by packet. Admission
+//!   round-robins across the port's active flows and is bounded by
+//!   `queue_depth` waiting packets (lossless backpressure), so service
+//!   interleaves fairly — the quantized analogue of the max-min share.
+//!
+//! Blocking collectives run alone by definition; alone, FIFO
+//! packetization at rate `r` serializes to exactly `bytes/r` per phase,
+//! so [`PacketLevel::collective_time_us`] reuses the flow-level
+//! congested closed form (the event simulation is reserved for the
+//! concurrent gradient drain, where queueing actually bites).
+
+use std::collections::VecDeque;
+use std::hash::Hash;
+
+use super::backend::{
+    collapse_per_layer, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend, OverlapCall,
+};
+use super::engine::EventQueue;
+use super::fabric::FlowLevelConfig;
+use super::flow::FlowSpec;
+use crate::collective::SchedulingPolicy;
+use crate::obs::{tracks, TraceSink};
+use crate::topology::{DimKind, Topology};
+use crate::util::hash64;
+
+/// Fabric + packet parameters of the packet rung — the
+/// [`FlowLevelConfig`]-style configuration surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PacketLevelConfig {
+    /// The underlying fabric model: oversubscription and background
+    /// load set each dimension's aggregate capacity, exactly as on the
+    /// flow-level rung (so the two rungs agree when queueing is idle).
+    pub fabric: FlowLevelConfig,
+    /// Packet payload size in bytes; flows are cut into
+    /// `ceil(bytes/mtu)` packets (the last one short).
+    pub mtu_bytes: f64,
+    /// Waiting packets admitted per port beyond the one in service —
+    /// lossless backpressure bound on the ingress FIFO.
+    pub queue_depth: usize,
+    /// Equal-cost paths per Switch dimension. `1` (the default) is the
+    /// aggregate-lane view that keeps the rung conformant with the
+    /// fluid model; `> 1` splits the capacity and exposes hash
+    /// collisions.
+    pub ecmp_width: usize,
+    /// Seed of the deterministic ECMP hash ([`ecmp_path`]).
+    pub seed: u64,
+    /// Event-count bound: flows larger than `max_packets_per_flow`
+    /// MTUs coarsen to that many equal super-packets (byte
+    /// conservation is preserved; only quantization granularity
+    /// changes).
+    pub max_packets_per_flow: usize,
+}
+
+impl Default for PacketLevelConfig {
+    fn default() -> Self {
+        Self {
+            fabric: FlowLevelConfig::default(),
+            mtu_bytes: 4096.0,
+            queue_depth: 64,
+            ecmp_width: 1,
+            seed: 0xC051_1C,
+            max_packets_per_flow: 4096,
+        }
+    }
+}
+
+impl PacketLevelConfig {
+    /// Default packet parameters over an oversubscribed fabric.
+    pub fn oversubscribed(factor: f64) -> Self {
+        Self { fabric: FlowLevelConfig::oversubscribed(factor), ..Self::default() }
+    }
+
+    /// Replace the ECMP seed (builder style).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Replace the per-Switch-dimension path count (builder style).
+    pub fn with_ecmp_width(mut self, width: usize) -> Self {
+        self.ecmp_width = width;
+        self
+    }
+
+    fn mtu(&self) -> f64 {
+        self.mtu_bytes.max(1.0)
+    }
+
+    fn depth(&self) -> usize {
+        self.queue_depth.max(1)
+    }
+
+    fn width_for(&self, kind: DimKind) -> usize {
+        match kind {
+            DimKind::Switch => self.ecmp_width.max(1),
+            _ => 1,
+        }
+    }
+}
+
+/// The equal-cost path a flow is pinned to: a pure, seeded hash of the
+/// flow's identity — bit-reproducible across runs and processes, and
+/// constant per flow (so per-flow packet order is preserved).
+pub fn ecmp_path(seed: u64, chain: usize, flow: usize, dim: usize, width: usize) -> usize {
+    if width <= 1 {
+        return 0;
+    }
+    let h = hash64(|h| {
+        0x9AC7_u64.hash(h);
+        seed.hash(h);
+        chain.hash(h);
+        flow.hash(h);
+        dim.hash(h);
+    });
+    (h % width as u64) as usize
+}
+
+/// Completion record of one chain through [`PacketSim::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PacketChainResult {
+    /// Absolute finish time of the chain's last flow (the chain's issue
+    /// time when it has no flows).
+    pub finish_us: f64,
+    /// Bytes actually served across the chain's packets — equals the
+    /// chain's total `FlowSpec::bytes` up to float residue (the
+    /// conservation property tests pin this).
+    pub served_bytes: f64,
+    /// Packets served for this chain.
+    pub packets: u64,
+}
+
+/// One served packet, in service order (recorded by
+/// [`PacketSim::run_recorded`] for the FIFO/conservation properties).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServedPacket {
+    pub chain: usize,
+    /// Flow index within the chain.
+    pub flow: usize,
+    pub dim: usize,
+    pub path: usize,
+    /// Packet index within the flow (FIFO ports never invert these).
+    pub index: u64,
+    pub start_us: f64,
+    pub finish_us: f64,
+}
+
+/// One flow's transmit window (activation to last packet served).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSpan {
+    pub chain: usize,
+    pub flow: usize,
+    pub dim: usize,
+    pub path: usize,
+    pub start_us: f64,
+    pub finish_us: f64,
+}
+
+/// One contiguous busy window of a port's server — the per-queue
+/// occupancy spans the traced drain emits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PortWindow {
+    pub dim: usize,
+    pub path: usize,
+    pub start_us: f64,
+    pub end_us: f64,
+    /// Packets served back to back within the window.
+    pub packets: u64,
+}
+
+/// Trace-side observations of one packet drain ([`PacketSim::run_traced`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PacketTrace {
+    pub flows: Vec<FlowSpan>,
+    pub windows: Vec<PortWindow>,
+}
+
+/// The packet-level event simulator: chains of [`FlowSpec`]s (identical
+/// semantics to [`super::flow::FlowSim`] — each flow pays its latency
+/// *before* its data phase, flows within a chain are sequential) whose
+/// data phases are discretized into packets served by per-(dim, path)
+/// FIFO ports.
+#[derive(Debug, Clone)]
+pub struct PacketSim {
+    /// Aggregate capacity per dimension (bytes/us), fluid-identical.
+    caps: Vec<f64>,
+    /// Equal-cost paths per dimension.
+    widths: Vec<usize>,
+    mtu: f64,
+    depth: usize,
+    seed: u64,
+    max_packets: usize,
+}
+
+impl PacketSim {
+    /// Build the per-port fabric for `topo` under `config`.
+    pub fn new(topo: &Topology, config: &PacketLevelConfig) -> Self {
+        Self {
+            caps: config.fabric.dim_capacities(topo),
+            widths: topo.dims.iter().map(|d| config.width_for(d.kind)).collect(),
+            mtu: config.mtu(),
+            depth: config.depth(),
+            seed: config.seed,
+            max_packets: config.max_packets_per_flow.max(1),
+        }
+    }
+
+    /// `(packet count, full size, last size)` of one flow's data phase.
+    fn packets_of(&self, bytes: f64) -> (u64, f64, f64) {
+        if bytes <= 0.0 {
+            return (0, 0.0, 0.0);
+        }
+        let raw = (bytes / self.mtu).ceil();
+        if raw <= self.max_packets as f64 {
+            let count = (raw as u64).max(1);
+            (count, self.mtu, bytes - (count - 1) as f64 * self.mtu)
+        } else {
+            // Coarsen to equal super-packets: same bytes, same port
+            // discipline, bounded event count.
+            let count = self.max_packets as u64;
+            let size = bytes / count as f64;
+            (count, size, size)
+        }
+    }
+
+    /// Run the chains to completion; one result per chain, in order.
+    pub fn run(&self, chains: &[(f64, Vec<FlowSpec>)]) -> Vec<PacketChainResult> {
+        self.run_inner(chains, None, None)
+    }
+
+    /// [`PacketSim::run`] that additionally records every served packet
+    /// in service order.
+    pub fn run_recorded(
+        &self,
+        chains: &[(f64, Vec<FlowSpec>)],
+        record: &mut Vec<ServedPacket>,
+    ) -> Vec<PacketChainResult> {
+        self.run_inner(chains, Some(record), None)
+    }
+
+    /// [`PacketSim::run`] that additionally collects flow windows and
+    /// coalesced per-port busy windows for the trace exporter.
+    pub fn run_traced(
+        &self,
+        chains: &[(f64, Vec<FlowSpec>)],
+        trace: &mut PacketTrace,
+    ) -> Vec<PacketChainResult> {
+        self.run_inner(chains, None, Some(trace))
+    }
+
+    fn run_inner(
+        &self,
+        chains: &[(f64, Vec<FlowSpec>)],
+        record: Option<&mut Vec<ServedPacket>>,
+        trace: Option<&mut PacketTrace>,
+    ) -> Vec<PacketChainResult> {
+        let mut port_base = Vec::with_capacity(self.widths.len());
+        let mut ports: Vec<Port> = Vec::new();
+        for (dim, &w) in self.widths.iter().enumerate() {
+            port_base.push(ports.len());
+            let rate = (self.caps.get(dim).copied().unwrap_or(0.0) / w as f64).max(1e-12);
+            for path in 0..w {
+                ports.push(Port {
+                    dim,
+                    path,
+                    rate,
+                    fifo: VecDeque::new(),
+                    rr: VecDeque::new(),
+                    in_service: None,
+                    busy_start: 0.0,
+                    busy_pkts: 0,
+                });
+            }
+        }
+        let mut engine = Engine {
+            sim: self,
+            chains,
+            states: chains
+                .iter()
+                .map(|(issue, _)| ChainState {
+                    finish_us: issue.max(0.0),
+                    served_bytes: 0.0,
+                    packets: 0,
+                    next_flow: 0,
+                })
+                .collect(),
+            flows: Vec::new(),
+            ports,
+            port_base,
+            q: EventQueue::new(),
+            record,
+            trace,
+        };
+        for c in 0..chains.len() {
+            let issue = chains[c].0.max(0.0);
+            engine.start_next_flow(c, issue);
+        }
+        while let Some((t, ev)) = engine.q.pop() {
+            match ev {
+                Ev::Activate { chain } => engine.activate(chain, t),
+                Ev::Serve { port } => engine.serve(port, t),
+            }
+        }
+        engine
+            .states
+            .into_iter()
+            .map(|s| PacketChainResult {
+                finish_us: s.finish_us,
+                served_bytes: s.served_bytes,
+                packets: s.packets,
+            })
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// A chain's next flow finished paying its latency and starts
+    /// injecting packets.
+    Activate { chain: usize },
+    /// A port's in-service packet completes.
+    Serve { port: usize },
+}
+
+#[derive(Debug)]
+struct ChainState {
+    finish_us: f64,
+    served_bytes: f64,
+    packets: u64,
+    next_flow: usize,
+}
+
+#[derive(Debug)]
+struct FlowState {
+    chain: usize,
+    flow: usize,
+    dim: usize,
+    path: usize,
+    count: u64,
+    full: f64,
+    last: f64,
+    injected: u64,
+    served: u64,
+    activated_us: f64,
+}
+
+impl FlowState {
+    fn pkt_size(&self, index: u64) -> f64 {
+        if index + 1 == self.count {
+            self.last
+        } else {
+            self.full
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Port {
+    dim: usize,
+    path: usize,
+    rate: f64,
+    /// Waiting packets, FIFO: `(flow id, size)`.
+    fifo: VecDeque<(usize, f64)>,
+    /// Flows with un-injected packets, round-robin admission order.
+    rr: VecDeque<usize>,
+    /// `(flow id, size, service start)` of the packet on the wire.
+    in_service: Option<(usize, f64, f64)>,
+    busy_start: f64,
+    busy_pkts: u64,
+}
+
+struct Engine<'a> {
+    sim: &'a PacketSim,
+    chains: &'a [(f64, Vec<FlowSpec>)],
+    states: Vec<ChainState>,
+    flows: Vec<FlowState>,
+    ports: Vec<Port>,
+    port_base: Vec<usize>,
+    q: EventQueue<Ev>,
+    record: Option<&'a mut Vec<ServedPacket>>,
+    trace: Option<&'a mut PacketTrace>,
+}
+
+impl Engine<'_> {
+    /// Advance chain `c` to its next flow at time `t`: schedule the
+    /// flow's activation after its latency, or finish the chain.
+    fn start_next_flow(&mut self, c: usize, t: f64) {
+        let specs = &self.chains[c].1;
+        let idx = self.states[c].next_flow;
+        if idx >= specs.len() {
+            self.states[c].finish_us = t;
+        } else {
+            self.q.schedule_at(t + specs[idx].latency_us.max(0.0), Ev::Activate { chain: c });
+        }
+    }
+
+    fn activate(&mut self, c: usize, t: f64) {
+        let idx = self.states[c].next_flow;
+        let spec = &self.chains[c].1[idx];
+        let (count, full, last) = self.sim.packets_of(spec.bytes);
+        let Some(&dim) = spec.uses.first() else {
+            // No dimension (or see below, no data): latency-only flow.
+            self.states[c].next_flow += 1;
+            self.start_next_flow(c, t);
+            return;
+        };
+        if count == 0 {
+            self.states[c].next_flow += 1;
+            self.start_next_flow(c, t);
+            return;
+        }
+        let width = self.sim.widths.get(dim).copied().unwrap_or(1);
+        let path = ecmp_path(self.sim.seed, c, idx, dim, width);
+        let fid = self.flows.len();
+        self.flows.push(FlowState {
+            chain: c,
+            flow: idx,
+            dim,
+            path,
+            count,
+            full,
+            last,
+            injected: 0,
+            served: 0,
+            activated_us: t,
+        });
+        let p = self.port_base[dim] + path;
+        self.ports[p].rr.push_back(fid);
+        self.fill(p);
+        self.try_start(p, t);
+    }
+
+    /// Admit packets into port `p`'s FIFO, round-robin across its
+    /// active flows, up to the backpressure bound.
+    fn fill(&mut self, p: usize) {
+        while self.ports[p].fifo.len() < self.sim.depth {
+            let Some(&f) = self.ports[p].rr.front() else { break };
+            let fs = &mut self.flows[f];
+            let size = fs.pkt_size(fs.injected);
+            fs.injected += 1;
+            let exhausted = fs.injected == fs.count;
+            let port = &mut self.ports[p];
+            port.fifo.push_back((f, size));
+            if exhausted {
+                port.rr.pop_front();
+            } else {
+                port.rr.rotate_left(1);
+            }
+        }
+    }
+
+    /// Put the head-of-line packet on the wire if the port is idle.
+    fn try_start(&mut self, p: usize, t: f64) {
+        let port = &mut self.ports[p];
+        if port.in_service.is_some() {
+            return;
+        }
+        if let Some((f, size)) = port.fifo.pop_front() {
+            if port.busy_pkts == 0 {
+                port.busy_start = t;
+            }
+            port.busy_pkts += 1;
+            port.in_service = Some((f, size, t));
+            let rate = port.rate;
+            self.q.schedule_at(t + size / rate, Ev::Serve { port: p });
+        }
+    }
+
+    fn serve(&mut self, p: usize, t: f64) {
+        let (f, size, start) = self.ports[p].in_service.take().expect("serve on idle port");
+        let (chain, flow_idx, dim, path, served_index, activated) = {
+            let fs = &mut self.flows[f];
+            let idx = fs.served;
+            fs.served += 1;
+            (fs.chain, fs.flow, fs.dim, fs.path, idx, fs.activated_us)
+        };
+        if let Some(rec) = self.record.as_deref_mut() {
+            rec.push(ServedPacket {
+                chain,
+                flow: flow_idx,
+                dim,
+                path,
+                index: served_index,
+                start_us: start,
+                finish_us: t,
+            });
+        }
+        self.states[chain].served_bytes += size;
+        self.states[chain].packets += 1;
+        if self.flows[f].served == self.flows[f].count {
+            if let Some(trace) = self.trace.as_deref_mut() {
+                trace.flows.push(FlowSpan {
+                    chain,
+                    flow: flow_idx,
+                    dim,
+                    path,
+                    start_us: activated,
+                    finish_us: t,
+                });
+            }
+            self.states[chain].next_flow += 1;
+            self.start_next_flow(chain, t);
+        }
+        self.fill(p);
+        self.try_start(p, t);
+        let port = &mut self.ports[p];
+        if port.in_service.is_none() && port.busy_pkts > 0 {
+            if let Some(trace) = self.trace.as_deref_mut() {
+                trace.windows.push(PortWindow {
+                    dim: port.dim,
+                    path: port.path,
+                    start_us: port.busy_start,
+                    end_us: t,
+                    packets: port.busy_pkts,
+                });
+            }
+            port.busy_pkts = 0;
+        }
+    }
+}
+
+/// The packet-level [`NetworkBackend`].
+///
+/// Gradient drains run through [`PacketSim`]; blocking collectives use
+/// the flow-level congested closed form (exact for a collective running
+/// alone — see the module docs). Wrap in
+/// [`crate::faults::FaultView`] for link-degraded pricing like any
+/// other rung.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PacketLevel {
+    pub config: PacketLevelConfig,
+}
+
+impl PacketLevel {
+    pub fn new(config: PacketLevelConfig) -> Self {
+        Self { config }
+    }
+
+    /// The flow-level twin over the same fabric: plans the per-phase
+    /// flow chains and prices blocking collectives.
+    fn planner(&self) -> FlowLevel {
+        FlowLevel::new(self.config.fabric.clone())
+    }
+
+    fn chains_of(planner: &FlowLevel, jobs: &[OverlapCall<'_>]) -> Vec<(f64, Vec<FlowSpec>)> {
+        jobs.iter().map(|j| (j.issue_us.max(0.0), planner.chain_of(&j.call))).collect()
+    }
+}
+
+impl NetworkBackend for PacketLevel {
+    fn name(&self) -> &'static str {
+        "packet-level"
+    }
+
+    fn fidelity(&self) -> FidelityMode {
+        FidelityMode::Packet
+    }
+
+    fn cache_tag(&self) -> u64 {
+        // Fold every pricing input: the fabric (as the flow rung does)
+        // plus the packet parameters, under a rung-distinct constant.
+        hash64(|h| {
+            0x9AC7_u64.hash(h);
+            self.config.fabric.switch_oversubscription.to_bits().hash(h);
+            self.config.fabric.background_load.to_bits().hash(h);
+            self.config
+                .fabric
+                .per_dim_oversubscription
+                .as_ref()
+                .map(|v| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>())
+                .hash(h);
+            self.config.mtu_bytes.to_bits().hash(h);
+            self.config.queue_depth.hash(h);
+            self.config.ecmp_width.hash(h);
+            self.config.seed.hash(h);
+            self.config.max_packets_per_flow.hash(h);
+        })
+    }
+
+    fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {
+        self.planner().collective_time_us(call)
+    }
+
+    fn drain_overlapped(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        _policy: SchedulingPolicy,
+    ) -> Vec<(u64, f64)> {
+        // Like the flow rung, the network multiplexes — admission
+        // policy is moot; ports arbitrate FIFO at packet granularity.
+        let Some(first) = jobs.first() else { return Vec::new() };
+        let planner = self.planner();
+        let chains = Self::chains_of(&planner, jobs);
+        let results = PacketSim::new(first.call.topology, &self.config).run(&chains);
+        collapse_per_layer(jobs.iter().zip(results.iter()).map(|(j, r)| (j.layer, r.finish_us)))
+    }
+
+    fn drain_overlapped_traced(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+        sink: &dyn TraceSink,
+    ) -> Vec<(u64, f64)> {
+        if !sink.enabled() {
+            return self.drain_overlapped(jobs, policy);
+        }
+        let Some(first) = jobs.first() else { return Vec::new() };
+        let planner = self.planner();
+        let chains = Self::chains_of(&planner, jobs);
+        let mut trace = PacketTrace::default();
+        let results =
+            PacketSim::new(first.call.topology, &self.config).run_traced(&chains, &mut trace);
+        for fsp in &trace.flows {
+            let layer = jobs[fsp.chain].layer;
+            sink.span(
+                tracks::net_dim(fsp.dim),
+                &format!("grad L{layer} pkt flow {}", fsp.flow),
+                fsp.start_us,
+                fsp.finish_us,
+            );
+        }
+        for w in &trace.windows {
+            sink.span(
+                tracks::net_queue(w.dim, w.path),
+                &format!("queue busy ({} pkts)", w.packets),
+                w.start_us,
+                w.end_us,
+            );
+        }
+        collapse_per_layer(jobs.iter().zip(results.iter()).map(|(j, r)| (j.layer, r.finish_us)))
+    }
+
+    fn phase_times_us(&self, call: &CollectiveCall<'_>) -> Vec<(usize, f64)> {
+        self.planner().phase_times_us(call)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{CollAlgo, CollectiveKind, MultiDimPolicy};
+    use crate::netsim::Analytical;
+    use crate::topology::DimCost;
+
+    fn spec(dim: usize, bytes: f64, latency_us: f64) -> FlowSpec {
+        FlowSpec { uses: vec![dim], bytes, latency_us }
+    }
+
+    fn one_dim_sim(cap: f64) -> PacketSim {
+        PacketSim {
+            caps: vec![cap],
+            widths: vec![1],
+            mtu: 4096.0,
+            depth: 64,
+            seed: 7,
+            max_packets: 4096,
+        }
+    }
+
+    #[test]
+    fn single_flow_alone_matches_fluid_rate() {
+        let sim = one_dim_sim(100.0);
+        let res = sim.run(&[(10.0, vec![spec(0, 1e6, 5.0)])]);
+        let expect = 10.0 + 5.0 + 1e6 / 100.0;
+        assert!(
+            (res[0].finish_us - expect).abs() < 1e-6 * expect,
+            "finish={} expect={expect}",
+            res[0].finish_us
+        );
+        assert!((res[0].served_bytes - 1e6).abs() < 1e-6);
+        assert_eq!(res[0].packets, (1e6_f64 / 4096.0).ceil() as u64);
+    }
+
+    #[test]
+    fn empty_and_latency_only_chains() {
+        let sim = one_dim_sim(100.0);
+        let res = sim.run(&[
+            (3.0, Vec::new()),
+            (0.0, vec![spec(0, 0.0, 7.5)]),
+            (0.0, vec![FlowSpec { uses: Vec::new(), bytes: 1e6, latency_us: 2.0 }]),
+        ]);
+        assert_eq!(res[0].finish_us, 3.0);
+        assert_eq!(res[1].finish_us, 7.5);
+        assert_eq!(res[2].finish_us, 2.0);
+        assert!(res.iter().all(|r| r.packets == 0 || r.served_bytes > 0.0));
+    }
+
+    #[test]
+    fn chain_flows_are_sequential_with_latency_before_data() {
+        let sim = one_dim_sim(50.0);
+        let res = sim.run(&[(0.0, vec![spec(0, 1e5, 2.0), spec(0, 2e5, 3.0)])]);
+        let expect = 2.0 + 1e5 / 50.0 + 3.0 + 2e5 / 50.0;
+        assert!(
+            (res[0].finish_us - expect).abs() < 1e-6 * expect,
+            "finish={} expect={expect}",
+            res[0].finish_us
+        );
+    }
+
+    #[test]
+    fn incast_serializes_at_the_port() {
+        let sim = one_dim_sim(100.0);
+        let solo = sim.run(&[(0.0, vec![spec(0, 1e6, 0.0)])])[0].finish_us;
+        let chains: Vec<(f64, Vec<FlowSpec>)> =
+            (0..4).map(|_| (0.0, vec![spec(0, 1e6, 0.0)])).collect();
+        let res = sim.run(&chains);
+        let makespan = res.iter().map(|r| r.finish_us).fold(0.0, f64::max);
+        assert!(
+            (makespan - 4.0 * solo).abs() < 1e-3 * makespan,
+            "makespan={makespan} expected ~{}",
+            4.0 * solo
+        );
+        // Round-robin service: every flow finishes within one packet
+        // service round of the others.
+        let first = res.iter().map(|r| r.finish_us).fold(f64::INFINITY, f64::min);
+        assert!(makespan - first <= 4.0 * 4096.0 / 100.0 + 1e-6);
+    }
+
+    #[test]
+    fn coarsening_conserves_bytes() {
+        let mut sim = one_dim_sim(1000.0);
+        sim.max_packets = 256;
+        let bytes = 3.5e9;
+        let res = sim.run(&[(0.0, vec![spec(0, bytes, 0.0)])]);
+        assert_eq!(res[0].packets, 256);
+        assert!((res[0].served_bytes - bytes).abs() < 1e-6 * bytes);
+        let expect = bytes / 1000.0;
+        assert!((res[0].finish_us - expect).abs() < 1e-6 * expect);
+    }
+
+    #[test]
+    fn queue_depth_is_work_conserving_for_one_flow() {
+        let mut shallow = one_dim_sim(100.0);
+        shallow.depth = 1;
+        let deep = one_dim_sim(100.0);
+        let chains = [(0.0, vec![spec(0, 1e6, 1.0)])];
+        let a = shallow.run(&chains);
+        let b = deep.run(&chains);
+        assert!((a[0].finish_us - b[0].finish_us).abs() < 1e-9 * b[0].finish_us);
+    }
+
+    #[test]
+    fn ecmp_assignment_is_reproducible_and_in_range() {
+        for flow in 0..64 {
+            let a = ecmp_path(42, 3, flow, 1, 4);
+            let b = ecmp_path(42, 3, flow, 1, 4);
+            assert_eq!(a, b);
+            assert!(a < 4);
+        }
+        assert_eq!(ecmp_path(42, 0, 0, 0, 1), 0);
+    }
+
+    #[test]
+    fn fifo_service_order_never_inverts() {
+        let sim = one_dim_sim(100.0);
+        let chains: Vec<(f64, Vec<FlowSpec>)> =
+            (0..3).map(|i| (i as f64, vec![spec(0, 5e5, 0.5)])).collect();
+        let mut record = Vec::new();
+        sim.run_recorded(&chains, &mut record);
+        assert!(!record.is_empty());
+        let mut last_finish = 0.0;
+        let mut per_flow: std::collections::HashMap<(usize, usize), u64> =
+            std::collections::HashMap::new();
+        for pkt in &record {
+            assert!(pkt.finish_us >= last_finish - 1e-9, "port service overlapped");
+            last_finish = pkt.finish_us;
+            let next = per_flow.entry((pkt.chain, pkt.flow)).or_insert(0);
+            assert_eq!(pkt.index, *next, "packet order inverted within a flow");
+            *next += 1;
+        }
+    }
+
+    fn topo() -> Topology {
+        Topology::from_arrays(
+            &[DimKind::Ring, DimKind::Switch],
+            &[4, 8],
+            &[200.0, 100.0],
+            &[0.5, 1.0],
+        )
+    }
+
+    fn span_of(topo: &Topology) -> Vec<(DimCost, usize)> {
+        topo.dims.iter().enumerate().map(|(d, nd)| (DimCost::from_dim(nd), d)).collect()
+    }
+
+    fn call<'a>(
+        topo: &'a Topology,
+        span: &'a [(DimCost, usize)],
+        algos: &'a [CollAlgo],
+        bytes: f64,
+        chunks: u32,
+    ) -> CollectiveCall<'a> {
+        CollectiveCall {
+            kind: CollectiveKind::AllReduce,
+            policy: MultiDimPolicy::Baseline,
+            algos,
+            span,
+            topology: topo,
+            bytes,
+            chunks,
+        }
+    }
+
+    #[test]
+    fn uncontended_single_job_drain_matches_lower_rungs() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        for chunks in [1u32, 4] {
+            let c = call(&topo, &span, &algos, 16e6, chunks);
+            let job = OverlapCall { layer: 0, issue_us: 10.0, call: c };
+            let a = Analytical.drain_overlapped(&[job], SchedulingPolicy::Fifo)[0].1;
+            let f = FlowLevel::default().drain_overlapped(&[job], SchedulingPolicy::Fifo)[0].1;
+            let p = PacketLevel::default().drain_overlapped(&[job], SchedulingPolicy::Fifo)[0].1;
+            assert!((p - f).abs() < 1e-6 * f, "chunks={chunks}: packet={p} flow={f}");
+            assert!((p - a).abs() < 1e-6 * a, "chunks={chunks}: packet={p} analytical={a}");
+        }
+    }
+
+    #[test]
+    fn blocking_collective_price_matches_flow_rung() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 64e6, 4);
+        let p = PacketLevel::new(PacketLevelConfig::oversubscribed(4.0));
+        let f = FlowLevel::new(FlowLevelConfig::oversubscribed(4.0));
+        assert_eq!(p.collective_time_us(&c), f.collective_time_us(&c));
+        assert_eq!(p.phase_times_us(&c), f.phase_times_us(&c));
+    }
+
+    #[test]
+    fn ecmp_collisions_never_speed_up_a_switch_drain() {
+        // Switch-only span: 6 identical single-flow chains on one
+        // dimension. Hashing them onto 4 equal-cost paths puts >= 2 on
+        // some path (pigeonhole) at cap/4 each, so the split drain can
+        // only be slower than the aggregate FIFO port.
+        let topo = topo();
+        let span = vec![(DimCost::from_dim(&topo.dims[1]), 1)];
+        let algos = [CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 16e6, 1);
+        let jobs: Vec<OverlapCall> =
+            (0..6).map(|l| OverlapCall { layer: l, issue_us: 0.0, call: c }).collect();
+        let aggregate = PacketLevel::default();
+        let split = PacketLevel::new(PacketLevelConfig::default().with_ecmp_width(4));
+        let last = |drain: Vec<(u64, f64)>| drain.iter().map(|(_, t)| *t).fold(0.0, f64::max);
+        let agg = last(aggregate.drain_overlapped(&jobs, SchedulingPolicy::Fifo));
+        let ecmp = last(split.drain_overlapped(&jobs, SchedulingPolicy::Fifo));
+        assert!(ecmp >= agg - 1e-6 * agg, "ecmp={ecmp} aggregate={agg}");
+    }
+
+    #[test]
+    fn traced_drain_matches_untraced_and_emits_queue_spans() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 16e6, 2);
+        let jobs: Vec<OverlapCall> =
+            (0..3).map(|l| OverlapCall { layer: l, issue_us: l as f64 * 5.0, call: c }).collect();
+        let backend = PacketLevel::new(PacketLevelConfig::oversubscribed(4.0));
+        let plain = backend.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        let rec = crate::obs::Recorder::new();
+        let traced = backend.drain_overlapped_traced(&jobs, SchedulingPolicy::Fifo, &rec);
+        assert_eq!(plain, traced, "tracing must not perturb completions");
+        let spans = rec.spans();
+        assert!(spans.iter().all(|s| s.pid == tracks::NET_PID));
+        assert!(spans.iter().any(|s| s.tid >= tracks::NET_QUEUE_BASE), "no queue spans");
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.tid >= tracks::NET_DIM_BASE && s.tid < tracks::NET_QUEUE_BASE),
+            "no flow spans"
+        );
+    }
+
+    #[test]
+    fn cache_tag_tracks_every_packet_parameter() {
+        let base = PacketLevel::default();
+        let variants = [
+            PacketLevel::new(PacketLevelConfig::oversubscribed(4.0)),
+            PacketLevel::new(PacketLevelConfig { mtu_bytes: 1500.0, ..Default::default() }),
+            PacketLevel::new(PacketLevelConfig { queue_depth: 8, ..Default::default() }),
+            PacketLevel::new(PacketLevelConfig::default().with_ecmp_width(4)),
+            PacketLevel::new(PacketLevelConfig::default().with_seed(99)),
+            PacketLevel::new(PacketLevelConfig {
+                max_packets_per_flow: 64,
+                ..Default::default()
+            }),
+        ];
+        for v in &variants {
+            assert_ne!(base.cache_tag(), v.cache_tag(), "{:?}", v.config);
+        }
+        assert_eq!(base.cache_tag(), PacketLevel::default().cache_tag());
+    }
+}

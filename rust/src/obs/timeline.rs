@@ -18,6 +18,8 @@ pub enum Rung {
     Analytical,
     /// Forced flow-level backend.
     FlowLevel,
+    /// Forced packet-level backend.
+    Packet,
 }
 
 impl Rung {
@@ -26,6 +28,7 @@ impl Rung {
             Rung::GenomeKnob => "genome-knob",
             Rung::Analytical => "analytical",
             Rung::FlowLevel => "flow-level",
+            Rung::Packet => "packet",
         }
     }
 
@@ -34,6 +37,7 @@ impl Rung {
             Rung::GenomeKnob => "dse.evals.rung.genome_knob",
             Rung::Analytical => "dse.evals.rung.analytical",
             Rung::FlowLevel => "dse.evals.rung.flow_level",
+            Rung::Packet => "dse.evals.rung.packet",
         }
     }
 }

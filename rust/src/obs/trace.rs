@@ -55,10 +55,22 @@ pub mod tracks {
     pub const FAULTS: Track = Track { pid: FAULT_PID, tid: 1 };
     /// First tid of the per-topology-dimension flow tracks.
     pub const NET_DIM_BASE: u32 = 16;
+    /// First tid of the per-(dimension, ECMP path) packet-queue tracks.
+    pub const NET_QUEUE_BASE: u32 = 64;
+    /// Queue tracks reserved per dimension (paths beyond this fold onto
+    /// the last track).
+    pub const NET_QUEUE_PORTS: u32 = 8;
 
     /// Track showing flow occupancy of topology dimension `dim`.
     pub fn net_dim(dim: usize) -> Track {
         Track { pid: NET_PID, tid: NET_DIM_BASE + dim as u32 }
+    }
+
+    /// Track showing packet-queue busy windows of `(dim, path)` on the
+    /// packet-level rung.
+    pub fn net_queue(dim: usize, path: usize) -> Track {
+        let port = (path as u32).min(NET_QUEUE_PORTS - 1);
+        Track { pid: NET_PID, tid: NET_QUEUE_BASE + dim as u32 * NET_QUEUE_PORTS + port }
     }
 
     /// Process name used in Chrome metadata events.
@@ -80,6 +92,11 @@ pub mod tracks {
             (SIM_PID, 4) => "gradient sync".to_string(),
             (NET_PID, 1) => "serial drain".to_string(),
             (FAULT_PID, 1) => "fault injection".to_string(),
+            (NET_PID, t) if t >= NET_QUEUE_BASE => format!(
+                "pkt queue dim {} port {}",
+                (t - NET_QUEUE_BASE) / NET_QUEUE_PORTS,
+                (t - NET_QUEUE_BASE) % NET_QUEUE_PORTS
+            ),
             (NET_PID, t) if t >= NET_DIM_BASE => format!("net dim {}", t - NET_DIM_BASE),
             (_, t) => format!("track {t}"),
         }

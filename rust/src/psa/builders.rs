@@ -23,17 +23,18 @@ pub mod names {
     pub const CKPT_INTERVAL: &str = "Checkpoint Interval";
 }
 
-/// Append the netsim "Network Fidelity" knob ({Analytical, FlowLevel})
-/// to any schema. The paper's Table 1/4 schemas ship without it (their
-/// cardinalities are asserted against the paper); opting in widens every
-/// agent's action space by one slot and lets the search trade simulation
-/// cost for congestion awareness — the PSS resolves the knob to the
-/// matching [`crate::netsim::NetworkBackend`] at evaluation time.
+/// Append the netsim "Network Fidelity" knob ({Analytical, FlowLevel,
+/// Packet}) to any schema. The paper's Table 1/4 schemas ship without
+/// it (their cardinalities are asserted against the paper); opting in
+/// widens every agent's action space by one slot and lets the search
+/// trade simulation cost for congestion awareness — the PSS resolves
+/// the knob to the matching [`crate::netsim::NetworkBackend`] at
+/// evaluation time.
 pub fn with_fidelity_param(mut schema: Schema) -> Schema {
     schema.params.push(ParamDef::scalar(
         names::NET_FIDELITY,
         Stack::Network,
-        Domain::cats(&["Analytical", "FlowLevel"]),
+        Domain::cats(&["Analytical", "FlowLevel", "Packet"]),
     ));
     schema
 }
@@ -230,7 +231,7 @@ mod tests {
         assert_eq!(with.genome_len(), base.genome_len() + 1);
         let p = with.param(names::NET_FIDELITY).expect("fidelity knob present");
         assert_eq!(p.stack, Stack::Network);
-        assert_eq!(p.domain.cardinality(), 2);
+        assert_eq!(p.domain.cardinality(), 3);
         // The paper schemas stay untouched.
         assert!(base.param(names::NET_FIDELITY).is_none());
     }

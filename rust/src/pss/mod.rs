@@ -217,6 +217,7 @@ impl Pss {
     pub fn fidelity_of(&self, point: &DesignPoint) -> FidelityMode {
         match point.get(names::NET_FIDELITY).and_then(|v| v.as_cat()) {
             Some(1) => FidelityMode::FlowLevel,
+            Some(2) => FidelityMode::Packet,
             _ => FidelityMode::Analytical,
         }
     }
@@ -339,11 +340,15 @@ mod tests {
         assert_eq!(g.len(), p.schema.genome_len());
         let point = p.schema.decode_valid(&g).unwrap();
         assert_eq!(p.fidelity_of(&point), FidelityMode::Analytical);
-        // Flip the last slot to FlowLevel.
+        // Flip the last slot to FlowLevel, then Packet.
         let mut g2 = g.clone();
         *g2.last_mut().unwrap() = 1;
         let point2 = p.schema.decode_valid(&g2).unwrap();
         assert_eq!(p.fidelity_of(&point2), FidelityMode::FlowLevel);
+        let mut g3 = g.clone();
+        *g3.last_mut().unwrap() = 2;
+        let point3 = p.schema.decode_valid(&g3).unwrap();
+        assert_eq!(p.fidelity_of(&point3), FidelityMode::Packet);
         // Materialization ignores the knob (same cluster either way).
         let (c1, _) = p.materialize(&point).unwrap();
         let (c2, _) = p.materialize(&point2).unwrap();

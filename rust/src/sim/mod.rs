@@ -281,6 +281,11 @@ impl Simulator {
         self.with_backend(Arc::new(FlowLevel::new(config)))
     }
 
+    /// Select the packet-level backend with explicit packet parameters.
+    pub fn with_packet_config(self, config: crate::netsim::PacketLevelConfig) -> Self {
+        self.with_backend(Arc::new(crate::netsim::PacketLevel::new(config)))
+    }
+
     /// The active network backend.
     pub fn backend(&self) -> &dyn NetworkBackend {
         self.backend.as_ref()

@@ -1,0 +1,424 @@
+//! Cross-fidelity conformance suite pinning the netsim fidelity ladder:
+//! the three rungs (Analytical, FlowLevel, PacketLevel) must agree
+//! exactly where congestion cannot bite (a single uncontended flow),
+//! order up the ladder where it can (oversubscribed switch fabrics
+//! under incast), and the packet rung's mechanics — byte conservation,
+//! per-port FIFO discipline, seeded ECMP, cache-tag-scoped determinism
+//! — must hold over randomized workloads (`util::prop`). A small golden
+//! corpus of end-to-end reports (one model x three fidelities x two
+//! fault seeds) pins run-to-run bit-reproducibility.
+
+use cosmic::collective::{CollAlgo, CollectiveKind, MultiDimPolicy, SchedulingPolicy};
+use cosmic::faults::{FaultScenario, FaultView, LinkFaults};
+use cosmic::netsim::{
+    ecmp_path, Analytical, CollectiveCall, FidelityMode, FlowLevel, FlowLevelConfig, FlowSpec,
+    NetworkBackend, OverlapCall, PacketLevel, PacketLevelConfig, PacketSim,
+};
+use cosmic::sim::{presets, ClusterConfig, Simulator};
+use cosmic::topology::{DimCost, DimKind, Topology};
+use cosmic::util::prop::check;
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, ModelConfig, Parallelization};
+use std::sync::Arc;
+
+fn topo() -> Topology {
+    let kinds = [DimKind::Ring, DimKind::Switch];
+    Topology::from_arrays(&kinds, &[4, 8], &[200.0, 100.0], &[0.5, 1.0])
+}
+
+fn span_of(topo: &Topology) -> Vec<(DimCost, usize)> {
+    topo.dims.iter().enumerate().map(|(d, nd)| (DimCost::from_dim(nd), d)).collect()
+}
+
+/// Switch-only span: a single dimension, where FIFO-port makespans are
+/// provably ordered (one shared resource, work conservation).
+fn switch_span(topo: &Topology) -> Vec<(DimCost, usize)> {
+    vec![(DimCost::from_dim(&topo.dims[1]), 1)]
+}
+
+fn call<'a>(
+    topo: &'a Topology,
+    span: &'a [(DimCost, usize)],
+    algos: &'a [CollAlgo],
+    bytes: f64,
+    chunks: u32,
+) -> CollectiveCall<'a> {
+    CollectiveCall {
+        kind: CollectiveKind::AllReduce,
+        policy: MultiDimPolicy::Baseline,
+        algos,
+        span,
+        topology: topo,
+        bytes,
+        chunks,
+    }
+}
+
+fn makespan(pairs: Vec<(u64, f64)>) -> f64 {
+    pairs.iter().map(|(_, t)| *t).fold(0.0, f64::max)
+}
+
+fn setup() -> (ClusterConfig, ModelConfig, Parallelization) {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).unwrap();
+    (cluster, model, par)
+}
+
+// ---------------------------------------------------------------------------
+// Exact agreement where congestion cannot bite.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uncontended_flow_costs_agree_on_all_three_rungs() {
+    let topo = topo();
+    let span = span_of(&topo);
+    let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+    let rungs: [Arc<dyn NetworkBackend>; 3] = [
+        Arc::new(Analytical),
+        Arc::new(FlowLevel::default()),
+        Arc::new(PacketLevel::default()),
+    ];
+    for chunks in [1u32, 4] {
+        let c = call(&topo, &span, &algos, 16e6, chunks);
+        let base = rungs[0].collective_time_us(&c);
+        assert!(base > 0.0);
+        for b in &rungs {
+            let t = b.collective_time_us(&c);
+            assert!(
+                (t - base).abs() < 1e-6 * base,
+                "chunks={chunks} {}: blocking {t} vs analytical {base}",
+                b.name()
+            );
+        }
+        let job = OverlapCall { layer: 0, issue_us: 10.0, call: c };
+        let d0 = rungs[0].drain_overlapped(&[job], SchedulingPolicy::Fifo)[0].1;
+        for b in &rungs {
+            let d = b.drain_overlapped(&[job], SchedulingPolicy::Fifo)[0].1;
+            assert!(
+                (d - d0).abs() < 1e-6 * d0,
+                "chunks={chunks} {}: drain {d} vs analytical {d0}",
+                b.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ordering up the ladder where congestion does bite.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn contended_switch_drain_orders_up_the_ladder() {
+    // Six identical chains on one 4:1 oversubscribed switch dimension:
+    // the analytical rung prices each job at nominal rate, the fluid
+    // rung shares a quartered capacity, and the packet rung serves the
+    // same quartered port FIFO — so costs can only grow up the ladder.
+    let topo = topo();
+    let span = switch_span(&topo);
+    let algos = [CollAlgo::Rhd];
+    let c = call(&topo, &span, &algos, 16e6, 1);
+    let jobs: Vec<OverlapCall> =
+        (0..6).map(|l| OverlapCall { layer: l, issue_us: 0.0, call: c }).collect();
+    let a = makespan(Analytical.drain_overlapped(&jobs, SchedulingPolicy::Fifo));
+    let f = makespan(
+        FlowLevel::new(FlowLevelConfig::oversubscribed(4.0))
+            .drain_overlapped(&jobs, SchedulingPolicy::Fifo),
+    );
+    let p = makespan(
+        PacketLevel::new(PacketLevelConfig::oversubscribed(4.0))
+            .drain_overlapped(&jobs, SchedulingPolicy::Fifo),
+    );
+    assert!(f >= a - 1e-6 * a, "flow {f} came out below analytical {a}");
+    // Packet-granular round-robin can overlap a chain's inter-phase
+    // latency gap with another chain's service, undercutting the fully
+    // synchronized fluid schedule by up to one packet time per phase —
+    // a sub-0.1% effect here, hence the wider guard band.
+    assert!(p >= f - 1e-3 * f, "packet {p} came out below flow {f}");
+    assert!(f > 1.5 * a, "4:1 oversubscription failed to bite: flow {f} vs analytical {a}");
+}
+
+#[test]
+fn simulator_latency_orders_up_the_ladder_end_to_end() {
+    let (cluster, model, par) = setup();
+    let run = |sim: Simulator| {
+        sim.run(&cluster, &model, &par, 1024, ExecutionMode::Training).unwrap().latency_us
+    };
+    let a = run(Simulator::new());
+    let f = run(Simulator::new().with_flow_config(FlowLevelConfig::oversubscribed(4.0)));
+    let p = run(Simulator::new().with_packet_config(PacketLevelConfig::oversubscribed(4.0)));
+    assert!(a > 0.0 && f.is_finite() && p.is_finite());
+    // Multi-dimensional drains overlap phases across dims, so the
+    // congested rungs are compared against the analytical screen with
+    // the same hedge the staged-search acceptance test uses: they must
+    // not come out meaningfully *faster*.
+    assert!(f >= 0.95 * a, "flow-level on an oversubscribed fabric came out faster: {f} vs {a}");
+    assert!(p >= 0.95 * a, "packet-level on an oversubscribed fabric came out faster: {p} vs {a}");
+}
+
+// ---------------------------------------------------------------------------
+// Monotonicity at the packet rung.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packet_makespan_is_monotone_in_background_load() {
+    let topo = topo();
+    let span = switch_span(&topo);
+    let algos = [CollAlgo::Rhd];
+    let c = call(&topo, &span, &algos, 16e6, 2);
+    let jobs: Vec<OverlapCall> =
+        (0..4).map(|l| OverlapCall { layer: l, issue_us: 0.0, call: c }).collect();
+    let mut prev = 0.0;
+    for load in [0.0, 0.3, 0.6] {
+        let backend = PacketLevel::new(PacketLevelConfig {
+            fabric: FlowLevelConfig::default().with_background_load(load),
+            ..Default::default()
+        });
+        let m = makespan(backend.drain_overlapped(&jobs, SchedulingPolicy::Fifo));
+        assert!(m >= prev - 1e-6 * m, "load {load}: makespan {m} fell below {prev}");
+        prev = m;
+    }
+}
+
+#[test]
+fn packet_makespan_is_monotone_in_concurrent_flow_count() {
+    let topo = topo();
+    let span = switch_span(&topo);
+    let algos = [CollAlgo::Rhd];
+    let c = call(&topo, &span, &algos, 16e6, 1);
+    let backend = PacketLevel::default();
+    let mut prev = 0.0;
+    for n in [1u64, 2, 4, 8] {
+        let jobs: Vec<OverlapCall> =
+            (0..n).map(|l| OverlapCall { layer: l, issue_us: 0.0, call: c }).collect();
+        let m = makespan(backend.drain_overlapped(&jobs, SchedulingPolicy::Fifo));
+        assert!(m >= prev - 1e-6 * m, "{n} flows: makespan {m} fell below {prev}");
+        prev = m;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packet-rung mechanics over randomized workloads.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_packet_bytes_are_conserved() {
+    let topo = topo();
+    check("packet byte conservation", 24, |rng| {
+        let config = PacketLevelConfig {
+            mtu_bytes: [512.0, 1500.0, 4096.0][rng.gen_range(3)],
+            queue_depth: 1 + rng.gen_range(64),
+            ecmp_width: 1 + rng.gen_range(4),
+            seed: rng.next_u64(),
+            max_packets_per_flow: 16 + rng.gen_range(64),
+            ..Default::default()
+        };
+        let sim = PacketSim::new(&topo, &config);
+        let chains: Vec<(f64, Vec<FlowSpec>)> = (0..1 + rng.gen_range(4))
+            .map(|_| {
+                let flows = (0..1 + rng.gen_range(3))
+                    .map(|_| FlowSpec {
+                        uses: vec![rng.gen_range(2)],
+                        bytes: rng.gen_f64() * 2e6,
+                        latency_us: rng.gen_f64() * 3.0,
+                    })
+                    .collect();
+                (rng.gen_f64() * 10.0, flows)
+            })
+            .collect();
+        let sent: f64 = chains.iter().flat_map(|(_, fs)| fs.iter().map(|f| f.bytes)).sum();
+        let served: f64 = sim.run(&chains).iter().map(|r| r.served_bytes).sum();
+        if (served - sent).abs() > 1e-9 * sent.max(1.0) {
+            return Err(format!("served {served} bytes of {sent} sent"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fifo_port_service_never_inverts() {
+    let topo = topo();
+    check("per-port FIFO ordering", 16, |rng| {
+        let config = PacketLevelConfig {
+            ecmp_width: 1 + rng.gen_range(4),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let sim = PacketSim::new(&topo, &config);
+        let chains: Vec<(f64, Vec<FlowSpec>)> = (0..2 + rng.gen_range(4))
+            .map(|_| {
+                let flow = FlowSpec {
+                    uses: vec![rng.gen_range(2)],
+                    bytes: 1e5 + rng.gen_f64() * 1e6,
+                    latency_us: rng.gen_f64(),
+                };
+                (rng.gen_f64() * 5.0, vec![flow])
+            })
+            .collect();
+        let mut served = Vec::new();
+        sim.run_recorded(&chains, &mut served);
+        if served.is_empty() {
+            return Err("no packets served".into());
+        }
+        // Packets are recorded in service order: per port the service
+        // intervals must tile without overlap, and per flow the packet
+        // indexes must increase — a FIFO port never inverts them.
+        let mut port_last: Vec<((usize, usize), f64)> = Vec::new();
+        let mut flow_last: Vec<((usize, usize), u64)> = Vec::new();
+        for p in &served {
+            let port = (p.dim, p.path);
+            match port_last.iter_mut().find(|(k, _)| *k == port) {
+                Some((_, end)) => {
+                    if p.start_us < *end - 1e-9 {
+                        return Err(format!(
+                            "port {port:?}: packet started at {} before previous finish {end}",
+                            p.start_us
+                        ));
+                    }
+                    *end = p.finish_us;
+                }
+                None => port_last.push((port, p.finish_us)),
+            }
+            let flow = (p.chain, p.flow);
+            match flow_last.iter_mut().find(|(k, _)| *k == flow) {
+                Some((_, idx)) => {
+                    if p.index <= *idx {
+                        return Err(format!("flow {flow:?}: index {} after {idx}", p.index));
+                    }
+                    *idx = p.index;
+                }
+                None => flow_last.push((flow, p.index)),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ecmp_paths_are_reproducible_and_bounded() {
+    check("ecmp path determinism", 200, |rng| {
+        let seed = rng.next_u64();
+        let chain = rng.gen_range(64);
+        let flow = rng.gen_range(16);
+        let dim = rng.gen_range(4);
+        let width = rng.gen_range(6);
+        let p = ecmp_path(seed, chain, flow, dim, width);
+        if p != ecmp_path(seed, chain, flow, dim, width) {
+            return Err(format!("path for seed {seed:#x} not reproducible"));
+        }
+        if width <= 1 && p != 0 {
+            return Err(format!("width {width} must pin path 0, got {p}"));
+        }
+        if width > 1 && p >= width {
+            return Err(format!("path {p} out of range for width {width}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_equal_cache_tags_mean_bit_identical_drains() {
+    let topo = topo();
+    let span = span_of(&topo);
+    let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+    check("same tag, same drain", 12, |rng| {
+        let config = PacketLevelConfig {
+            mtu_bytes: [1500.0, 4096.0][rng.gen_range(2)],
+            queue_depth: 1 + rng.gen_range(32),
+            ecmp_width: 1 + rng.gen_range(4),
+            seed: rng.next_u64() % 1000,
+            ..Default::default()
+        };
+        let a = PacketLevel::new(config.clone());
+        let b = PacketLevel::new(config);
+        if a.cache_tag() != b.cache_tag() {
+            return Err("equal configs hashed to different tags".into());
+        }
+        let bytes = 4e6 + rng.gen_f64() * 4e6;
+        let chunks = (1 + rng.gen_range(4)) as u32;
+        let c = call(&topo, &span, &algos, bytes, chunks);
+        let jobs: Vec<OverlapCall> =
+            (0..3).map(|l| OverlapCall { layer: l, issue_us: l as f64 * 2.0, call: c }).collect();
+        let da = a.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        let db = b.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        if da.len() != db.len() {
+            return Err(format!("drain lengths differ: {} vs {}", da.len(), db.len()));
+        }
+        for ((la, ta), (lb, tb)) in da.iter().zip(db.iter()) {
+            if la != lb || ta.to_bits() != tb.to_bits() {
+                return Err(format!("layer {la}: {ta} vs {tb} not bit-identical"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cache-tag distinctness across the ladder (and its faulted views).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cache_tags_are_pairwise_distinct_across_the_ladder() {
+    let links = LinkFaults { bandwidth_factor: vec![0.5, 1.0], latency_factor: vec![1.0, 2.0] };
+    let backends: Vec<(&str, Arc<dyn NetworkBackend>)> = vec![
+        ("analytical", Arc::new(Analytical)),
+        ("flow", Arc::new(FlowLevel::default())),
+        ("flow-4x", Arc::new(FlowLevel::new(FlowLevelConfig::oversubscribed(4.0)))),
+        ("packet", Arc::new(PacketLevel::default())),
+        ("packet-4x", Arc::new(PacketLevel::new(PacketLevelConfig::oversubscribed(4.0)))),
+    ];
+    let mut tagged: Vec<(String, u64)> =
+        backends.iter().map(|(n, b)| (n.to_string(), b.cache_tag())).collect();
+    for (n, b) in &backends {
+        let view = FaultView::wrap(Arc::clone(b), &links);
+        tagged.push((format!("faulted-{n}"), view.cache_tag()));
+    }
+    for i in 0..tagged.len() {
+        for j in i + 1..tagged.len() {
+            assert_ne!(
+                tagged[i].1,
+                tagged[j].1,
+                "{} and {} share a cache tag",
+                tagged[i].0,
+                tagged[j].0
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden corpus: run-to-run bit-reproducibility end to end.
+// ---------------------------------------------------------------------------
+
+fn corpus() -> Vec<String> {
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    let fidelities = [FidelityMode::Analytical, FidelityMode::FlowLevel, FidelityMode::Packet];
+    let mut out = Vec::new();
+    for fid in fidelities {
+        for seed in [3u64, 7] {
+            let sim = Simulator::new()
+                .with_fidelity(fid)
+                .with_faults(Arc::new(FaultScenario::from_seed(seed, dims)));
+            let rep = sim.run(&cluster, &model, &par, 1024, ExecutionMode::Training).unwrap();
+            out.push(format!(
+                "{}/seed{}: latency_bits={:016x} {:?}",
+                fid.name(),
+                seed,
+                rep.latency_us.to_bits(),
+                rep
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_corpus_is_run_to_run_deterministic() {
+    let first = corpus();
+    let second = corpus();
+    assert_eq!(first.len(), 6, "one model x three fidelities x two fault seeds");
+    for (a, b) in first.iter().zip(second.iter()) {
+        assert_eq!(a, b, "corpus entry drifted between identical runs");
+    }
+}
