@@ -24,6 +24,13 @@
 //!    a hard gate requires the fault layer to be zero-cost when
 //!    disabled: a fault-free report must be bit-identical to a
 //!    nominal-scenario report with its goodput record stripped.
+//! 5. **Traffic suite evaluation** — evaluations/second through a
+//!    traffic environment (nominal + 2 seeded diurnal co-tenant traces
+//!    per point, `Environment::with_traffic_suite`); the rate is
+//!    advisory, with two hard gates: the traffic layer must be
+//!    zero-cost when idle (a nominal trace reproduces the trace-free
+//!    report bit for bit), and a flat co-tenant must price exactly like
+//!    the fabric's scalar `background_load` knob (same float path).
 //!
 //! Usage: `cargo bench --bench eval_throughput [-- --smoke] [-- --out FILE]`
 //! `--smoke` shrinks the workload for CI and keeps the regression
@@ -36,8 +43,8 @@ use cosmic::dse::{
     DseConfig, DseRunner, Environment, Objective, RobustAggregate, SearchStrategy, WorkloadSpec,
 };
 use cosmic::faults::FaultScenario;
-use cosmic::harness::{make_env, make_env_robust};
-use cosmic::netsim::{FidelityMode, FlowLevelConfig};
+use cosmic::harness::{make_env, make_env_robust, make_env_traffic};
+use cosmic::netsim::{FidelityMode, FlowLevelConfig, TrafficTrace};
 use cosmic::obs::Recorder;
 use cosmic::pss::SearchScope;
 use cosmic::sim::{presets, Simulator};
@@ -224,6 +231,58 @@ fn main() {
     assert!(nominal_report.goodput.is_some(), "nominal scenario lost its goodput record");
     nominal_report.goodput = None;
 
+    // --- 5: multi-tenant traffic suite evaluation throughput ---
+    let traffic_env = make_env_traffic(
+        presets::system2(),
+        vec![WorkloadSpec::training(wl::gpt3_175b().with_simulated_layers(8), 2048)],
+        Objective::PerfPerBwPerNpu,
+        "diurnal",
+        7,
+        2,
+        RobustAggregate::Expected,
+    )
+    .unwrap();
+    let traffic_space = traffic_env.pss.build_space(SearchScope::FullStack);
+    let mut rng = Rng::seed_from_u64(31);
+    let traffic_genomes: Vec<Vec<usize>> =
+        (0..n_suite).filter_map(|_| traffic_space.random_valid_genome(&mut rng, 500)).collect();
+    assert!(!traffic_genomes.is_empty(), "sampled no valid traffic genomes");
+    let t0 = Instant::now();
+    for g in &traffic_genomes {
+        black_box(traffic_env.evaluate_nomemo(g));
+    }
+    let traffic_s = t0.elapsed().as_secs_f64();
+    let traffic_rate = traffic_genomes.len() as f64 / traffic_s;
+    let traffic_len = traffic_env.traffic_suite().map(|(s, _)| s.len()).unwrap_or(0);
+    println!(
+        "\ntraffic suite evaluation ({} traces/point): {traffic_rate:>8.0} evals/s \
+         ({} points, {} traffic evals; advisory)",
+        traffic_len,
+        traffic_genomes.len(),
+        traffic_env.traffic_evals()
+    );
+
+    // Traffic-layer zero-cost check (hard gate below): an idle co-tenant
+    // trace must reproduce the trace-free report bit for bit.
+    let idle_sim = Simulator::new().with_traffic(Arc::new(TrafficTrace::nominal()));
+    let idle_report =
+        idle_sim.run(&cluster, &model, &par, 2048, ExecutionMode::Training).unwrap();
+
+    // Uniform-trace pin (hard gate below): a flat co-tenant at util u
+    // must take the same floating-point path as the fabric's scalar
+    // background-load knob on the flow rung.
+    let dims = cluster.topology.num_dims();
+    let bg_util = 0.3;
+    let bg_report = Simulator::new()
+        .with_flow_config(FlowLevelConfig::default().with_background_load(bg_util))
+        .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+        .unwrap();
+    let uniform_report = Simulator::new()
+        .with_fidelity(FidelityMode::FlowLevel)
+        .with_traffic(Arc::new(TrafficTrace::uniform(dims, bg_util)))
+        .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+        .unwrap();
+
     // --- regression gates (computed first so the JSON records them) ---
     // Smoke thresholds are deliberately loose: same-process ratios on a
     // noisy shared runner, never validated on this hardware before CI.
@@ -261,6 +320,9 @@ fn main() {
         ("suite_scenarios", suite_len.to_string()),
         ("suite_points", suite_genomes.len().to_string()),
         ("suite_evals_per_s", format!("{suite_rate:.1}")),
+        ("traffic_traces", traffic_len.to_string()),
+        ("traffic_points", traffic_genomes.len().to_string()),
+        ("traffic_evals_per_s", format!("{traffic_rate:.1}")),
     ];
     let body: Vec<String> =
         fields.iter().map(|(k, v)| format!("  \"{k}\": {v}")).collect();
@@ -293,6 +355,17 @@ fn main() {
     // report must match the fault-free run bit for bit.
     if plain_report.as_ref() != Some(&nominal_report) {
         failures.push("nominal fault scenario perturbed the fault-free report".to_string());
+    }
+    // Deterministic gate: the traffic layer is zero-cost when idle — an
+    // all-zero co-tenant trace must reproduce the trace-free report bit
+    // for bit (the view unwraps to the bare backend).
+    if plain_report.as_ref() != Some(&idle_report) {
+        failures.push("idle traffic trace perturbed the trace-free report".to_string());
+    }
+    // Deterministic gate: a flat co-tenant is the background-load knob —
+    // same per-dim degradation, same float path, bit-identical report.
+    if bg_report != uniform_report {
+        failures.push("uniform traffic trace diverged from scalar background load".to_string());
     }
     if warm_speedup < min_warm {
         failures.push(format!("warm-cache speedup {warm_speedup:.2}x < {min_warm}x"));

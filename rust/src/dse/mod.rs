@@ -19,7 +19,7 @@ pub use reward::{reward_from_report, Objective};
 
 use crate::agents::{Agent, AgentKind};
 use crate::faults::{FaultScenario, ScenarioSuite};
-use crate::netsim::{FidelityMode, FlowLevelConfig};
+use crate::netsim::{FidelityMode, FlowLevelConfig, TrafficSuite, TrafficTrace};
 use crate::obs::{
     invalid_category, CacheOutcome, MetricsRegistry, Rung, SearchObserver, SearchStepRecord,
 };
@@ -135,6 +135,15 @@ struct RobustConfig {
     scenarios: Vec<Arc<FaultScenario>>,
 }
 
+/// Traffic-mode state: the co-tenant trace suite every evaluation sweeps,
+/// plus the fold. Composes with [`RobustConfig`] as a cross-join: each
+/// fault scenario runs every trace, traces fold first (this aggregate),
+/// then scenarios fold (the fault aggregate).
+struct TrafficConfig {
+    suite: TrafficSuite,
+    aggregate: RobustAggregate,
+}
+
 /// The environment side of the loop (PSS "Environment Side
 /// Configuration"): cost model + action/observation spaces + constraints.
 pub struct Environment {
@@ -160,6 +169,12 @@ pub struct Environment {
     /// Robust mode: when set, every evaluation runs the whole fault
     /// suite and aggregates — see [`Environment::with_scenarios`].
     robust: Option<RobustConfig>,
+    /// Traffic mode: when set, every evaluation sweeps the co-tenant
+    /// trace suite — see [`Environment::with_traffic_suite`].
+    traffic: Option<TrafficConfig>,
+    /// Seed for traces requested by the genome's PsA "Traffic Profile"
+    /// knob ([`crate::psa::with_traffic_param`]).
+    traffic_seed: u64,
     evals: AtomicU64,
     cache_hits: AtomicU64,
     invalid: AtomicU64,
@@ -167,6 +182,7 @@ pub struct Environment {
     packet_evals: AtomicU64,
     eval_panics: AtomicU64,
     suite_evals: AtomicU64,
+    traffic_evals: AtomicU64,
 }
 
 /// Outcome of evaluating one genome.
@@ -221,6 +237,8 @@ impl Environment {
             cache: (0..CACHE_SHARDS * FIDELITY_TAGS).map(|_| Mutex::new(HashMap::new())).collect(),
             eval_cache: EvalCache::new(),
             robust: None,
+            traffic: None,
+            traffic_seed: 0,
             evals: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             invalid: AtomicU64::new(0),
@@ -228,6 +246,7 @@ impl Environment {
             packet_evals: AtomicU64::new(0),
             eval_panics: AtomicU64::new(0),
             suite_evals: AtomicU64::new(0),
+            traffic_evals: AtomicU64::new(0),
         }
     }
 
@@ -280,6 +299,44 @@ impl Environment {
         self.robust.as_ref().map(|r| (&r.suite, r.aggregate))
     }
 
+    /// Pin one co-tenant traffic trace on every evaluation (builder
+    /// style) — the deterministic "simulate under this load" mode. A
+    /// nominal trace is accepted and is a no-op (the backend wrapper is
+    /// skipped), so callers can thread an optional trace unconditionally.
+    /// Equivalent to [`Environment::with_traffic_suite`] with a
+    /// single-member suite.
+    pub fn with_traffic(self, trace: Arc<TrafficTrace>) -> Self {
+        self.with_traffic_suite(TrafficSuite { traces: vec![trace] }, RobustAggregate::Expected)
+    }
+
+    /// Enable traffic-sweep mode (builder style): every evaluation runs
+    /// each trace of `suite` and folds the per-trace rewards with
+    /// `aggregate`. Composes with [`Environment::with_scenarios`] as a
+    /// cross-join — each fault scenario runs every trace; traces fold
+    /// first (with this aggregate), then scenarios fold (with the fault
+    /// aggregate) — so `Expected∘Expected` is the grand mean and
+    /// `WorstCase∘WorstCase` the grand minimum. Cache keys stay correct:
+    /// the trace fingerprint flows into the backend `cache_tag` and the
+    /// collective keys' `traffic` field. When a suite is active it takes
+    /// precedence over the genome's PsA "Traffic Profile" knob.
+    pub fn with_traffic_suite(mut self, suite: TrafficSuite, aggregate: RobustAggregate) -> Self {
+        assert!(!suite.is_empty(), "traffic suite needs at least one trace");
+        self.traffic = Some(TrafficConfig { suite, aggregate });
+        self
+    }
+
+    /// Seed for traces generated on demand by the genome's PsA
+    /// "Traffic Profile" knob (builder style; default 0).
+    pub fn with_traffic_seed(mut self, seed: u64) -> Self {
+        self.traffic_seed = seed;
+        self
+    }
+
+    /// The active traffic suite and aggregate, if traffic mode is on.
+    pub fn traffic_suite(&self) -> Option<(&TrafficSuite, RobustAggregate)> {
+        self.traffic.as_ref().map(|t| (&t.suite, t.aggregate))
+    }
+
     /// Genomes evaluated (cache misses).
     pub fn evals(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
@@ -319,6 +376,12 @@ impl Environment {
         self.suite_evals.load(Ordering::Relaxed)
     }
 
+    /// Evaluations that simulated under co-tenant traffic (a configured
+    /// suite or a genome traffic knob) — the traffic-sweep cost counter.
+    pub fn traffic_evals(&self) -> u64 {
+        self.traffic_evals.load(Ordering::Relaxed)
+    }
+
     /// Hit/miss counters of the cross-evaluation trace/collective cache.
     pub fn eval_cache_stats(&self) -> EvalCacheStats {
         self.eval_cache.stats()
@@ -344,8 +407,12 @@ impl Environment {
         metrics.set_counter("env.packet_evals", self.packet_evals());
         metrics.set_counter("env.eval_panics", self.eval_panics());
         metrics.set_counter("env.suite_evals", self.suite_evals());
+        metrics.set_counter("env.traffic_evals", self.traffic_evals());
         if let Some((suite, _)) = self.scenario_suite() {
             metrics.set_counter("env.fault_scenarios", suite.len() as u64);
+        }
+        if let Some((suite, _)) = self.traffic_suite() {
+            metrics.set_counter("env.traffic_traces", suite.len() as u64);
         }
         let s = self.eval_cache_stats();
         metrics.set_counter("evalcache.trace_hits", s.trace_hits);
@@ -534,12 +601,22 @@ impl Environment {
             }
         };
         let fidelity = forced.unwrap_or_else(|| self.pss.fidelity_of(&point));
+        let knob_trace = match self.knob_trace(&point, &cluster) {
+            Ok(t) => t,
+            Err(e) => {
+                return StepOutcome { reward: 0.0, reports: Vec::new(), invalid_reason: Some(e) }
+            }
+        };
+        if self.traffic.is_some() || knob_trace.is_some() {
+            self.traffic_evals.fetch_add(1, Ordering::Relaxed);
+        }
         let mut priced_any = false;
         let outcome = if let Some(robust) = &self.robust {
             self.suite_evals.fetch_add(1, Ordering::Relaxed);
             let ckpt = self.pss.checkpoint_interval_of(&point);
             match self.robust_outcomes(
                 robust,
+                knob_trace.as_ref(),
                 &cluster,
                 &par,
                 ckpt,
@@ -565,7 +642,14 @@ impl Environment {
                 FidelityMode::Packet => &self.packet_simulator,
                 FidelityMode::Analytical => &self.simulator,
             };
-            self.simulate_point(sim, &cluster, &par, use_eval_cache, &mut priced_any)
+            self.simulate_traffic_point(
+                sim,
+                knob_trace.as_ref(),
+                &cluster,
+                &par,
+                use_eval_cache,
+                &mut priced_any,
+            )
         };
         // Count flow/packet-level *simulations*, not attempts:
         // preflight/trace rejects never touch the expensive backends.
@@ -576,6 +660,65 @@ impl Environment {
             self.packet_evals.fetch_add(1, Ordering::Relaxed);
         }
         outcome
+    }
+
+    /// The trace the genome's PsA "Traffic Profile" knob asks for, if
+    /// any. `None` when the schema has no knob, the knob sits on its
+    /// "None" slot, or a configured suite overrides it
+    /// ([`Environment::with_traffic_suite`] takes precedence).
+    fn knob_trace(
+        &self,
+        point: &crate::psa::DesignPoint,
+        cluster: &ClusterConfig,
+    ) -> Result<Option<Arc<TrafficTrace>>, String> {
+        if self.traffic.is_some() {
+            return Ok(None);
+        }
+        match self.pss.traffic_profile_of(point) {
+            None => Ok(None),
+            Some(profile) => TrafficTrace::from_profile(
+                profile,
+                self.traffic_seed,
+                cluster.topology.dims.len(),
+            )
+            .map(|t| Some(Arc::new(t))),
+        }
+    }
+
+    /// [`Environment::simulate_point`] under the active traffic mode:
+    /// sweep the configured suite (fold rewards with its aggregate; the
+    /// head trace — nominal, for generated suites — supplies the
+    /// reports), or attach the genome-knob trace, or run traffic-free.
+    fn simulate_traffic_point(
+        &self,
+        sim: &Simulator,
+        knob_trace: Option<&Arc<TrafficTrace>>,
+        cluster: &ClusterConfig,
+        par: &Parallelization,
+        use_eval_cache: bool,
+        priced_any: &mut bool,
+    ) -> StepOutcome {
+        if let Some(tc) = &self.traffic {
+            let mut rewards = Vec::with_capacity(tc.suite.len());
+            let mut reports = Vec::new();
+            for (i, trace) in tc.suite.traces.iter().enumerate() {
+                let ts = sim.clone().with_traffic(Arc::clone(trace));
+                let out = self.simulate_point(&ts, cluster, par, use_eval_cache, priced_any);
+                if out.invalid_reason.is_some() {
+                    return out;
+                }
+                if i == 0 {
+                    reports = out.reports;
+                }
+                rewards.push(out.reward);
+            }
+            StepOutcome { reward: tc.aggregate.combine(&rewards), reports, invalid_reason: None }
+        } else if let Some(trace) = knob_trace {
+            let ts = sim.clone().with_traffic(Arc::clone(trace));
+            self.simulate_point(&ts, cluster, par, use_eval_cache, priced_any)
+        } else {
+            self.simulate_point(sim, cluster, par, use_eval_cache, priced_any)
+        }
     }
 
     fn simulate_point(
@@ -658,6 +801,7 @@ impl Environment {
     fn robust_outcomes(
         &self,
         robust: &RobustConfig,
+        knob_trace: Option<&Arc<TrafficTrace>>,
         cluster: &ClusterConfig,
         par: &Parallelization,
         ckpt: Option<u64>,
@@ -674,7 +818,10 @@ impl Environment {
         for scenario in &robust.scenarios {
             let sim =
                 base.clone().with_faults(Arc::clone(scenario)).with_checkpoint_interval(ckpt);
-            let out = self.simulate_point(&sim, cluster, par, use_eval_cache, priced_any);
+            // Traffic crosses the suite: each scenario sweeps every trace
+            // (folded by the traffic aggregate) before scenarios fold.
+            let out =
+                self.simulate_traffic_point(&sim, knob_trace, cluster, par, use_eval_cache, priced_any);
             if out.invalid_reason.is_some() {
                 return Err(out);
             }
@@ -702,10 +849,23 @@ impl Environment {
         let (cluster, par) = self.pss.materialize(&point)?;
         let fidelity = forced.unwrap_or_else(|| self.pss.fidelity_of(&point));
         let ckpt = self.pss.checkpoint_interval_of(&point);
+        let knob_trace = self.knob_trace(&point, &cluster)?;
+        if self.traffic.is_some() || knob_trace.is_some() {
+            self.traffic_evals.fetch_add(1, Ordering::Relaxed);
+        }
         let mut priced_any = false;
         self.suite_evals.fetch_add(1, Ordering::Relaxed);
         let outcomes = self
-            .robust_outcomes(robust, &cluster, &par, ckpt, fidelity, true, &mut priced_any)
+            .robust_outcomes(
+                robust,
+                knob_trace.as_ref(),
+                &cluster,
+                &par,
+                ckpt,
+                fidelity,
+                true,
+                &mut priced_any,
+            )
             .map_err(|inv| inv.invalid_reason.unwrap_or_else(|| "invalid design".to_string()))?;
         let mut scores = Vec::with_capacity(outcomes.len());
         for (scenario, out) in robust.suite.scenarios.iter().zip(outcomes.iter()) {
@@ -1628,6 +1788,127 @@ mod tests {
             assert_eq!(r.history.len(), 8, "{strategy:?}");
             assert!(env.suite_evals() > 0, "{strategy:?} never ran the suite");
         }
+    }
+
+    /// A paper schema extended with the traffic knob, no suites.
+    fn make_traffic_knob_env() -> Environment {
+        let pss = Pss::new(
+            crate::psa::with_traffic_param(paper_table4_schema(1024, 4)),
+            presets::system2(),
+            Parallelization::derive(1024, 64, 4, 1, true).unwrap(),
+        );
+        let model = wl::gpt3_175b().with_simulated_layers(4);
+        Environment::new(
+            pss,
+            vec![WorkloadSpec::training(model, 2048)],
+            Objective::PerfPerBwPerNpu,
+        )
+    }
+
+    #[test]
+    fn nominal_traffic_is_bit_identical_to_traffic_free() {
+        let plain = make_env(Objective::PerfPerBwPerNpu);
+        let g = plain.pss.baseline_genome();
+        let nominal = make_env(Objective::PerfPerBwPerNpu)
+            .with_traffic(Arc::new(TrafficTrace::nominal()));
+        let a = plain.evaluate_nomemo(&g);
+        let b = nominal.evaluate_nomemo(&g);
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+        assert_eq!(a.reports, b.reports);
+        // A nominal trace still counts as a traffic evaluation.
+        assert_eq!(nominal.traffic_evals(), 1);
+    }
+
+    #[test]
+    fn traffic_suite_reward_bounded_by_nominal() {
+        let plain = make_env(Objective::PerfPerBwPerNpu);
+        let g = plain.pss.baseline_genome();
+        let nominal = plain.evaluate(&g).reward;
+        let suite = || TrafficSuite::generate("diurnal", 11, 2, 4).unwrap();
+        let expected = make_env(Objective::PerfPerBwPerNpu)
+            .with_traffic_suite(suite(), RobustAggregate::Expected)
+            .evaluate(&g)
+            .reward;
+        let worst = make_env(Objective::PerfPerBwPerNpu)
+            .with_traffic_suite(suite(), RobustAggregate::WorstCase)
+            .evaluate(&g)
+            .reward;
+        assert!(nominal > 0.0 && expected > 0.0 && worst > 0.0);
+        assert!(expected <= nominal, "expected {expected:.6e} > nominal {nominal:.6e}");
+        assert!(worst <= expected, "worst {worst:.6e} > expected {expected:.6e}");
+    }
+
+    #[test]
+    fn traffic_suite_evaluation_is_deterministic() {
+        let env = make_env(Objective::PerfPerBwPerNpu)
+            .with_traffic_suite(TrafficSuite::generate("bursty", 5, 2, 4).unwrap(), RobustAggregate::Expected);
+        let g = env.pss.baseline_genome();
+        let a = env.evaluate_nomemo(&g);
+        let b = env.evaluate_nomemo(&g);
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+        assert_eq!(env.traffic_evals(), 2);
+        assert_eq!(env.eval_panics(), 0);
+    }
+
+    #[test]
+    fn traffic_knob_prices_the_requested_profile() {
+        let env = make_traffic_knob_env().with_traffic_seed(7);
+        let g = env.pss.baseline_genome(); // knob defaults to "None"
+        let idle = env.evaluate_nomemo(&g);
+        assert!(idle.reward > 0.0, "{:?}", idle.invalid_reason);
+        assert_eq!(env.traffic_evals(), 0, "knob at None must stay traffic-free");
+        let slots = env.pss.schema.param_slots(crate::psa::builders::names::TRAFFIC_PROFILE);
+        assert_eq!(slots.len(), 1);
+        let mut busy = g.clone();
+        busy[slots[0]] = 2; // Diurnal
+        let loaded = env.evaluate_nomemo(&busy);
+        assert!(loaded.reward > 0.0, "{:?}", loaded.invalid_reason);
+        assert_eq!(env.traffic_evals(), 1);
+        assert!(
+            loaded.reward < idle.reward,
+            "co-tenant load must cost: {} !< {}",
+            loaded.reward,
+            idle.reward
+        );
+        // The knob trace is seeded by the environment: a different seed
+        // prices a different co-tenant.
+        let reseeded = make_traffic_knob_env().with_traffic_seed(8).evaluate_nomemo(&busy);
+        assert_ne!(loaded.reward.to_bits(), reseeded.reward.to_bits());
+    }
+
+    #[test]
+    fn traffic_crosses_fault_scenarios() {
+        // Robust × traffic: each fault scenario sweeps every trace, so
+        // the combined posture is never better than faults alone.
+        let g = make_robust_env(RobustAggregate::Expected).pss.baseline_genome();
+        let faults_only = make_robust_env(RobustAggregate::Expected).evaluate(&g).reward;
+        let crossed_env = make_robust_env(RobustAggregate::Expected)
+            .with_traffic_suite(TrafficSuite::generate("constant", 9, 2, 4).unwrap(), RobustAggregate::Expected);
+        let crossed = crossed_env.evaluate(&g).reward;
+        assert!(faults_only > 0.0 && crossed > 0.0);
+        assert!(crossed <= faults_only, "traffic sped up faults: {crossed} > {faults_only}");
+        assert_eq!(crossed_env.suite_evals(), 1);
+        assert_eq!(crossed_env.traffic_evals(), 1);
+        // Determinism across a fresh cross-joined environment.
+        let again = make_robust_env(RobustAggregate::Expected)
+            .with_traffic_suite(TrafficSuite::generate("constant", 9, 2, 4).unwrap(), RobustAggregate::Expected)
+            .evaluate(&g)
+            .reward;
+        assert_eq!(crossed.to_bits(), again.to_bits());
+    }
+
+    #[test]
+    fn traffic_runner_completes_and_exports_metrics() {
+        let mut env = make_env(Objective::PerfPerBwPerNpu)
+            .with_traffic_suite(TrafficSuite::generate("diurnal", 3, 1, 4).unwrap(), RobustAggregate::WorstCase);
+        let cfg = DseConfig::new(AgentKind::Rw, 10, 5);
+        let r = DseRunner::new(cfg, SearchScope::FullStack).run(&mut env);
+        assert_eq!(r.history.len(), 10);
+        assert!(env.traffic_evals() > 0, "search never swept the traffic suite");
+        let metrics = MetricsRegistry::new();
+        env.export_metrics(&metrics);
+        assert_eq!(metrics.counter("env.traffic_evals"), env.traffic_evals());
+        assert_eq!(metrics.counter("env.traffic_traces"), 2);
     }
 
     #[test]

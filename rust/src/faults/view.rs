@@ -148,6 +148,13 @@ impl NetworkBackend for FaultView {
         let span = self.degraded_span(call.span);
         self.inner.phase_times_us(&CollectiveCall { span: &span, topology: &topo, ..*call })
     }
+
+    fn with_dim_utilization(&self, util: &[f64]) -> Option<Arc<dyn NetworkBackend>> {
+        // Shape the inner fabric and re-apply the same link degradation
+        // on top, so a traffic trace and a fault scenario compose
+        // regardless of which wrapper sits outermost.
+        Some(FaultView::wrap(self.inner.with_dim_utilization(util)?, &self.links))
+    }
 }
 
 #[cfg(test)]

@@ -111,6 +111,31 @@ pub fn make_env_robust(
         .with_scenarios(crate::faults::ScenarioSuite::generate(faults_seed, k, dims), aggregate)
 }
 
+/// Like [`make_env`], but multi-tenant: every evaluation sweeps a
+/// co-tenant trace suite (nominal + `k` seeded traces of `profile` from
+/// `traffic_seed`), aggregated per `aggregate` — the `cosmic search
+/// --traffic` setup. The schema stays the paper Table 4 one: an active
+/// suite overrides the PsA "Traffic Profile" knob, so adding it here
+/// would only pad the action space with a dead slot.
+pub fn make_env_traffic(
+    cluster: ClusterConfig,
+    workloads: Vec<WorkloadSpec>,
+    objective: Objective,
+    profile: &str,
+    traffic_seed: u64,
+    k: usize,
+    aggregate: crate::dse::RobustAggregate,
+) -> Result<Environment, String> {
+    let npus = cluster.npus();
+    let dims = cluster.topology.num_dims();
+    let suite = crate::netsim::TrafficSuite::generate(profile, traffic_seed, k, dims)?;
+    let baseline = median_baseline_par(&cluster, &workloads[0]);
+    let pss = Pss::new(paper_table4_schema(npus, dims), cluster, baseline);
+    Ok(Environment::new(pss, workloads, objective)
+        .with_traffic_suite(suite, aggregate)
+        .with_traffic_seed(traffic_seed))
+}
+
 /// Outcome of one scoped search, with the quantities the paper reports.
 #[derive(Debug, Clone)]
 pub struct ScopedResult {
@@ -300,6 +325,33 @@ mod tests {
         assert_eq!(r.run.history.len(), 15);
         assert_eq!(obs.timeline().steps.len(), 15);
         assert_eq!(obs.metrics.counter("env.evals"), env.evals());
+    }
+
+    #[test]
+    fn traffic_env_searches_under_load() {
+        let mut env = make_env_traffic(
+            presets::system1(),
+            vec![WorkloadSpec::training(wl::gpt3_13b().with_simulated_layers(4), 1024)],
+            Objective::PerfPerBwPerNpu,
+            "diurnal",
+            7,
+            1,
+            crate::dse::RobustAggregate::Expected,
+        )
+        .unwrap();
+        let r = scoped_search(&mut env, SearchScope::WorkloadOnly, AgentKind::Rw, 10, 2);
+        assert!(r.run.best_reward > 0.0);
+        assert!(env.traffic_evals() > 0);
+        assert!(make_env_traffic(
+            presets::system1(),
+            vec![WorkloadSpec::training(wl::gpt3_13b().with_simulated_layers(4), 1024)],
+            Objective::PerfPerBwPerNpu,
+            "rushhour",
+            7,
+            1,
+            crate::dse::RobustAggregate::Expected,
+        )
+        .is_err());
     }
 
     #[test]

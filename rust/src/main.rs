@@ -37,13 +37,12 @@ fn main() -> ExitCode {
         print_usage();
         return ExitCode::FAILURE;
     };
-    let opts = parse_opts(&args[1..]);
     let result = match cmd.as_str() {
-        "simulate" => cmd_simulate(&opts),
-        "search" => cmd_search(&opts),
-        "space" => cmd_space(&opts),
+        "simulate" => parse_opts(&args[1..], SIMULATE_FLAGS).and_then(|o| cmd_simulate(&o)),
+        "search" => parse_opts(&args[1..], SEARCH_FLAGS).and_then(|o| cmd_search(&o)),
+        "space" => parse_opts(&args[1..], SPACE_FLAGS).and_then(|o| cmd_space(&o)),
         "validate-json" => cmd_validate_json(&args[1..]),
-        "runtime" => cmd_runtime(),
+        "runtime" => parse_opts(&args[1..], &[]).and_then(|_| cmd_runtime()),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -69,6 +68,7 @@ USAGE:
                   [--dp N --sp N --pp N --shard 0|1] [--layers N] [--mode train|prefill|decode]
                   [--fidelity analytical|flow|packet] [--trace FILE.json]
                   [--faults SEED] [--ckpt ITERS]
+                  [--traffic none|constant|diurnal|bursty|FILE.json] [--traffic-seed N]
   cosmic search   [--system 1|2|3] [--model NAME] [--batch N] [--agent RW|GA|ACO|BO]
                   [--scope full|workload|collective|network] [--steps N] [--seed N]
                   [--objective bw|cost|latency]
@@ -76,6 +76,7 @@ USAGE:
                   [--promote K] [--packet-top K]
                   [--cache-cap N] [--progress N] [--telemetry FILE.json]
                   [--robust expected|worst] [--scenarios K] [--faults-seed N]
+                  [--traffic PROFILE|FILE.json] [--traffic-seed N] [--traffic-traces K]
   cosmic space    [--npus N] [--dims N]
   cosmic validate-json FILE...
   cosmic runtime
@@ -86,23 +87,73 @@ MODELS: GPT3-175B GPT3-13B ViT-Base ViT-Large"
 
 type Opts = HashMap<String, String>;
 
-fn parse_opts(args: &[String]) -> Opts {
+/// The value-taking flags each subcommand accepts (without the `--`).
+const SIMULATE_FLAGS: &[&str] = &[
+    "system", "model", "batch", "dp", "sp", "pp", "shard", "layers", "mode", "fidelity", "trace",
+    "faults", "ckpt", "traffic", "traffic-seed",
+];
+const SEARCH_FLAGS: &[&str] = &[
+    "system",
+    "model",
+    "batch",
+    "agent",
+    "scope",
+    "steps",
+    "seed",
+    "objective",
+    "strategy",
+    "promote",
+    "packet-top",
+    "cache-cap",
+    "progress",
+    "telemetry",
+    "robust",
+    "scenarios",
+    "faults-seed",
+    "traffic",
+    "traffic-seed",
+    "traffic-traces",
+];
+const SPACE_FLAGS: &[&str] = &["npus", "dims"];
+
+/// Strict flag parser: every token must form a known `--flag value`
+/// pair. Unknown flags, missing values, stray positionals and repeated
+/// flags all error with the offending token — a typo exits nonzero
+/// instead of silently running with defaults.
+fn parse_opts(args: &[String], known: &[&str]) -> Result<Opts, String> {
     let mut map = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let value = args.get(i + 1).cloned().unwrap_or_default();
-            map.insert(key.to_string(), value);
-            i += 2;
-        } else {
-            i += 1;
+        let Some(key) = args[i].strip_prefix("--") else {
+            return Err(format!(
+                "unexpected argument '{}' (flags look like --key value)",
+                args[i]
+            ));
+        };
+        if !known.contains(&key) {
+            return Err(format!("unknown flag '--{key}'"));
         }
+        let Some(value) = args.get(i + 1) else {
+            return Err(format!("flag '--{key}' is missing its value"));
+        };
+        if value.starts_with("--") {
+            return Err(format!("flag '--{key}' is missing its value (got '{value}')"));
+        }
+        if map.insert(key.to_string(), value.clone()).is_some() {
+            return Err(format!("flag '--{key}' given twice"));
+        }
+        i += 2;
     }
-    map
+    Ok(map)
 }
 
-fn opt_u64(opts: &Opts, key: &str, default: u64) -> u64 {
-    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+fn opt_u64(opts: &Opts, key: &str, default: u64) -> Result<u64, String> {
+    match opts.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| format!("flag '--{key}' needs an unsigned integer, got '{v}'")),
+    }
 }
 
 fn opt_str<'a>(opts: &'a Opts, key: &str, default: &'a str) -> &'a str {
@@ -110,22 +161,34 @@ fn opt_str<'a>(opts: &'a Opts, key: &str, default: &'a str) -> &'a str {
 }
 
 fn load_system(opts: &Opts) -> Result<cosmic::sim::ClusterConfig, String> {
-    let idx = opt_u64(opts, "system", 2) as usize;
+    let idx = opt_u64(opts, "system", 2)? as usize;
     presets::by_index(idx).ok_or_else(|| format!("no system preset {idx}"))
 }
 
 fn load_model(opts: &Opts) -> Result<cosmic::workload::ModelConfig, String> {
     let name = opt_str(opts, "model", "GPT3-175B");
-    let layers = opt_u64(opts, "layers", 4);
+    let layers = opt_u64(opts, "layers", 4)?;
     models::by_name(name)
         .map(|m| m.with_simulated_layers(layers))
         .ok_or_else(|| format!("unknown model '{name}'"))
 }
 
+/// Resolve `--traffic`: a named profile ("none" | "constant" |
+/// "diurnal" | "bursty", seeded generators) or a path to a replay JSON
+/// file written by `TrafficTrace::to_json`.
+fn load_traffic(spec: &str, seed: u64, dims: usize) -> Result<cosmic::netsim::TrafficTrace, String> {
+    if std::path::Path::new(spec).is_file() {
+        let text = std::fs::read_to_string(spec).map_err(|e| format!("read {spec}: {e}"))?;
+        cosmic::netsim::TrafficTrace::from_json(&text).map_err(|e| format!("{spec}: {e}"))
+    } else {
+        cosmic::netsim::TrafficTrace::from_profile(spec, seed, dims)
+    }
+}
+
 fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     let cluster = load_system(opts)?;
     let model = load_model(opts)?;
-    let batch = opt_u64(opts, "batch", 2048);
+    let batch = opt_u64(opts, "batch", 2048)?;
     let mode = match opt_str(opts, "mode", "train") {
         "train" => ExecutionMode::Training,
         "prefill" => ExecutionMode::InferencePrefill,
@@ -134,10 +197,10 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     };
     let par = Parallelization::derive(
         cluster.npus(),
-        opt_u64(opts, "dp", 64),
-        opt_u64(opts, "sp", 4),
-        opt_u64(opts, "pp", 1),
-        opt_u64(opts, "shard", 1) != 0,
+        opt_u64(opts, "dp", 64)?,
+        opt_u64(opts, "sp", 4)?,
+        opt_u64(opts, "pp", 1)?,
+        opt_u64(opts, "shard", 1)? != 0,
     )?;
     let fidelity = match opt_str(opts, "fidelity", "analytical") {
         "analytical" => FidelityMode::Analytical,
@@ -168,6 +231,18 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
     if let Some(v) = opts.get("ckpt") {
         let iters: u64 = v.parse().map_err(|_| format!("--ckpt needs iterations, got '{v}'"))?;
         sim = sim.with_checkpoint_interval(Some(iters));
+    }
+    if let Some(spec) = opts.get("traffic") {
+        let seed = opt_u64(opts, "traffic-seed", 7)?;
+        let trace = load_traffic(spec, seed, cluster.topology.num_dims())?;
+        let means = trace.period_means();
+        println!(
+            "traffic: {} (fingerprint {:016x}, mean util {})",
+            trace.profile(),
+            trace.fingerprint(),
+            means.iter().map(|u| format!("{:.0}%", u * 100.0)).collect::<Vec<_>>().join("/")
+        );
+        sim = sim.with_traffic(Arc::new(trace));
     }
     println!("system: {} ({} NPUs)", cluster.topology, cluster.npus());
     println!("model:  {} (simulating {} layers)", model.name, model.simulated_layers);
@@ -203,9 +278,9 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
 fn cmd_search(opts: &Opts) -> Result<(), String> {
     let cluster = load_system(opts)?;
     let model = load_model(opts)?;
-    let batch = opt_u64(opts, "batch", 2048);
-    let steps = opt_u64(opts, "steps", 300);
-    let seed = opt_u64(opts, "seed", 42);
+    let batch = opt_u64(opts, "batch", 2048)?;
+    let steps = opt_u64(opts, "steps", 300)?;
+    let seed = opt_u64(opts, "seed", 42)?;
     let agent = AgentKind::from_name(opt_str(opts, "agent", "GA"))
         .ok_or_else(|| "unknown agent".to_string())?;
     let scope = match opt_str(opts, "scope", "full") {
@@ -224,10 +299,10 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         "analytical" => SearchStrategy::Fixed(FidelityMode::Analytical),
         "flow" => SearchStrategy::Fixed(FidelityMode::FlowLevel),
         "packet" => SearchStrategy::Fixed(FidelityMode::Packet),
-        "staged" => SearchStrategy::Staged { promote_top_k: opt_u64(opts, "promote", 8) as usize },
+        "staged" => SearchStrategy::Staged { promote_top_k: opt_u64(opts, "promote", 8)? as usize },
         "staged-packet" => SearchStrategy::StagedPacket {
-            promote_top_k: opt_u64(opts, "promote", 8) as usize,
-            packet_top_k: opt_u64(opts, "packet-top", 3) as usize,
+            promote_top_k: opt_u64(opts, "promote", 8)? as usize,
+            packet_top_k: opt_u64(opts, "packet-top", 3)? as usize,
         },
         s => return Err(format!("unknown strategy '{s}'")),
     };
@@ -239,8 +314,11 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
                 .ok_or_else(|| format!("unknown robust aggregate '{v}' (expected|worst)"))
         })
         .transpose()?;
-    let scenarios = opt_u64(opts, "scenarios", 4) as usize;
-    let faults_seed = opt_u64(opts, "faults-seed", 7);
+    let scenarios = opt_u64(opts, "scenarios", 4)? as usize;
+    let faults_seed = opt_u64(opts, "faults-seed", 7)?;
+    let traffic = opts.get("traffic").cloned();
+    let traffic_seed = opt_u64(opts, "traffic-seed", 7)?;
+    let traffic_k = opt_u64(opts, "traffic-traces", 2)? as usize;
 
     let npus = cluster.npus();
     let dims = cluster.topology.num_dims();
@@ -257,11 +335,33 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
     if let Some(aggregate) = robust {
         env = env.with_scenarios(ScenarioSuite::generate(faults_seed, scenarios, dims), aggregate);
     }
-    let cache_cap = opt_u64(opts, "cache-cap", 0) as usize;
+    if let Some(spec) = &traffic {
+        env = env.with_traffic_seed(traffic_seed);
+        if std::path::Path::new(spec).is_file() {
+            // Replay mode: one pinned trace instead of a seeded sweep.
+            let trace = load_traffic(spec, traffic_seed, dims)?;
+            println!(
+                "traffic: replay {} (fingerprint {:016x})",
+                trace.profile(),
+                trace.fingerprint()
+            );
+            env = env.with_traffic(Arc::new(trace));
+        } else {
+            let aggregate = robust.unwrap_or_default();
+            let suite = cosmic::netsim::TrafficSuite::generate(spec, traffic_seed, traffic_k, dims)?;
+            println!(
+                "traffic: aggregate={} suite=nominal+{traffic_k} profile={spec} \
+                 traffic-seed={traffic_seed}",
+                aggregate.name()
+            );
+            env = env.with_traffic_suite(suite, aggregate);
+        }
+    }
+    let cache_cap = opt_u64(opts, "cache-cap", 0)? as usize;
     if cache_cap > 0 {
         env = env.with_eval_cache_capacity(cache_cap, cache_cap);
     }
-    let progress = opt_u64(opts, "progress", 0);
+    let progress = opt_u64(opts, "progress", 0)?;
     let telemetry = opts.get("telemetry").cloned();
     let observer = (progress > 0 || telemetry.is_some())
         .then(|| Arc::new(SearchObserver::new().with_progress(progress)));
@@ -309,6 +409,9 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
         "fidelity spend: {} flow-level / {} packet-level / {} total evals",
         result.flow_evals, result.packet_evals, result.evals
     );
+    if traffic.is_some() {
+        println!("traffic spend: {} evaluations swept the co-tenant trace(s)", env.traffic_evals());
+    }
     if !result.finalists.is_empty() {
         println!("finalists (screening reward -> flow-level reward):");
         for (g, screen, flow) in &result.finalists {
@@ -378,8 +481,8 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
 }
 
 fn cmd_space(opts: &Opts) -> Result<(), String> {
-    let npus = opt_u64(opts, "npus", 1024);
-    let dims = opt_u64(opts, "dims", 4) as usize;
+    let npus = opt_u64(opts, "npus", 1024)?;
+    let dims = opt_u64(opts, "dims", 4)? as usize;
     let schema = cosmic::psa::paper_table1_schema(npus, dims);
     let points = design_space_size(&schema, npus);
     println!("PsA design space for {npus} NPUs, {dims}D network (Table 1 schema):");
@@ -432,5 +535,67 @@ fn cmd_runtime() -> Result<(), String> {
             Ok(())
         }
         Err(e) => Err(format!("PJRT client unavailable: {e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn parser_accepts_known_pairs_and_defaults() {
+        let o = parse_opts(&argv(&["--batch", "64", "--model", "ViT-Base"]), SIMULATE_FLAGS)
+            .unwrap();
+        assert_eq!(o.get("batch").map(String::as_str), Some("64"));
+        assert_eq!(o.get("model").map(String::as_str), Some("ViT-Base"));
+        assert_eq!(opt_u64(&o, "batch", 0).unwrap(), 64);
+        assert_eq!(opt_u64(&o, "layers", 9).unwrap(), 9); // absent -> default
+        assert!(parse_opts(&[], SEARCH_FLAGS).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parser_rejects_unknown_flag_with_token() {
+        let e = parse_opts(&argv(&["--bogus", "1"]), SIMULATE_FLAGS).unwrap_err();
+        assert!(e.contains("--bogus"), "{e}");
+        // A flag valid for one command is still rejected for another.
+        let e = parse_opts(&argv(&["--agent", "GA"]), SPACE_FLAGS).unwrap_err();
+        assert!(e.contains("--agent"), "{e}");
+    }
+
+    #[test]
+    fn parser_rejects_missing_value() {
+        let e = parse_opts(&argv(&["--batch"]), SIMULATE_FLAGS).unwrap_err();
+        assert!(e.contains("--batch"), "{e}");
+        let e = parse_opts(&argv(&["--batch", "--model"]), SIMULATE_FLAGS).unwrap_err();
+        assert!(e.contains("--batch"), "{e}");
+    }
+
+    #[test]
+    fn parser_rejects_positionals_and_duplicates() {
+        let e = parse_opts(&argv(&["stray"]), SEARCH_FLAGS).unwrap_err();
+        assert!(e.contains("stray"), "{e}");
+        let e = parse_opts(&argv(&["--seed", "1", "--seed", "2"]), SEARCH_FLAGS).unwrap_err();
+        assert!(e.contains("--seed"), "{e}");
+    }
+
+    #[test]
+    fn malformed_numeric_names_flag_and_token() {
+        let o = parse_opts(&argv(&["--batch", "twelve"]), SIMULATE_FLAGS).unwrap();
+        let e = opt_u64(&o, "batch", 0).unwrap_err();
+        assert!(e.contains("--batch") && e.contains("twelve"), "{e}");
+        let o = parse_opts(&argv(&["--steps", "-3"]), SEARCH_FLAGS).unwrap();
+        assert!(opt_u64(&o, "steps", 0).is_err(), "negative must not parse as u64");
+    }
+
+    #[test]
+    fn traffic_spec_resolves_profiles_and_rejects_garbage() {
+        assert!(load_traffic("diurnal", 7, 3).is_ok());
+        assert!(load_traffic("none", 7, 3).unwrap().is_nominal());
+        assert!(load_traffic("rushhour", 7, 3).is_err());
+        assert!(load_traffic("/no/such/file.json", 7, 3).is_err());
     }
 }

@@ -169,6 +169,16 @@ pub trait NetworkBackend: fmt::Debug + Send + Sync {
     fn phase_times_us(&self, _call: &CollectiveCall<'_>) -> Vec<(usize, f64)> {
         Vec::new()
     }
+
+    /// A copy of this backend with co-tenant utilization `util[d]`
+    /// (fraction of dimension `d`'s bandwidth, `0.0..1.0`) folded into
+    /// its fabric — the hook `netsim::traffic::TrafficView` shapes
+    /// fabric-backed rungs through. Returns `None` when the rung has no
+    /// fabric to fold into (the view then degrades spans and topology
+    /// directly, `FaultView`-style).
+    fn with_dim_utilization(&self, _util: &[f64]) -> Option<Arc<dyn NetworkBackend>> {
+        None
+    }
 }
 
 /// Collapse per-job completions into per-layer maxima, sorted by layer.
@@ -367,7 +377,10 @@ pub struct FlowLevel {
 
 impl FlowLevel {
     pub fn new(config: FlowLevelConfig) -> Self {
-        Self { config }
+        // One validation path for every construction route: a struct-
+        // literal fabric with NaN or sub-1 oversubscription is repaired
+        // here, not at each read site. Identity on valid configs.
+        Self { config: config.sanitized() }
     }
 
     /// The per-chunk phase schedule of one collective (the analytical
@@ -444,7 +457,16 @@ impl NetworkBackend for FlowLevel {
                 .as_ref()
                 .map(|v| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>())
                 .hash(h);
+            self.config
+                .per_dim_background
+                .as_ref()
+                .map(|v| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>())
+                .hash(h);
         })
+    }
+
+    fn with_dim_utilization(&self, util: &[f64]) -> Option<Arc<dyn NetworkBackend>> {
+        Some(Arc::new(FlowLevel::new(self.config.clone().with_dim_background(util))))
     }
 
     fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {

@@ -71,8 +71,13 @@ pub fn calibrate_flow_config(
 ) -> CalibrationReport {
     let k = concurrency.max(1);
     let bytes = bytes_per_flow.max(packet.mtu_bytes.max(1.0));
+    // Calibrate against the sanitized fabric — the same validation path
+    // the backends construct through — so a struct-literal config with
+    // out-of-range fields cannot skew the fit.
+    let fabric = packet.fabric.sanitized();
+    let packet = &PacketLevelConfig { fabric: fabric.clone(), ..packet.clone() };
     let psim = PacketSim::new(topo, packet);
-    let fsim = FlowSim::new(packet.fabric.dim_capacities(topo));
+    let fsim = FlowSim::new(fabric.dim_capacities(topo));
     let makespan = |finishes: &[f64]| finishes.iter().copied().fold(0.0, f64::max);
     let mut samples = Vec::with_capacity(topo.dims.len());
     for (d, nd) in topo.dims.iter().enumerate() {

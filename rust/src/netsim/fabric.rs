@@ -10,9 +10,37 @@
 //!   do — each sees `bw / k`.
 //! - **Background load** — a fraction of every link consumed by
 //!   co-tenant traffic (other jobs, storage, control plane), modelled as
-//!   a uniform utilization the simulated job cannot claim.
+//!   a uniform utilization the simulated job cannot claim. The
+//!   per-dimension variant (`per_dim_background`) is how
+//!   `netsim::traffic::TrafficView` folds a traffic trace's window-mean
+//!   utilization into the fabric.
 
 use crate::topology::{DimKind, Topology};
+
+/// Ceiling on co-tenant utilization: a background load can never claim
+/// the whole link.
+const MAX_BACKGROUND: f64 = 0.95;
+
+/// Clamp one background-load fraction to its legal range; non-finite
+/// values (the NaN a buggy caller could feed through a struct literal)
+/// sanitize to idle rather than poisoning every capacity downstream.
+fn sanitize_load(load: f64) -> f64 {
+    if load.is_finite() {
+        load.clamp(0.0, MAX_BACKGROUND)
+    } else {
+        0.0
+    }
+}
+
+/// Clamp an oversubscription factor to the model's `>= 1` floor,
+/// mapping non-finite garbage to the neutral factor.
+fn sanitize_over(factor: f64) -> f64 {
+    if factor.is_finite() {
+        factor.max(1.0)
+    } else {
+        1.0
+    }
+}
 
 /// Congestion parameters of the flow-level fabric.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,6 +54,12 @@ pub struct FlowLevelConfig {
     /// Optional per-dimension oversubscription override, outermost
     /// entries may be omitted (falls back to the kind-based default).
     pub per_dim_oversubscription: Option<Vec<f64>>,
+    /// Optional per-dimension background-load override; entries beyond
+    /// the vector fall back to the uniform `background_load`. This is
+    /// the channel traffic traces shape capacities through, so a
+    /// uniform trace takes the exact arithmetic path of
+    /// `with_background_load`.
+    pub per_dim_background: Option<Vec<f64>>,
 }
 
 impl Default for FlowLevelConfig {
@@ -34,6 +68,7 @@ impl Default for FlowLevelConfig {
             switch_oversubscription: 1.0,
             background_load: 0.0,
             per_dim_oversubscription: None,
+            per_dim_background: None,
         }
     }
 }
@@ -46,21 +81,79 @@ impl FlowLevelConfig {
 
     /// A multi-tenant variant: `load` of every link is already in use.
     pub fn with_background_load(mut self, load: f64) -> Self {
-        self.background_load = load.clamp(0.0, 0.95);
+        self.background_load = sanitize_load(load);
+        self
+    }
+
+    /// Fold a per-dimension utilization vector (a traffic trace's
+    /// window mean) into this fabric: on every dimension the job keeps
+    /// `(1 - bg) * (1 - u)` of the link. When one side is idle the
+    /// other's fraction is used verbatim, so a trace over an otherwise
+    /// idle fabric reproduces `with_background_load` bit for bit.
+    pub fn with_dim_background(mut self, util: &[f64]) -> Self {
+        let dims = util.len().max(self.per_dim_background.as_ref().map_or(0, |v| v.len()));
+        let merged = (0..dims)
+            .map(|d| {
+                let bg = self.background_for(d);
+                let u = sanitize_load(util.get(d).copied().unwrap_or(0.0));
+                if bg == 0.0 {
+                    u
+                } else if u == 0.0 {
+                    bg
+                } else {
+                    sanitize_load(1.0 - (1.0 - bg) * (1.0 - u))
+                }
+            })
+            .collect();
+        self.per_dim_background = Some(merged);
         self
     }
 
     /// The oversubscription factor of topology dimension `dim_idx`.
     pub fn oversubscription(&self, kind: DimKind, dim_idx: usize) -> f64 {
-        self.per_dim_oversubscription
-            .as_ref()
-            .and_then(|v| v.get(dim_idx))
-            .copied()
-            .unwrap_or(match kind {
-                DimKind::Switch => self.switch_oversubscription,
-                _ => 1.0,
-            })
-            .max(1.0)
+        sanitize_over(
+            self.per_dim_oversubscription
+                .as_ref()
+                .and_then(|v| v.get(dim_idx))
+                .copied()
+                .unwrap_or(match kind {
+                    DimKind::Switch => self.switch_oversubscription,
+                    _ => 1.0,
+                }),
+        )
+    }
+
+    /// The background-load fraction seen by topology dimension
+    /// `dim_idx` (per-dim override when present, else the uniform
+    /// scalar), sanitized to `[0, 0.95]`.
+    pub fn background_for(&self, dim_idx: usize) -> f64 {
+        sanitize_load(
+            self.per_dim_background
+                .as_ref()
+                .and_then(|v| v.get(dim_idx))
+                .copied()
+                .unwrap_or(self.background_load),
+        )
+    }
+
+    /// A copy with every field pulled into its legal range: the single
+    /// validation path every backend (and the calibrator) constructs
+    /// through, so struct-literal configs cannot smuggle NaN or sub-1
+    /// oversubscription past the builder clamps. Idempotent, and the
+    /// identity on any already-valid config.
+    pub fn sanitized(&self) -> Self {
+        Self {
+            switch_oversubscription: sanitize_over(self.switch_oversubscription),
+            background_load: sanitize_load(self.background_load),
+            per_dim_oversubscription: self
+                .per_dim_oversubscription
+                .as_ref()
+                .map(|v| v.iter().map(|&x| sanitize_over(x)).collect()),
+            per_dim_background: self
+                .per_dim_background
+                .as_ref()
+                .map(|v| v.iter().map(|&x| sanitize_load(x)).collect()),
+        }
     }
 
     /// Effective per-NPU service rate (bytes/us) on a dimension whose
@@ -72,7 +165,7 @@ impl FlowLevelConfig {
         dim_idx: usize,
     ) -> f64 {
         let over = self.oversubscription(kind, dim_idx);
-        nominal_bytes_per_us * (1.0 - self.background_load.clamp(0.0, 0.95)) / over
+        nominal_bytes_per_us * (1.0 - self.background_for(dim_idx)) / over
     }
 
     /// Per-dimension capacities (bytes/us, per NPU lane) for the whole
@@ -95,6 +188,11 @@ impl FlowLevelConfig {
                 .per_dim_oversubscription
                 .as_ref()
                 .map(|v| v.iter().all(|&x| x <= 1.0))
+                .unwrap_or(true)
+            && self
+                .per_dim_background
+                .as_ref()
+                .map(|v| v.iter().all(|&x| x <= 0.0))
                 .unwrap_or(true)
     }
 }
@@ -153,5 +251,52 @@ mod tests {
         let cfg = FlowLevelConfig::oversubscribed(0.5);
         assert_eq!(cfg.switch_oversubscription, 1.0);
         assert_eq!(cfg.oversubscription(DimKind::Switch, 3), 1.0);
+    }
+
+    #[test]
+    fn dim_background_over_idle_fabric_matches_scalar_background_exactly() {
+        let t = topo();
+        let uniform = FlowLevelConfig::default().with_background_load(0.4);
+        let per_dim = FlowLevelConfig::default().with_dim_background(&[0.4, 0.4]);
+        let a = uniform.dim_capacities(&t);
+        let b = per_dim.dim_capacities(&t);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "uniform vs per-dim must agree bitwise");
+        }
+        assert!(!per_dim.is_uncongested());
+    }
+
+    #[test]
+    fn dim_background_composes_with_scalar_background() {
+        let cfg = FlowLevelConfig::default().with_background_load(0.5).with_dim_background(&[0.5]);
+        // Job keeps (1 - 0.5)(1 - 0.5) = 0.25 of the link.
+        assert!((cfg.background_for(0) - 0.75).abs() < 1e-12);
+        // Dims past the override fall back to the scalar.
+        assert_eq!(cfg.background_for(1), 0.5);
+        // Combined load saturates at the ceiling, never a dead link.
+        let hot = FlowLevelConfig::default().with_background_load(0.9).with_dim_background(&[0.9]);
+        assert_eq!(hot.background_for(0), 0.95);
+    }
+
+    #[test]
+    fn sanitized_repairs_struct_literal_garbage() {
+        let cfg = FlowLevelConfig {
+            switch_oversubscription: f64::NAN,
+            background_load: f64::NAN,
+            per_dim_oversubscription: Some(vec![0.25, f64::INFINITY]),
+            per_dim_background: Some(vec![-1.0, 2.0, f64::NAN]),
+        };
+        let s = cfg.sanitized();
+        assert_eq!(s.switch_oversubscription, 1.0);
+        assert_eq!(s.background_load, 0.0);
+        assert_eq!(s.per_dim_oversubscription, Some(vec![1.0, 1.0]));
+        assert_eq!(s.per_dim_background, Some(vec![0.0, 0.95, 0.0]));
+        // NaN background no longer reaches the capacity table even
+        // before sanitizing (accessors clamp too).
+        assert!(cfg.dim_capacities(&topo()).iter().all(|c| c.is_finite()));
+        // Idempotent and the identity on valid configs.
+        assert_eq!(s.sanitized(), s);
+        let valid = FlowLevelConfig::oversubscribed(4.0).with_background_load(0.3);
+        assert_eq!(valid.sanitized(), valid);
     }
 }

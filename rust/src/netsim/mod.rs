@@ -26,6 +26,11 @@
 //! - [`calibrate`] — fit [`FlowLevelConfig`] oversubscription factors
 //!   against packet-level drains ([`calibrate_flow_config`]), so the
 //!   cheap fluid rung tracks the expensive queueing rung.
+//! - [`traffic`] — replayable multi-tenant traffic: per-dimension
+//!   utilization time series ([`TrafficTrace`]: seeded constant /
+//!   diurnal / bursty generators, JSON replay) applied underneath any
+//!   rung by the [`TrafficView`] wrapper, time-varyingly — the
+//!   trace-driven generalization of `background_load`.
 //!
 //! Select a backend on the simulator:
 //!
@@ -56,6 +61,7 @@ pub mod engine;
 pub mod fabric;
 pub mod flow;
 pub mod packet;
+pub mod traffic;
 
 pub use backend::{
     serial_drain, serial_drain_detailed, Analytical, CollectiveCall, FidelityMode, FlowLevel,
@@ -69,3 +75,4 @@ pub use packet::{
     ecmp_path, FlowSpan, PacketChainResult, PacketLevel, PacketLevelConfig, PacketSim,
     PacketTrace, PortWindow, ServedPacket,
 };
+pub use traffic::{TrafficSuite, TrafficTrace, TrafficView};

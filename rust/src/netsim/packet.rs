@@ -33,6 +33,7 @@
 
 use std::collections::VecDeque;
 use std::hash::Hash;
+use std::sync::Arc;
 
 use super::backend::{
     collapse_per_layer, CollectiveCall, FidelityMode, FlowLevel, NetworkBackend, OverlapCall,
@@ -554,7 +555,9 @@ pub struct PacketLevel {
 
 impl PacketLevel {
     pub fn new(config: PacketLevelConfig) -> Self {
-        Self { config }
+        // Same single validation path as FlowLevel::new: struct-literal
+        // fabrics are repaired once, at construction.
+        Self { config: PacketLevelConfig { fabric: config.fabric.sanitized(), ..config } }
     }
 
     /// The flow-level twin over the same fabric: plans the per-phase
@@ -590,12 +593,28 @@ impl NetworkBackend for PacketLevel {
                 .as_ref()
                 .map(|v| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>())
                 .hash(h);
+            self.config
+                .fabric
+                .per_dim_background
+                .as_ref()
+                .map(|v| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>())
+                .hash(h);
             self.config.mtu_bytes.to_bits().hash(h);
             self.config.queue_depth.hash(h);
             self.config.ecmp_width.hash(h);
             self.config.seed.hash(h);
             self.config.max_packets_per_flow.hash(h);
         })
+    }
+
+    fn with_dim_utilization(&self, util: &[f64]) -> Option<Arc<dyn NetworkBackend>> {
+        // Per-port service rates derive from the fabric capacities, so
+        // folding utilization into the fabric modulates every queue of
+        // the affected dimension.
+        Some(Arc::new(PacketLevel::new(PacketLevelConfig {
+            fabric: self.config.fabric.clone().with_dim_background(util),
+            ..self.config.clone()
+        })))
     }
 
     fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {

@@ -1,0 +1,924 @@
+//! Replayable multi-tenant traffic traces: time-varying co-tenant load
+//! for every fidelity rung.
+//!
+//! The fabric model's `background_load` scalar (see
+//! [`super::fabric::FlowLevelConfig`]) freezes co-tenant traffic at one
+//! uniform fraction. Real shared clusters breathe: diurnal batch waves,
+//! bursty co-located jobs, per-pod hot spots. [`TrafficTrace`] captures
+//! that as a per-dimension piecewise-constant utilization time series
+//! (seeded generators or JSON replay), and [`TrafficView`] applies it
+//! underneath any [`NetworkBackend`] rung, mirroring
+//! `faults::FaultView`'s wrapper pattern:
+//!
+//! - **Fabric-backed rungs** (flow level, packet level) are rebuilt with
+//!   the utilization folded into the fabric's per-dimension background
+//!   channel ([`NetworkBackend::with_dim_utilization`]), so capacity
+//!   scaling takes the exact same arithmetic path as
+//!   `with_background_load` — a *uniform constant* trace reproduces the
+//!   scalar background results bit for bit.
+//! - **Fabric-less rungs** (analytical, or anything already wrapped in a
+//!   `FaultView`) are degraded FaultView-style: span bandwidth terms and
+//!   the topology's link rates scale by `1 - u`, with the same floating-
+//!   point expressions `LinkFaults` bandwidth factors would use.
+//!
+//! Time-variation enters through *which window* is averaged: blocking
+//! collectives (issued throughout the iteration) price against the
+//! trace's period-mean utilization, while the overlappable gradient
+//! drain refines in two passes — a period-mean pre-pass estimates the
+//! drain window, then the final drain prices against the utilization
+//! actually seen in `[first issue, estimated finish]`. For a constant
+//! trace both windows average to the same bits, so the refinement is
+//! exact there by construction.
+//!
+//! Wrapping is skipped entirely for nominal (all-zero) traces — the
+//! no-traffic path stays bit-identical to the pre-traffic simulator,
+//! hard-gated in `benches/eval_throughput.rs`.
+
+use std::hash::Hash;
+use std::sync::Arc;
+
+use super::backend::{CollectiveCall, FidelityMode, NetworkBackend, OverlapCall};
+use crate::collective::SchedulingPolicy;
+use crate::obs::TraceSink;
+use crate::topology::{DimCost, Topology};
+use crate::util::{hash64, Rng};
+
+/// Utilization ceiling: a co-tenant can never claim the full link (the
+/// same 0.95 cap `FlowLevelConfig::background_load` clamps to).
+pub const MAX_UTILIZATION: f64 = 0.95;
+
+/// Seed salt mixed into every traffic generator, so a DSE seed and a
+/// traffic seed of the same value do not correlate.
+const TRAFFIC_SEED_SALT: u64 = 0x7AFC_5EED_0C0D_E077;
+
+/// Suite member seeds: the same golden-ratio stride the fault-scenario
+/// suites use.
+const SUITE_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A per-dimension piecewise-constant utilization time series. Each
+/// dimension `d` holds samples `dims[d]`, each lasting `step_us`
+/// microseconds, repeating periodically; `u(d, t)` is the fraction of
+/// dimension `d`'s bandwidth consumed by co-tenant traffic at simulated
+/// time `t`. Dimensions beyond `dims.len()` are idle (0.0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficTrace {
+    /// Display label ("constant", "diurnal", "bursty", "replay", ...).
+    profile: String,
+    /// Duration of one sample (us).
+    step_us: f64,
+    /// Per-dimension utilization samples in `[0, MAX_UTILIZATION]`.
+    dims: Vec<Vec<f64>>,
+}
+
+impl TrafficTrace {
+    /// Build a trace from raw samples. Samples must be finite and in
+    /// `[0, 1]`; values above [`MAX_UTILIZATION`] are clamped to it
+    /// (a co-tenant cannot own the whole link), `step_us` must be a
+    /// positive finite duration.
+    pub fn new(profile: &str, step_us: f64, dims: Vec<Vec<f64>>) -> Result<Self, String> {
+        if !step_us.is_finite() || step_us <= 0.0 {
+            return Err(format!("traffic step_us must be positive and finite, got {step_us}"));
+        }
+        let mut clamped = dims;
+        for (d, series) in clamped.iter_mut().enumerate() {
+            for v in series.iter_mut() {
+                if !v.is_finite() || *v < 0.0 || *v > 1.0 {
+                    return Err(format!(
+                        "traffic utilization for dim {d} must be finite and in [0, 1], got {v}"
+                    ));
+                }
+                if *v > MAX_UTILIZATION {
+                    *v = MAX_UTILIZATION;
+                }
+            }
+        }
+        Ok(Self { profile: profile.to_string(), step_us, dims: clamped })
+    }
+
+    /// The idle trace: no co-tenant traffic anywhere. Attaching it is a
+    /// no-op ([`TrafficView::wrap`] skips the wrapper entirely).
+    pub fn nominal() -> Self {
+        Self { profile: "nominal".to_string(), step_us: 1.0, dims: Vec::new() }
+    }
+
+    /// A uniform trace: every dimension pinned at `util` forever — the
+    /// exact analogue of `FlowLevelConfig::with_background_load(util)`.
+    pub fn uniform(dims: usize, util: f64) -> Self {
+        let u = util.clamp(0.0, MAX_UTILIZATION);
+        Self {
+            profile: "constant".to_string(),
+            step_us: 1000.0,
+            dims: vec![vec![u]; dims],
+        }
+    }
+
+    /// Seeded constant profile: each dimension holds a flat level drawn
+    /// from `[0.15, 0.65)`.
+    pub fn constant(seed: u64, dims: usize) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ TRAFFIC_SEED_SALT);
+        let series = (0..dims).map(|_| vec![0.15 + 0.5 * rng.gen_f64()]).collect();
+        Self { profile: "constant".to_string(), step_us: 1000.0, dims: series }
+    }
+
+    /// Seeded diurnal profile: a sinusoidal day (24 bins of 50 ms of
+    /// simulated time each) with per-dimension base, amplitude and
+    /// phase.
+    pub fn diurnal(seed: u64, dims: usize) -> Self {
+        const BINS: usize = 24;
+        let mut rng = Rng::seed_from_u64(seed ^ TRAFFIC_SEED_SALT);
+        let series = (0..dims)
+            .map(|_| {
+                let base = 0.10 + 0.25 * rng.gen_f64();
+                let amp = 0.10 + 0.35 * rng.gen_f64();
+                let phase = rng.gen_f64() * std::f64::consts::TAU;
+                (0..BINS)
+                    .map(|k| {
+                        let x = k as f64 / BINS as f64 * std::f64::consts::TAU + phase;
+                        (base + amp * 0.5 * (1.0 + x.sin())).clamp(0.0, MAX_UTILIZATION)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { profile: "diurnal".to_string(), step_us: 50_000.0, dims: series }
+    }
+
+    /// Seeded bursty profile: a two-state on/off Markov chain per
+    /// dimension (64 bins of 10 ms), idle floor vs burst ceiling.
+    pub fn bursty(seed: u64, dims: usize) -> Self {
+        const BINS: usize = 64;
+        let mut rng = Rng::seed_from_u64(seed ^ TRAFFIC_SEED_SALT);
+        let series = (0..dims)
+            .map(|_| {
+                let p_on = 0.15 + 0.20 * rng.gen_f64();
+                let p_off = 0.25 + 0.30 * rng.gen_f64();
+                let high = (0.50 + 0.45 * rng.gen_f64()).clamp(0.0, MAX_UTILIZATION);
+                let low = 0.05 * rng.gen_f64();
+                let mut on = rng.gen_bool(0.5);
+                (0..BINS)
+                    .map(|_| {
+                        let flip = if on { p_off } else { p_on };
+                        if rng.gen_bool(flip) {
+                            on = !on;
+                        }
+                        if on {
+                            high
+                        } else {
+                            low
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { profile: "bursty".to_string(), step_us: 10_000.0, dims: series }
+    }
+
+    /// Build a named profile ("constant" | "diurnal" | "bursty" |
+    /// "none") over `dims` topology dimensions.
+    pub fn from_profile(profile: &str, seed: u64, dims: usize) -> Result<Self, String> {
+        match profile.trim().to_ascii_lowercase().as_str() {
+            "none" | "nominal" => Ok(Self::nominal()),
+            "constant" => Ok(Self::constant(seed, dims)),
+            "diurnal" => Ok(Self::diurnal(seed, dims)),
+            "bursty" => Ok(Self::bursty(seed, dims)),
+            other => Err(format!(
+                "unknown traffic profile '{other}' (expected constant, diurnal, bursty or none)"
+            )),
+        }
+    }
+
+    /// Parse the replay format:
+    /// `{"profile": "...", "step_us": 1000.0, "dims": [[0.1, 0.5], [0.0]]}`
+    /// (`profile` optional, defaults to "replay"). Unknown keys are
+    /// rejected so a typo'd trace file errors instead of silently
+    /// replaying nothing.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        crate::util::json::validate(text).map_err(|e| format!("traffic trace: invalid JSON: {e}"))?;
+        let mut p = JsonScan { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        p.expect(b'{')?;
+        let mut profile: Option<String> = None;
+        let mut step_us: Option<f64> = None;
+        let mut dims: Option<Vec<Vec<f64>>> = None;
+        loop {
+            p.skip_ws();
+            if p.eat(b'}') {
+                break;
+            }
+            let key = p.string()?;
+            p.skip_ws();
+            p.expect(b':')?;
+            p.skip_ws();
+            match key.as_str() {
+                "profile" => profile = Some(p.string()?),
+                "step_us" => step_us = Some(p.number()?),
+                "dims" => {
+                    let mut outer = Vec::new();
+                    p.expect(b'[')?;
+                    loop {
+                        p.skip_ws();
+                        if p.eat(b']') {
+                            break;
+                        }
+                        let mut inner = Vec::new();
+                        p.expect(b'[')?;
+                        loop {
+                            p.skip_ws();
+                            if p.eat(b']') {
+                                break;
+                            }
+                            inner.push(p.number()?);
+                            p.skip_ws();
+                            p.eat(b',');
+                        }
+                        outer.push(inner);
+                        p.skip_ws();
+                        p.eat(b',');
+                    }
+                    dims = Some(outer);
+                }
+                other => {
+                    return Err(format!(
+                        "traffic trace: unknown key \"{other}\" (expected profile, step_us, dims)"
+                    ))
+                }
+            }
+            p.skip_ws();
+            p.eat(b',');
+        }
+        let step = step_us.ok_or("traffic trace: missing \"step_us\"")?;
+        let series = dims.ok_or("traffic trace: missing \"dims\"")?;
+        Self::new(profile.as_deref().unwrap_or("replay"), step, series)
+    }
+
+    /// Serialize in the [`TrafficTrace::from_json`] replay format.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"profile\":\"{}\",\"step_us\":{},\"dims\":[",
+            self.profile, self.step_us
+        ));
+        for (d, series) in self.dims.iter().enumerate() {
+            if d > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            for (i, v) in series.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("{v}"));
+            }
+            out.push(']');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// The display label of this trace's generator.
+    pub fn profile(&self) -> &str {
+        &self.profile
+    }
+
+    /// Sample duration (us).
+    pub fn step_us(&self) -> f64 {
+        self.step_us
+    }
+
+    /// Number of dimensions carrying samples.
+    pub fn num_dims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// True when no sample anywhere is non-zero — attaching this trace
+    /// changes nothing, and [`TrafficView::wrap`] skips the wrapper.
+    pub fn is_nominal(&self) -> bool {
+        self.dims.iter().all(|s| s.iter().all(|&v| v == 0.0))
+    }
+
+    /// Stable fingerprint of the series; `0` for nominal traces (so the
+    /// no-traffic and nominal-trace cache keys coincide, like the
+    /// fault-scenario convention).
+    pub fn fingerprint(&self) -> u64 {
+        if self.is_nominal() {
+            return 0;
+        }
+        hash64(|h| {
+            0x7AFC_u64.hash(h);
+            self.step_us.to_bits().hash(h);
+            self.dims.len().hash(h);
+            for series in &self.dims {
+                series.len().hash(h);
+                for v in series {
+                    v.to_bits().hash(h);
+                }
+            }
+        })
+    }
+
+    /// Utilization of dimension `dim` at absolute time `t_us`
+    /// (periodic; dimensions without samples are idle).
+    pub fn utilization_at(&self, dim: usize, t_us: f64) -> f64 {
+        let Some(series) = self.dims.get(dim) else { return 0.0 };
+        match series.len() {
+            0 => 0.0,
+            1 => series[0],
+            n => {
+                let period = self.step_us * n as f64;
+                let mut x = t_us % period;
+                if x < 0.0 {
+                    x += period;
+                }
+                let idx = ((x / self.step_us) as usize).min(n - 1);
+                series[idx]
+            }
+        }
+    }
+
+    /// Mean utilization of `dim` over `[t0, t1)`. Exact (the stored
+    /// sample bits, no integration residue) whenever the dimension's
+    /// series is constant — the property the uniform-trace ≡
+    /// `background_load` bit-identity gate leans on.
+    pub fn mean_utilization(&self, dim: usize, t0: f64, t1: f64) -> f64 {
+        let Some(series) = self.dims.get(dim) else { return 0.0 };
+        let n = series.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let first = series[0];
+        if series.iter().all(|v| v.to_bits() == first.to_bits()) {
+            return first;
+        }
+        if !(t1 > t0) || !t0.is_finite() || !t1.is_finite() {
+            return self.utilization_at(dim, t0);
+        }
+        let period = self.step_us * n as f64;
+        let span = t1 - t0;
+        let full = (span / period).floor();
+        let mut total = 0.0;
+        if full >= 1.0 {
+            total += full * series.iter().sum::<f64>() * self.step_us;
+        }
+        let mut t = t0 + full * period;
+        while t < t1 {
+            let mut x = t % period;
+            if x < 0.0 {
+                x += period;
+            }
+            let idx = ((x / self.step_us) as usize).min(n - 1);
+            let seg_left = (idx as f64 + 1.0) * self.step_us - x;
+            let dt = seg_left.min(t1 - t);
+            if dt <= 0.0 {
+                break;
+            }
+            total += series[idx] * dt;
+            t += dt;
+        }
+        (total / span).clamp(0.0, MAX_UTILIZATION)
+    }
+
+    /// Per-dimension mean utilization over `[t0, t1)`, one entry per
+    /// trace dimension.
+    pub fn window_means(&self, t0: f64, t1: f64) -> Vec<f64> {
+        (0..self.dims.len()).map(|d| self.mean_utilization(d, t0, t1)).collect()
+    }
+
+    /// Per-dimension mean utilization over one full period — what
+    /// blocking collectives price against.
+    pub fn period_means(&self) -> Vec<f64> {
+        (0..self.dims.len())
+            .map(|d| {
+                let n = self.dims[d].len();
+                self.mean_utilization(d, 0.0, self.step_us * n.max(1) as f64)
+            })
+            .collect()
+    }
+
+    /// The busy segments of `dim` overlapping `[t0, t1)`, as
+    /// `(start, end, utilization)`, capped at `max_segments` (for the
+    /// trace exporter — a long iteration over a fine trace must not
+    /// blow up the span file).
+    pub fn segments_in(
+        &self,
+        dim: usize,
+        t0: f64,
+        t1: f64,
+        max_segments: usize,
+    ) -> Vec<(f64, f64, f64)> {
+        let Some(series) = self.dims.get(dim) else { return Vec::new() };
+        let n = series.len();
+        if n == 0 || !(t1 > t0) {
+            return Vec::new();
+        }
+        let period = self.step_us * n as f64;
+        let mut out = Vec::new();
+        let mut t = t0;
+        while t < t1 && out.len() < max_segments {
+            let mut x = t % period;
+            if x < 0.0 {
+                x += period;
+            }
+            let idx = ((x / self.step_us) as usize).min(n - 1);
+            let seg_left = (idx as f64 + 1.0) * self.step_us - x;
+            let dt = seg_left.min(t1 - t);
+            if dt <= 0.0 {
+                break;
+            }
+            out.push((t, t + dt, series[idx]));
+            t += dt;
+        }
+        out
+    }
+}
+
+/// Minimal scanner for the replay format (the document is pre-validated
+/// by `util::json::validate`, so this only extracts values).
+struct JsonScan<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl JsonScan<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.bytes.get(self.pos) == Some(&b) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.eat(b) {
+            Ok(())
+        } else {
+            Err(format!("traffic trace: expected '{}' at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        while let Some(&c) = self.bytes.get(self.pos) {
+            if c == b'"' {
+                let s = String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned();
+                self.pos += 1;
+                return Ok(s);
+            }
+            // Escapes are legal JSON but pointless in this format's keys
+            // and profile names; reject rather than mis-parse.
+            if c == b'\\' {
+                return Err("traffic trace: escape sequences are not supported".to_string());
+            }
+            self.pos += 1;
+        }
+        Err("traffic trace: unterminated string".to_string())
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.pos;
+        while matches!(
+            self.bytes.get(self.pos),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| "traffic trace: bad number".to_string())?;
+        text.parse::<f64>()
+            .map_err(|_| format!("traffic trace: bad number \"{text}\" at byte {start}"))
+    }
+}
+
+/// A replayable set of traffic conditions: the nominal (idle) trace
+/// first, then `k` seeded members of one profile — the traffic analogue
+/// of `faults::ScenarioSuite`, composing with the same robust
+/// `Expected`/`WorstCase` aggregation.
+#[derive(Debug, Clone)]
+pub struct TrafficSuite {
+    pub traces: Vec<Arc<TrafficTrace>>,
+}
+
+impl TrafficSuite {
+    /// Nominal + `k` seeded traces of `profile` over `dims` dimensions.
+    pub fn generate(profile: &str, seed: u64, k: usize, dims: usize) -> Result<Self, String> {
+        let mut traces = vec![Arc::new(TrafficTrace::nominal())];
+        for i in 1..=k as u64 {
+            traces.push(Arc::new(TrafficTrace::from_profile(
+                profile,
+                seed ^ i.wrapping_mul(SUITE_STRIDE),
+                dims,
+            )?));
+        }
+        Ok(Self { traces })
+    }
+
+    pub fn len(&self) -> usize {
+        self.traces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.traces.is_empty()
+    }
+
+    /// Stable fingerprint over the member traces.
+    pub fn fingerprint(&self) -> u64 {
+        hash64(|h| {
+            0x7AFC_u64.hash(h);
+            self.traces.len().hash(h);
+            for t in &self.traces {
+                t.fingerprint().hash(h);
+            }
+        })
+    }
+}
+
+/// Traffic-shaping wrapper around an inner backend. Construct via
+/// [`TrafficView::wrap`], which skips wrapping entirely for nominal
+/// traces (zero cost and maximal cache sharing when nothing is busy).
+#[derive(Debug)]
+pub struct TrafficView {
+    inner: Arc<dyn NetworkBackend>,
+    trace: Arc<TrafficTrace>,
+    /// `inner` rebuilt with the period-mean utilization folded into its
+    /// fabric; `None` when the inner rung has no fabric hook (then the
+    /// FaultView-style span/topology degradation path applies).
+    shaped: Option<Arc<dyn NetworkBackend>>,
+    /// Per-dimension mean utilization over one trace period.
+    period_mean: Vec<f64>,
+}
+
+impl TrafficView {
+    /// Wrap `inner` under `trace`; returns `inner` unchanged when the
+    /// trace is nominal.
+    pub fn wrap(inner: Arc<dyn NetworkBackend>, trace: Arc<TrafficTrace>) -> Arc<dyn NetworkBackend> {
+        if trace.is_nominal() {
+            return inner;
+        }
+        let period_mean = trace.period_means();
+        let shaped = inner.with_dim_utilization(&period_mean);
+        Arc::new(Self { inner, trace, shaped, period_mean })
+    }
+
+    /// The shaped inner backend for a utilization vector — the cached
+    /// period-mean instance when the bits match, a fresh rebuild
+    /// otherwise.
+    fn shaped_at(&self, util: &[f64]) -> Option<Arc<dyn NetworkBackend>> {
+        if util == self.period_mean.as_slice() {
+            self.shaped.clone()
+        } else {
+            self.inner.with_dim_utilization(util)
+        }
+    }
+
+    /// Bandwidth factor of dimension `d` under `util` — the same
+    /// expression `LinkFaults::bw_factor` degradation multiplies by, so
+    /// the fallback path prices bit-identically to an equivalent
+    /// uniform link derate.
+    fn bw_factor(util: &[f64], d: usize) -> f64 {
+        1.0 - util.get(d).copied().unwrap_or(0.0).clamp(0.0, MAX_UTILIZATION)
+    }
+
+    fn degraded_topology(util: &[f64], topo: &Topology) -> Topology {
+        let mut t = topo.clone();
+        for (d, dim) in t.dims.iter_mut().enumerate() {
+            dim.bandwidth_gbps *= Self::bw_factor(util, d);
+        }
+        t
+    }
+
+    fn degraded_span(util: &[f64], span: &[(DimCost, usize)]) -> Vec<(DimCost, usize)> {
+        span.iter()
+            .map(|&(c, d)| {
+                (
+                    DimCost {
+                        alpha_us: c.alpha_us,
+                        beta_bytes_per_us: c.beta_bytes_per_us * Self::bw_factor(util, d),
+                        npus: c.npus,
+                    },
+                    d,
+                )
+            })
+            .collect()
+    }
+
+    /// Price a blocking call at `util` via the shaped fabric when the
+    /// inner rung has one, else by span/topology degradation.
+    fn call_at(&self, util: &[f64], call: &CollectiveCall<'_>) -> f64 {
+        if let Some(shaped) = self.shaped_at(util) {
+            return shaped.collective_time_us(call);
+        }
+        let topo = Self::degraded_topology(util, call.topology);
+        let span = Self::degraded_span(util, call.span);
+        self.inner.collective_time_us(&CollectiveCall { span: &span, topology: &topo, ..*call })
+    }
+
+    /// Drain at a fixed utilization vector, optionally traced. The
+    /// fallback path interns degraded spans by source-span pointer,
+    /// like `FaultView`, so pointer-memoizing inner backends keep their
+    /// hit rate.
+    fn drain_at(
+        &self,
+        util: &[f64],
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+        sink: Option<&dyn TraceSink>,
+    ) -> Vec<(u64, f64)> {
+        let Some(first) = jobs.first() else {
+            return Vec::new();
+        };
+        if let Some(shaped) = self.shaped_at(util) {
+            return match sink {
+                Some(s) => shaped.drain_overlapped_traced(jobs, policy, s),
+                None => shaped.drain_overlapped(jobs, policy),
+            };
+        }
+        let topo = Self::degraded_topology(util, first.call.topology);
+        let mut spans: Vec<(*const (DimCost, usize), Vec<(DimCost, usize)>)> = Vec::new();
+        for j in jobs {
+            let p = j.call.span.as_ptr();
+            if !spans.iter().any(|(q, _)| *q == p) {
+                spans.push((p, Self::degraded_span(util, j.call.span)));
+            }
+        }
+        let degraded: Vec<OverlapCall<'_>> = jobs
+            .iter()
+            .map(|j| {
+                let p = j.call.span.as_ptr();
+                let span = &spans.iter().find(|(q, _)| *q == p).expect("span interned").1;
+                OverlapCall {
+                    layer: j.layer,
+                    issue_us: j.issue_us,
+                    call: CollectiveCall { span, topology: &topo, ..j.call },
+                }
+            })
+            .collect();
+        match sink {
+            Some(s) => self.inner.drain_overlapped_traced(&degraded, policy, s),
+            None => self.inner.drain_overlapped(&degraded, policy),
+        }
+    }
+
+    /// The utilization the drain actually prices against: a period-mean
+    /// pre-pass estimates the drain window, then the window's own mean
+    /// is used. Constant series short-circuit to the same bits either
+    /// way, so the refinement never perturbs uniform traces.
+    fn refined_util(&self, jobs: &[OverlapCall<'_>], policy: SchedulingPolicy) -> Vec<f64> {
+        let pass1 = self.drain_at(&self.period_mean, jobs, policy, None);
+        let t0 = jobs.iter().map(|j| j.issue_us.max(0.0)).fold(f64::INFINITY, f64::min);
+        let t1 = pass1.iter().map(|(_, t)| *t).fold(f64::NEG_INFINITY, f64::max);
+        if t0.is_finite() && t1 > t0 {
+            self.trace.window_means(t0, t1)
+        } else {
+            self.period_mean.clone()
+        }
+    }
+}
+
+impl NetworkBackend for TrafficView {
+    fn name(&self) -> &'static str {
+        "traffic-view"
+    }
+
+    fn fidelity(&self) -> FidelityMode {
+        self.inner.fidelity()
+    }
+
+    fn cache_tag(&self) -> u64 {
+        hash64(|h| {
+            0x7AFC_u64.hash(h);
+            self.inner.cache_tag().hash(h);
+            self.trace.fingerprint().hash(h);
+        })
+    }
+
+    fn drain_is_serial(&self) -> bool {
+        // Never serial: the view must see whole drains to refine the
+        // utilization window (durations depend on *when* jobs run).
+        false
+    }
+
+    fn collective_time_us(&self, call: &CollectiveCall<'_>) -> f64 {
+        self.call_at(&self.period_mean, call)
+    }
+
+    fn drain_overlapped(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+    ) -> Vec<(u64, f64)> {
+        let util = self.refined_util(jobs, policy);
+        self.drain_at(&util, jobs, policy, None)
+    }
+
+    fn drain_overlapped_traced(
+        &self,
+        jobs: &[OverlapCall<'_>],
+        policy: SchedulingPolicy,
+        sink: &dyn TraceSink,
+    ) -> Vec<(u64, f64)> {
+        let util = self.refined_util(jobs, policy);
+        self.drain_at(&util, jobs, policy, Some(sink))
+    }
+
+    fn phase_times_us(&self, call: &CollectiveCall<'_>) -> Vec<(usize, f64)> {
+        if let Some(shaped) = self.shaped_at(&self.period_mean) {
+            return shaped.phase_times_us(call);
+        }
+        let topo = Self::degraded_topology(&self.period_mean, call.topology);
+        let span = Self::degraded_span(&self.period_mean, call.span);
+        self.inner.phase_times_us(&CollectiveCall { span: &span, topology: &topo, ..*call })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{CollAlgo, CollectiveKind, MultiDimPolicy};
+    use crate::netsim::{Analytical, FlowLevel, FlowLevelConfig};
+    use crate::topology::DimKind;
+
+    fn topo() -> Topology {
+        Topology::from_arrays(
+            &[DimKind::Ring, DimKind::Switch],
+            &[4, 8],
+            &[200.0, 100.0],
+            &[0.5, 1.0],
+        )
+    }
+
+    fn span_of(t: &Topology) -> Vec<(DimCost, usize)> {
+        t.dims.iter().enumerate().map(|(d, dim)| (DimCost::from_dim(dim), d)).collect()
+    }
+
+    fn call<'a>(
+        t: &'a Topology,
+        span: &'a [(DimCost, usize)],
+        algos: &'a [CollAlgo],
+    ) -> CollectiveCall<'a> {
+        CollectiveCall {
+            kind: CollectiveKind::AllReduce,
+            policy: MultiDimPolicy::Baseline,
+            algos,
+            span,
+            topology: t,
+            bytes: 8.0e6,
+            chunks: 4,
+        }
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic() {
+        for profile in ["constant", "diurnal", "bursty"] {
+            let a = TrafficTrace::from_profile(profile, 42, 3).unwrap();
+            let b = TrafficTrace::from_profile(profile, 42, 3).unwrap();
+            assert_eq!(a, b, "{profile} must be reproducible from its seed");
+            let c = TrafficTrace::from_profile(profile, 43, 3).unwrap();
+            assert_ne!(a.fingerprint(), c.fingerprint(), "{profile} seeds must differ");
+            assert!(!a.is_nominal());
+        }
+        assert!(TrafficTrace::from_profile("none", 1, 3).unwrap().is_nominal());
+        assert!(TrafficTrace::from_profile("bogus", 1, 3).is_err());
+    }
+
+    #[test]
+    fn samples_stay_in_range() {
+        for profile in ["constant", "diurnal", "bursty"] {
+            let t = TrafficTrace::from_profile(profile, 7, 4).unwrap();
+            for d in 0..t.num_dims() {
+                for (s, e, u) in t.segments_in(d, 0.0, t.step_us() * 200.0, 1000) {
+                    assert!(s < e);
+                    assert!((0.0..=MAX_UTILIZATION).contains(&u), "{profile}: {u}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_exact_over_any_window() {
+        let t = TrafficTrace::uniform(2, 0.37);
+        for (t0, t1) in [(0.0, 1.0), (123.4, 98765.4), (0.0, 1e9), (5.0, 5.0)] {
+            assert_eq!(t.mean_utilization(0, t0, t1).to_bits(), 0.37f64.to_bits());
+            assert_eq!(t.mean_utilization(1, t0, t1).to_bits(), 0.37f64.to_bits());
+        }
+        assert_eq!(t.mean_utilization(9, 0.0, 1.0), 0.0, "unsampled dims are idle");
+    }
+
+    #[test]
+    fn mean_integrates_piecewise_series() {
+        let t = TrafficTrace::new("replay", 10.0, vec![vec![0.2, 0.6]]).unwrap();
+        // One full period: (0.2 + 0.6) / 2.
+        assert!((t.mean_utilization(0, 0.0, 20.0) - 0.4).abs() < 1e-12);
+        // First half of the first segment only.
+        assert!((t.mean_utilization(0, 0.0, 5.0) - 0.2).abs() < 1e-12);
+        // [5, 15): half of each segment.
+        assert!((t.mean_utilization(0, 5.0, 15.0) - 0.4).abs() < 1e-12);
+        // Many periods plus a remainder stay bounded and sane.
+        let m = t.mean_utilization(0, 0.0, 2015.0);
+        assert!(m > 0.2 && m < 0.6);
+        assert_eq!(t.utilization_at(0, 25.0), 0.6);
+        assert_eq!(t.utilization_at(0, 45.0), 0.2);
+    }
+
+    #[test]
+    fn json_replay_round_trips() {
+        let t = TrafficTrace::new("replay", 1000.0, vec![vec![0.1, 0.5], vec![0.0]]).unwrap();
+        let parsed = TrafficTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, parsed);
+        crate::util::json::validate(&t.to_json()).unwrap();
+        assert!(TrafficTrace::from_json("{\"step_us\": 10}").is_err(), "dims required");
+        assert!(TrafficTrace::from_json("{\"bogus\": 1}").is_err(), "unknown keys rejected");
+        assert!(
+            TrafficTrace::from_json("{\"step_us\": 10, \"dims\": [[1.5]]}").is_err(),
+            "utilization beyond 1 rejected"
+        );
+        assert!(TrafficTrace::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn nominal_traces_skip_the_wrapper() {
+        let inner: Arc<dyn NetworkBackend> = Arc::new(Analytical);
+        let wrapped = TrafficView::wrap(Arc::clone(&inner), Arc::new(TrafficTrace::nominal()));
+        assert_eq!(wrapped.cache_tag(), inner.cache_tag());
+        assert_eq!(wrapped.name(), inner.name());
+        assert_eq!(TrafficTrace::nominal().fingerprint(), 0);
+        assert_eq!(TrafficTrace::uniform(3, 0.0).fingerprint(), 0);
+    }
+
+    #[test]
+    fn busy_traces_never_price_faster() {
+        let t = topo();
+        let span = span_of(&t);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&t, &span, &algos);
+        let trace = Arc::new(TrafficTrace::diurnal(5, 2));
+        for inner in [
+            Arc::new(Analytical) as Arc<dyn NetworkBackend>,
+            Arc::new(FlowLevel::default()) as Arc<dyn NetworkBackend>,
+        ] {
+            let idle = inner.collective_time_us(&c);
+            let view = TrafficView::wrap(Arc::clone(&inner), Arc::clone(&trace));
+            let busy = view.collective_time_us(&c);
+            assert!(busy >= idle, "{}: busy {busy} < idle {idle}", inner.name());
+        }
+    }
+
+    #[test]
+    fn uniform_trace_on_flow_rung_is_bit_identical_to_background_load() {
+        let t = topo();
+        let span = span_of(&t);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&t, &span, &algos);
+        let u = 0.4;
+        let view = TrafficView::wrap(
+            Arc::new(FlowLevel::default()),
+            Arc::new(TrafficTrace::uniform(t.dims.len(), u)),
+        );
+        let background = FlowLevel::new(FlowLevelConfig::default().with_background_load(u));
+        assert_eq!(
+            view.collective_time_us(&c).to_bits(),
+            background.collective_time_us(&c).to_bits()
+        );
+        let jobs: Vec<OverlapCall> = (0..3)
+            .map(|l| OverlapCall { layer: l, issue_us: l as f64 * 5.0, call: c })
+            .collect();
+        assert_eq!(
+            view.drain_overlapped(&jobs, SchedulingPolicy::Fifo),
+            background.drain_overlapped(&jobs, SchedulingPolicy::Fifo)
+        );
+        assert_eq!(view.phase_times_us(&c), background.phase_times_us(&c));
+    }
+
+    #[test]
+    fn cache_tag_tracks_trace_and_inner() {
+        let inner: Arc<dyn NetworkBackend> = Arc::new(Analytical);
+        let a = TrafficView::wrap(Arc::clone(&inner), Arc::new(TrafficTrace::diurnal(1, 2)));
+        let b = TrafficView::wrap(Arc::clone(&inner), Arc::new(TrafficTrace::diurnal(2, 2)));
+        let c = TrafficView::wrap(
+            Arc::new(FlowLevel::default()),
+            Arc::new(TrafficTrace::diurnal(1, 2)),
+        );
+        assert_ne!(a.cache_tag(), inner.cache_tag());
+        assert_ne!(a.cache_tag(), b.cache_tag());
+        assert_ne!(a.cache_tag(), c.cache_tag());
+    }
+
+    #[test]
+    fn suite_generation_is_deterministic_with_nominal_head() {
+        let a = TrafficSuite::generate("bursty", 9, 3, 2).unwrap();
+        let b = TrafficSuite::generate("bursty", 9, 3, 2).unwrap();
+        assert_eq!(a.len(), 4);
+        assert!(a.traces[0].is_nominal());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut fps: Vec<u64> = a.traces.iter().map(|t| t.fingerprint()).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 4, "suite members must be distinct");
+        assert!(TrafficSuite::generate("bogus", 9, 2, 2).is_err());
+    }
+}

@@ -40,6 +40,9 @@ pub mod tracks {
     /// Fault-injection process: active scenario elements (stragglers,
     /// degraded links, failure model) as iteration-wide spans.
     pub const FAULT_PID: u32 = 3;
+    /// Co-tenant traffic process: busy intervals of the attached
+    /// traffic trace, one lane per topology dimension.
+    pub const TRAFFIC_PID: u32 = 4;
 
     /// Iteration window and per-microbatch pipeline slots.
     pub const PIPELINE: Track = Track { pid: SIM_PID, tid: 1 };
@@ -66,6 +69,12 @@ pub mod tracks {
         Track { pid: NET_PID, tid: NET_DIM_BASE + dim as u32 }
     }
 
+    /// Track showing co-tenant traffic utilization intervals of
+    /// topology dimension `dim`.
+    pub fn traffic_dim(dim: usize) -> Track {
+        Track { pid: TRAFFIC_PID, tid: 1 + dim as u32 }
+    }
+
     /// Track showing packet-queue busy windows of `(dim, path)` on the
     /// packet-level rung.
     pub fn net_queue(dim: usize, path: usize) -> Track {
@@ -79,6 +88,7 @@ pub mod tracks {
             SIM_PID => "simulator",
             NET_PID => "network",
             FAULT_PID => "faults",
+            TRAFFIC_PID => "traffic",
             _ => "cosmic",
         }
     }
@@ -92,6 +102,7 @@ pub mod tracks {
             (SIM_PID, 4) => "gradient sync".to_string(),
             (NET_PID, 1) => "serial drain".to_string(),
             (FAULT_PID, 1) => "fault injection".to_string(),
+            (TRAFFIC_PID, t) => format!("co-tenant dim {}", t - 1),
             (NET_PID, t) if t >= NET_QUEUE_BASE => format!(
                 "pkt queue dim {} port {}",
                 (t - NET_QUEUE_BASE) / NET_QUEUE_PORTS,

@@ -21,6 +21,9 @@ pub mod names {
     /// The resilience checkpoint-interval knob, in iterations between
     /// checkpoints (optional; see [`super::with_checkpoint_param`]).
     pub const CKPT_INTERVAL: &str = "Checkpoint Interval";
+    /// The multi-tenant traffic-profile knob (optional; see
+    /// [`super::with_traffic_param`]).
+    pub const TRAFFIC_PROFILE: &str = "Traffic Profile";
 }
 
 /// Append the netsim "Network Fidelity" knob ({Analytical, FlowLevel,
@@ -53,6 +56,22 @@ pub fn with_checkpoint_param(mut schema: Schema) -> Schema {
         names::CKPT_INTERVAL,
         Stack::Workload,
         Domain::Ints(vec![8, 16, 32, 64, 128, 256, 512, 1024]),
+    ));
+    schema
+}
+
+/// Append the multi-tenant "Traffic Profile" knob ({None, Constant,
+/// Diurnal, Bursty}) to any schema. Opt-in like the fidelity and
+/// checkpoint knobs — the paper's Table 1/4 schemas ship without it.
+/// The PSS resolves the profile (with the environment's traffic seed)
+/// into a [`crate::netsim::TrafficTrace`] at evaluation time, letting
+/// the search compare design points under the co-tenant contention
+/// pattern they would actually face.
+pub fn with_traffic_param(mut schema: Schema) -> Schema {
+    schema.params.push(ParamDef::scalar(
+        names::TRAFFIC_PROFILE,
+        Stack::Network,
+        Domain::cats(&["None", "Constant", "Diurnal", "Bursty"]),
     ));
     schema
 }
@@ -248,5 +267,21 @@ mod tests {
         // Knobs compose: fidelity + checkpoint together.
         let both = with_checkpoint_param(with_fidelity_param(paper_table4_schema(1024, 4)));
         assert_eq!(both.genome_len(), base.genome_len() + 2);
+    }
+
+    #[test]
+    fn traffic_param_appends_one_network_slot() {
+        let base = paper_table4_schema(1024, 4);
+        let with = with_traffic_param(paper_table4_schema(1024, 4));
+        assert_eq!(with.genome_len(), base.genome_len() + 1);
+        let p = with.param(names::TRAFFIC_PROFILE).expect("traffic knob present");
+        assert_eq!(p.stack, Stack::Network);
+        assert_eq!(p.domain.cardinality(), 4);
+        assert!(base.param(names::TRAFFIC_PROFILE).is_none());
+        // All three opt-in knobs compose.
+        let all = with_traffic_param(with_checkpoint_param(with_fidelity_param(
+            paper_table4_schema(1024, 4),
+        )));
+        assert_eq!(all.genome_len(), base.genome_len() + 3);
     }
 }

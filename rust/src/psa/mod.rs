@@ -23,6 +23,7 @@ pub mod space;
 
 pub use builders::{
     paper_table1_schema, paper_table4_schema, with_checkpoint_param, with_fidelity_param,
+    with_traffic_param,
 };
 pub use space::{design_space_size, DesignSpace};
 

@@ -229,6 +229,21 @@ impl Pss {
     pub fn checkpoint_interval_of(&self, point: &DesignPoint) -> Option<u64> {
         point.get(names::CKPT_INTERVAL).and_then(|v| v.as_int()).map(|v| v.max(1) as u64)
     }
+
+    /// The traffic profile a design point asks for, `None` when the
+    /// schema lacks the optional "Traffic Profile" knob (see
+    /// [`crate::psa::with_traffic_param`]) or the point selects "None" —
+    /// the job then has the fabric to itself. The environment turns the
+    /// profile name into a seeded [`crate::netsim::TrafficTrace`] over
+    /// the materialized topology's dimensions.
+    pub fn traffic_profile_of(&self, point: &DesignPoint) -> Option<&'static str> {
+        match point.get(names::TRAFFIC_PROFILE).and_then(|v| v.as_cat()) {
+            Some(1) => Some("constant"),
+            Some(2) => Some("diurnal"),
+            Some(3) => Some("bursty"),
+            _ => None,
+        }
+    }
 }
 
 /// Index of the closest value in an integer domain.
@@ -382,6 +397,29 @@ mod tests {
         let bare = pss();
         let bp = bare.schema.decode_valid(&bare.baseline_genome()).unwrap();
         assert_eq!(bare.checkpoint_interval_of(&bp), None);
+    }
+
+    #[test]
+    fn traffic_knob_resolves_and_defaults_to_none() {
+        use crate::psa::with_traffic_param;
+        let cluster = presets::system2();
+        let par = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+        let p = Pss::new(with_traffic_param(paper_table4_schema(1024, 4)), cluster, par);
+        let g = p.baseline_genome();
+        assert_eq!(g.len(), p.schema.genome_len());
+        let point = p.schema.decode_valid(&g).unwrap();
+        // Baseline slot 0 = "None": sole tenant.
+        assert_eq!(p.traffic_profile_of(&point), None);
+        for (slot, profile) in [(1, "constant"), (2, "diurnal"), (3, "bursty")] {
+            let mut g2 = g.clone();
+            *g2.last_mut().unwrap() = slot;
+            let point2 = p.schema.decode_valid(&g2).unwrap();
+            assert_eq!(p.traffic_profile_of(&point2), Some(profile));
+        }
+        // Schemas without the knob resolve to None.
+        let bare = pss();
+        let bp = bare.schema.decode_valid(&bare.baseline_genome()).unwrap();
+        assert_eq!(bare.traffic_profile_of(&bp), None);
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::faults::{goodput_of, FaultScenario, FaultView, Goodput};
 use crate::netsim::backend::collapse_per_layer;
 use crate::netsim::{
     serial_drain, serial_drain_detailed, Analytical, CollectiveCall, FidelityMode, FlowLevel,
-    NetworkBackend, OverlapCall,
+    NetworkBackend, OverlapCall, TrafficTrace, TrafficView,
 };
 use crate::obs::{tracks, NoopSink, TraceSink, Track};
 use crate::topology::{DimCost, Topology};
@@ -79,6 +79,13 @@ pub struct CollKey {
     /// already flows into `backend`): fault-scenario evaluations can
     /// never alias nominal ones even if a backend tag collides.
     pub scenario: u64,
+    /// Traffic-trace fingerprint
+    /// ([`crate::netsim::TrafficTrace::fingerprint`]); `0` with no
+    /// trace attached *and* under the nominal trace, so those share
+    /// entries. Same belt-and-suspenders role as `scenario`: without
+    /// this component one trace's collective costs could be served to
+    /// another evaluation.
+    pub traffic: u64,
 }
 
 /// The collective-cost memo consulted by [`Simulator::price`]: `cost_us`
@@ -204,6 +211,9 @@ pub struct Simulator {
     /// Checkpoint interval in iterations for goodput accounting;
     /// `None` = the scenario's Young/Daly optimum.
     ckpt_interval_iters: Option<u64>,
+    /// Active co-tenant traffic trace; `None` = the job has the fabric
+    /// to itself (prices bit-identically to the pre-traffic pipeline).
+    traffic: Option<Arc<TrafficTrace>>,
 }
 
 impl Default for Simulator {
@@ -216,6 +226,7 @@ impl Default for Simulator {
             sink: Arc::new(NoopSink),
             faults: None,
             ckpt_interval_iters: None,
+            traffic: None,
         }
     }
 }
@@ -225,12 +236,19 @@ impl Simulator {
         Self::default()
     }
 
-    /// Recompute the effective backend after the base backend or the
-    /// fault scenario changed — builders compose in any order.
+    /// Recompute the effective backend after the base backend, the
+    /// fault scenario or the traffic trace changed — builders compose
+    /// in any order. Traffic wraps outermost: the trace shapes the
+    /// fabric the *degraded* network presents (co-tenants contend for
+    /// the faulted links too).
     fn refresh_backend(&mut self) {
-        self.backend = match &self.faults {
+        let faulted = match &self.faults {
             Some(f) => FaultView::wrap(Arc::clone(&self.base_backend), &f.links),
             None => Arc::clone(&self.base_backend),
+        };
+        self.backend = match &self.traffic {
+            Some(t) => TrafficView::wrap(faulted, Arc::clone(t)),
+            None => faulted,
         };
     }
 
@@ -269,6 +287,29 @@ impl Simulator {
     /// The active fault scenario, if any.
     pub fn faults(&self) -> Option<&FaultScenario> {
         self.faults.as_deref()
+    }
+
+    /// Attach a co-tenant traffic trace: every fidelity rung prices
+    /// against the trace's time-varying per-dimension utilization
+    /// through a [`TrafficView`]. The nominal (all-idle) trace — and
+    /// detaching via [`Simulator::without_traffic`] — reproduces the
+    /// traffic-free report bit for bit.
+    pub fn with_traffic(mut self, trace: Arc<TrafficTrace>) -> Self {
+        self.traffic = Some(trace);
+        self.refresh_backend();
+        self
+    }
+
+    /// Detach any traffic trace (back to the sole-tenant fast path).
+    pub fn without_traffic(mut self) -> Self {
+        self.traffic = None;
+        self.refresh_backend();
+        self
+    }
+
+    /// The active traffic trace, if any.
+    pub fn traffic(&self) -> Option<&TrafficTrace> {
+        self.traffic.as_deref()
     }
 
     /// Select a fidelity rung with its default backend configuration.
@@ -479,6 +520,7 @@ impl Simulator {
         let topo_fp = cluster.topology.fingerprint();
         let algos_fp = algos_fingerprint(&cluster.collectives.algorithms);
         let scenario_fp = self.faults.as_ref().map(|f| f.links.fingerprint()).unwrap_or(0);
+        let traffic_fp = self.traffic.as_ref().map(|t| t.fingerprint()).unwrap_or(0);
         let mut coll_cost = |kind: CollectiveKind, group: CommGroup, bytes: f64| -> f64 {
             let (stride, size) = Self::group_stride_size(par, group);
             let key = CollKey {
@@ -492,6 +534,7 @@ impl Simulator {
                 bytes: bytes.to_bits(),
                 chunks: cluster.collectives.chunks,
                 scenario: scenario_fp,
+                traffic: traffic_fp,
             };
             memo.cost_us(&key, &mut || self.collective_cost_us(cluster, par, kind, group, bytes))
         };
@@ -707,6 +750,25 @@ impl Simulator {
                         0.0,
                         iter_end,
                     );
+                }
+            }
+            // Co-tenant traffic intervals, one span per busy trace
+            // segment per dimension over the iteration window, capped
+            // like the pipeline slots so a fine trace over a long
+            // iteration cannot blow up the trace file. The nominal
+            // trace (and the traffic-free path) emits none.
+            if let Some(t) = &self.traffic {
+                for d in 0..t.num_dims() {
+                    for (s, e, u) in t.segments_in(d, 0.0, iter_end, 256) {
+                        if u > 0.0 {
+                            self.sink.span(
+                                tracks::traffic_dim(d),
+                                &format!("co-tenant dim{d} {:.0}%", u * 100.0),
+                                s,
+                                e.min(iter_end),
+                            );
+                        }
+                    }
                 }
             }
             // 1F1B pipeline slots, capped so a huge microbatch count
@@ -1188,6 +1250,111 @@ mod tests {
             let trace = generate_trace(&m, &p, 128, ExecutionMode::Training).unwrap();
             let shared = sim.price(&c, &p, &trace, mem, ExecutionMode::Training, &mut memo);
             assert_eq!(fresh, shared, "memo leaked across fault scenarios");
+        }
+    }
+
+    #[test]
+    fn nominal_trace_is_bit_identical_to_traffic_free() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 2, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        for mode in [
+            crate::netsim::FidelityMode::Analytical,
+            crate::netsim::FidelityMode::FlowLevel,
+        ] {
+            let plain = Simulator::new()
+                .with_fidelity(mode)
+                .run(&c, &m, &p, 128, ExecutionMode::Training)
+                .unwrap();
+            let nominal = Simulator::new()
+                .with_fidelity(mode)
+                .with_traffic(Arc::new(TrafficTrace::nominal()))
+                .run(&c, &m, &p, 128, ExecutionMode::Training)
+                .unwrap();
+            assert_eq!(plain, nominal, "{mode:?}: nominal trace must price bit-identically");
+        }
+    }
+
+    #[test]
+    fn traffic_never_speeds_up_any_rung() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let trace = Arc::new(TrafficTrace::diurnal(7, c.topology.num_dims()));
+        for mode in [
+            crate::netsim::FidelityMode::Analytical,
+            crate::netsim::FidelityMode::FlowLevel,
+        ] {
+            let plain = Simulator::new()
+                .with_fidelity(mode)
+                .run(&c, &m, &p, 128, ExecutionMode::Training)
+                .unwrap();
+            let busy = Simulator::new()
+                .with_fidelity(mode)
+                .with_traffic(Arc::clone(&trace))
+                .run(&c, &m, &p, 128, ExecutionMode::Training)
+                .unwrap();
+            assert!(
+                busy.latency_us >= plain.latency_us - 1e-9,
+                "{mode:?}: busy {} < plain {}",
+                busy.latency_us,
+                plain.latency_us
+            );
+        }
+    }
+
+    #[test]
+    fn builder_order_does_not_matter_for_traffic() {
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let trace = Arc::new(TrafficTrace::bursty(5, c.topology.num_dims()));
+        let scenario = Arc::new(FaultScenario::from_seed(11, c.topology.num_dims()));
+        let a = Simulator::new()
+            .with_traffic(Arc::clone(&trace))
+            .with_faults(Arc::clone(&scenario))
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        let b = Simulator::new()
+            .with_fidelity(crate::netsim::FidelityMode::FlowLevel)
+            .with_faults(Arc::clone(&scenario))
+            .with_traffic(Arc::clone(&trace))
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        assert_eq!(a, b);
+        // ...and detaching restores the traffic-free report exactly.
+        let plain = Simulator::new().run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+        let detached = Simulator::new()
+            .with_traffic(trace)
+            .without_traffic()
+            .run(&c, &m, &p, 128, ExecutionMode::Training)
+            .unwrap();
+        assert_eq!(plain, detached);
+    }
+
+    #[test]
+    fn shared_memo_isolates_traffic_traces() {
+        // One memo shared across traffic-free, nominal-trace and two
+        // busy-trace pricings must reproduce each independent result —
+        // the traffic fingerprint keys the collective costs.
+        let m = wl::gpt3_13b().with_simulated_layers(4);
+        let p = par(64, 8, 1, 1, true);
+        let c = small_cluster(SchedulingPolicy::Fifo);
+        let sims = [
+            Simulator::new(),
+            Simulator::new().with_traffic(Arc::new(TrafficTrace::nominal())),
+            Simulator::new().with_traffic(Arc::new(TrafficTrace::uniform(2, 0.3))),
+            Simulator::new().with_traffic(Arc::new(TrafficTrace::uniform(2, 0.6))),
+            Simulator::new().with_traffic(Arc::new(TrafficTrace::diurnal(3, 2))),
+        ];
+        let mut memo = LocalCollMemo::default();
+        for sim in &sims {
+            let fresh = sim.run(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+            let mem = sim.preflight(&c, &m, &p, 128, ExecutionMode::Training).unwrap();
+            let trace = generate_trace(&m, &p, 128, ExecutionMode::Training).unwrap();
+            let shared = sim.price(&c, &p, &trace, mem, ExecutionMode::Training, &mut memo);
+            assert_eq!(fresh, shared, "memo leaked across traffic traces");
         }
     }
 }

@@ -34,18 +34,29 @@ pub fn summarize(xs: &[f64]) -> Option<Summary> {
     })
 }
 
-/// Percentile by linear interpolation on a pre-sorted sample.
+/// Percentile by linear interpolation on a pre-sorted sample. An empty
+/// sample yields NaN (a telemetry export must never panic on a
+/// histogram nobody recorded into); use [`try_percentile_sorted`] to
+/// branch on emptiness instead.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    try_percentile_sorted(sorted, p).unwrap_or(f64::NAN)
+}
+
+/// Percentile by linear interpolation on a pre-sorted sample; `None`
+/// when the sample is empty.
+pub fn try_percentile_sorted(sorted: &[f64], p: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
     let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
-    if lo == hi {
+    Some(if lo == hi {
         sorted[lo]
     } else {
         let frac = rank - lo as f64;
         sorted[lo] * (1.0 - frac) + sorted[hi] * frac
-    }
+    })
 }
 
 /// Geometric mean of strictly positive values (NaN/non-positive skipped).
@@ -83,6 +94,13 @@ mod tests {
         assert_eq!(percentile_sorted(&v, 50.0), 5.0);
         assert_eq!(percentile_sorted(&v, 0.0), 0.0);
         assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn empty_percentile_is_nan_not_panic() {
+        assert!(percentile_sorted(&[], 50.0).is_nan());
+        assert_eq!(try_percentile_sorted(&[], 99.0), None);
+        assert_eq!(try_percentile_sorted(&[7.0], 50.0), Some(7.0));
     }
 
     #[test]

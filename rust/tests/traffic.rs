@@ -1,0 +1,260 @@
+//! End-to-end tests of the multi-tenant traffic subsystem: seeded
+//! generator determinism, the nominal/uniform bit-identity pins on all
+//! three fidelity rungs, load monotonicity, cache-tag distinctness
+//! (including composition with fault views), JSON replay, traffic spans
+//! in the trace timeline, and a traffic-aware search driven through the
+//! public API.
+
+use cosmic::agents::AgentKind;
+use cosmic::dse::{DseConfig, DseRunner, Objective, RobustAggregate, WorkloadSpec};
+use cosmic::faults::{FaultScenario, FaultView};
+use cosmic::harness::make_env_traffic;
+use cosmic::netsim::{
+    Analytical, FidelityMode, FlowLevel, FlowLevelConfig, NetworkBackend, PacketLevelConfig,
+    TrafficSuite, TrafficTrace, TrafficView,
+};
+use cosmic::obs::{tracks, Recorder};
+use cosmic::pss::SearchScope;
+use cosmic::sim::{presets, ClusterConfig, SimReport, Simulator};
+use cosmic::util::prop::check;
+use cosmic::workload::models::presets as wl;
+use cosmic::workload::{ExecutionMode, ModelConfig, Parallelization};
+use std::sync::Arc;
+
+fn setup() -> (ClusterConfig, ModelConfig, Parallelization) {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let par = Parallelization::derive(cluster.npus(), 64, 1, 1, true).unwrap();
+    (cluster, model, par)
+}
+
+fn run_with(
+    sim: Simulator,
+    cluster: &ClusterConfig,
+    model: &ModelConfig,
+    par: &Parallelization,
+) -> SimReport {
+    sim.run(cluster, model, par, 1024, ExecutionMode::Training).unwrap()
+}
+
+#[test]
+fn prop_equal_seeds_reproduce_bit_identical_reports() {
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    check("traffic seed determinism", 12, |rng| {
+        let seed = rng.next_u64() % 1000;
+        let profile = ["constant", "diurnal", "bursty"][(seed % 3) as usize];
+        let a = TrafficTrace::from_profile(profile, seed, dims).map_err(|e| e.to_string())?;
+        let b = TrafficTrace::from_profile(profile, seed, dims).map_err(|e| e.to_string())?;
+        if a.fingerprint() != b.fingerprint() {
+            return Err(format!("{profile} seed {seed}: fingerprints differ"));
+        }
+        let ra = run_with(Simulator::new().with_traffic(Arc::new(a)), &cluster, &model, &par);
+        let rb = run_with(Simulator::new().with_traffic(Arc::new(b)), &cluster, &model, &par);
+        if ra.latency_us.to_bits() != rb.latency_us.to_bits() {
+            return Err(format!("{profile} seed {seed}: latency not bit-identical"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nominal_trace_matches_traffic_free_on_every_rung() {
+    // The golden-corpus pin: attaching an idle trace must leave the
+    // SimReport bit-identical on every fidelity rung.
+    let (cluster, model, par) = setup();
+    for fidelity in [FidelityMode::Analytical, FidelityMode::FlowLevel, FidelityMode::Packet] {
+        let plain = run_with(Simulator::new().with_fidelity(fidelity), &cluster, &model, &par);
+        let traced = run_with(
+            Simulator::new().with_fidelity(fidelity).with_traffic(Arc::new(TrafficTrace::nominal())),
+            &cluster,
+            &model,
+            &par,
+        );
+        assert_eq!(plain, traced, "{fidelity:?}: nominal trace perturbed the report");
+    }
+}
+
+#[test]
+fn uniform_trace_matches_background_load_on_fabric_rungs() {
+    // A flat co-tenant at utilization u must price exactly like the
+    // fabric's scalar background-load knob — same floating-point path,
+    // bit for bit — on both fabric-backed rungs.
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    let util = 0.35;
+    let flow_bg = run_with(
+        Simulator::new().with_flow_config(FlowLevelConfig::default().with_background_load(util)),
+        &cluster,
+        &model,
+        &par,
+    );
+    let flow_tr = run_with(
+        Simulator::new()
+            .with_fidelity(FidelityMode::FlowLevel)
+            .with_traffic(Arc::new(TrafficTrace::uniform(dims, util))),
+        &cluster,
+        &model,
+        &par,
+    );
+    assert_eq!(flow_bg.latency_us.to_bits(), flow_tr.latency_us.to_bits(), "flow rung diverged");
+    assert_eq!(flow_bg, flow_tr);
+
+    let pkt_bg = run_with(
+        Simulator::new().with_packet_config(PacketLevelConfig {
+            fabric: FlowLevelConfig::default().with_background_load(util),
+            ..PacketLevelConfig::default()
+        }),
+        &cluster,
+        &model,
+        &par,
+    );
+    let pkt_tr = run_with(
+        Simulator::new()
+            .with_fidelity(FidelityMode::Packet)
+            .with_traffic(Arc::new(TrafficTrace::uniform(dims, util))),
+        &cluster,
+        &model,
+        &par,
+    );
+    assert_eq!(pkt_bg.latency_us.to_bits(), pkt_tr.latency_us.to_bits(), "packet rung diverged");
+    assert_eq!(pkt_bg, pkt_tr);
+}
+
+#[test]
+fn prop_heavier_traffic_never_speeds_up_any_rung() {
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    for fidelity in [FidelityMode::Analytical, FidelityMode::FlowLevel, FidelityMode::Packet] {
+        let mut prev = 0.0f64;
+        for util in [0.0, 0.2, 0.4, 0.6] {
+            let rep = run_with(
+                Simulator::new()
+                    .with_fidelity(fidelity)
+                    .with_traffic(Arc::new(TrafficTrace::uniform(dims, util))),
+                &cluster,
+                &model,
+                &par,
+            );
+            assert!(
+                rep.latency_us >= prev * (1.0 - 1e-9),
+                "{fidelity:?}: latency shrank when util rose to {util}"
+            );
+            prev = rep.latency_us;
+        }
+    }
+}
+
+#[test]
+fn cache_tags_distinguish_traffic_and_fault_wrapping() {
+    // The memo-safety pin: every distinct wrapping (and wrapping order)
+    // must present a distinct backend cache tag, so shared collective
+    // memos never serve one tenant mix the other's costs.
+    let dims = presets::system1().topology.num_dims();
+    let base: Arc<dyn NetworkBackend> = Arc::new(FlowLevel::new(FlowLevelConfig::default()));
+    let trace = Arc::new(TrafficTrace::from_profile("diurnal", 7, dims).unwrap());
+    let other = Arc::new(TrafficTrace::from_profile("diurnal", 8, dims).unwrap());
+    let faults = Arc::new(FaultScenario::from_seed(3, dims));
+
+    let traffic = TrafficView::wrap(Arc::clone(&base), Arc::clone(&trace));
+    let traffic_other = TrafficView::wrap(Arc::clone(&base), Arc::clone(&other));
+    let faulted = FaultView::wrap(Arc::clone(&base), &faults.links);
+    let both = TrafficView::wrap(FaultView::wrap(Arc::clone(&base), &faults.links), trace);
+    let tags = [
+        base.cache_tag(),
+        traffic.cache_tag(),
+        traffic_other.cache_tag(),
+        faulted.cache_tag(),
+        both.cache_tag(),
+    ];
+    for i in 0..tags.len() {
+        for j in (i + 1)..tags.len() {
+            assert_ne!(tags[i], tags[j], "tags {i} and {j} collide: {:016x}", tags[i]);
+        }
+    }
+    // Analytical base wraps too, with its own distinct tag.
+    let analytical = TrafficView::wrap(
+        Arc::new(Analytical::default()),
+        Arc::new(TrafficTrace::from_profile("bursty", 5, dims).unwrap()),
+    );
+    assert_ne!(analytical.cache_tag(), traffic.cache_tag());
+}
+
+#[test]
+fn json_replay_reproduces_the_simulation() {
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    let trace = TrafficTrace::from_profile("bursty", 11, dims).unwrap();
+    let json = trace.to_json();
+    cosmic::util::json::validate(&json).unwrap();
+    let replayed = TrafficTrace::from_json(&json).unwrap();
+    assert_eq!(trace.fingerprint(), replayed.fingerprint());
+    let live = run_with(Simulator::new().with_traffic(Arc::new(trace)), &cluster, &model, &par);
+    let replay =
+        run_with(Simulator::new().with_traffic(Arc::new(replayed)), &cluster, &model, &par);
+    assert_eq!(live.latency_us.to_bits(), replay.latency_us.to_bits());
+    assert_eq!(live, replay);
+}
+
+#[test]
+fn traffic_spans_land_on_the_traffic_track() {
+    let (cluster, model, par) = setup();
+    let dims = cluster.topology.num_dims();
+    let rec = Arc::new(Recorder::new());
+    Simulator::new()
+        .with_traffic(Arc::new(TrafficTrace::from_profile("bursty", 9, dims).unwrap()))
+        .with_trace_sink(Arc::clone(&rec))
+        .run(&cluster, &model, &par, 1024, ExecutionMode::Training)
+        .unwrap();
+    let spans = rec.spans();
+    let traffic_spans: Vec<_> = spans.iter().filter(|s| s.pid == tracks::TRAFFIC_PID).collect();
+    assert!(!traffic_spans.is_empty(), "no spans on the co-tenant traffic track");
+    assert!(traffic_spans.iter().all(|s| s.name.starts_with("co-tenant")));
+    cosmic::util::json::validate(&cosmic::obs::chrome_trace_json(&spans)).unwrap();
+}
+
+#[test]
+fn traffic_search_end_to_end() {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let mut env = make_env_traffic(
+        cluster,
+        vec![WorkloadSpec::training(model, 1024)],
+        Objective::PerfPerBwPerNpu,
+        "diurnal",
+        7,
+        2,
+        RobustAggregate::Expected,
+    )
+    .unwrap();
+    let cfg = DseConfig::new(AgentKind::Ga, 40, 42);
+    let result = DseRunner::new(cfg, SearchScope::FullStack).run(&mut env);
+    assert_eq!(result.history.len(), 40);
+    assert!(result.best_reward > 0.0, "traffic-aware search found no valid design");
+    assert!(env.traffic_evals() > 0, "traffic mode never swept the suite");
+    assert_eq!(env.eval_panics(), 0);
+    let (suite, aggregate) = env.traffic_suite().expect("traffic mode is on");
+    assert_eq!(suite.len(), 3); // nominal + 2 seeded
+    assert_eq!(aggregate, RobustAggregate::Expected);
+    assert!(!result.best_reports.is_empty());
+}
+
+#[test]
+fn worst_case_traffic_bounds_expected_from_below() {
+    let (cluster, model, _) = setup();
+    let dims = cluster.topology.num_dims();
+    let suite = || TrafficSuite::generate("bursty", 13, 3, dims).unwrap();
+    let build = |aggregate| {
+        cosmic::harness::make_env(
+            presets::system1(),
+            vec![WorkloadSpec::training(model.clone(), 1024)],
+            Objective::PerfPerBwPerNpu,
+        )
+        .with_traffic_suite(suite(), aggregate)
+    };
+    let g = build(RobustAggregate::Expected).pss.baseline_genome();
+    let expected = build(RobustAggregate::Expected).evaluate_nomemo(&g).reward;
+    let worst = build(RobustAggregate::WorstCase).evaluate_nomemo(&g).reward;
+    assert!(expected > 0.0 && worst > 0.0);
+    assert!(worst <= expected, "min over traces exceeded their mean");
+}
