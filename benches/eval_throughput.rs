@@ -31,6 +31,11 @@
 //!    zero-cost when idle (a nominal trace reproduces the trace-free
 //!    report bit for bit), and a flat co-tenant must price exactly like
 //!    the fabric's scalar `background_load` knob (same float path).
+//! 6. **Chunk-precedence zero-cost** — hard gate: with
+//!    `FlowLevelConfig::with_chunk_precedence` off, all three fidelity
+//!    rungs must price bit-identically to the pre-knob paths (the flow
+//!    rung through a builder on/off round-trip, the packet rung with
+//!    the flag set in its fabric — that rung documents ignoring it).
 //!
 //! Usage: `cargo bench --bench eval_throughput [-- --smoke] [-- --out FILE]`
 //! `--smoke` shrinks the workload for CI and keeps the regression
@@ -44,7 +49,7 @@ use cosmic::dse::{
 };
 use cosmic::faults::FaultScenario;
 use cosmic::harness::{make_env, make_env_robust, make_env_traffic};
-use cosmic::netsim::{FidelityMode, FlowLevelConfig, TrafficTrace};
+use cosmic::netsim::{FidelityMode, FlowLevelConfig, PacketLevelConfig, TrafficTrace};
 use cosmic::obs::Recorder;
 use cosmic::pss::SearchScope;
 use cosmic::sim::{presets, Simulator};
@@ -283,6 +288,38 @@ fn main() {
         .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
         .unwrap();
 
+    // Chunk-precedence zero-cost pin (hard gate below): with the mode
+    // off, every rung must price exactly as it did before the knob
+    // existed — the flag may only act inside the flow-level drain. The
+    // flow rung is pinned through a builder round-trip (on, then off
+    // again), the packet rung with the flag left *on* in its fabric
+    // (the rung documents that it ignores the mode), and the
+    // analytical rung through its explicit-fidelity constructor.
+    let over4 = FlowLevelConfig::oversubscribed(4.0);
+    let analytical_report = Simulator::new()
+        .with_fidelity(FidelityMode::Analytical)
+        .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+        .unwrap();
+    let flow_main_report = Simulator::new()
+        .with_flow_config(over4.clone())
+        .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+        .unwrap();
+    let flow_roundtrip_report = Simulator::new()
+        .with_flow_config(over4.clone().with_chunk_precedence(true).with_chunk_precedence(false))
+        .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+        .unwrap();
+    let pkt_cfg = PacketLevelConfig::oversubscribed(4.0);
+    let pkt_main_report = Simulator::new()
+        .with_packet_config(pkt_cfg.clone())
+        .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+        .unwrap();
+    let mut pkt_flagged_cfg = pkt_cfg;
+    pkt_flagged_cfg.fabric = pkt_flagged_cfg.fabric.with_chunk_precedence(true);
+    let pkt_flagged_report = Simulator::new()
+        .with_packet_config(pkt_flagged_cfg)
+        .run(&cluster, &model, &par, 2048, ExecutionMode::Training)
+        .unwrap();
+
     // --- regression gates (computed first so the JSON records them) ---
     // Smoke thresholds are deliberately loose: same-process ratios on a
     // noisy shared runner, never validated on this hardware before CI.
@@ -366,6 +403,18 @@ fn main() {
     // same per-dim degradation, same float path, bit-identical report.
     if bg_report != uniform_report {
         failures.push("uniform traffic trace diverged from scalar background load".to_string());
+    }
+    // Deterministic gate: chunk precedence off is free — all three
+    // rungs price bit-identically to the pre-knob paths.
+    if plain_report.as_ref() != Some(&analytical_report) {
+        failures.push("analytical rung drifted from the default simulator".to_string());
+    }
+    if flow_main_report != flow_roundtrip_report {
+        failures
+            .push("chunk-precedence off drifted the flow rung from current main".to_string());
+    }
+    if pkt_main_report != pkt_flagged_report {
+        failures.push("packet rung reacted to the chunk-precedence flag".to_string());
     }
     if warm_speedup < min_warm {
         failures.push(format!("warm-cache speedup {warm_speedup:.2}x < {min_warm}x"));

@@ -20,8 +20,8 @@ pub mod scheduler;
 
 pub use algorithms::{alpha_beta_terms, collective_time_us, CollAlgo, CollectiveKind};
 pub use multidim::{
-    compose_phases, multidim_collective_time_us, phase_plan, phase_plan_into, MultiDimPolicy,
-    PhaseSpec,
+    compose_phases, multidim_collective_time_us, phase_plan, phase_plan_into, ChunkSchedule,
+    MultiDimPolicy, PhaseSpec,
 };
 pub use scheduler::{ChunkScheduler, SchedulingPolicy};
 

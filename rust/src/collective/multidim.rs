@@ -191,6 +191,89 @@ fn compose_durations(
     }
 }
 
+/// Dependency structure of one collective's chunk-level flow graph:
+/// which earlier flows must *complete* before chunk `k`'s phase `p` may
+/// start. Derived purely from the per-chunk phase durations, it encodes
+/// each policy's pipeline discipline so that an event-driven drain of the
+/// graph (`FlowSim::run_chunked`) reproduces [`compose_phases`]' closed
+/// form exactly when nothing contends for the links (pinned by
+/// `rust/tests/chunk_precedence.rs`):
+///
+/// - **Baseline** — an exclusive-stage flow shop: `(k, p)` waits for
+///   `(k, p-1)` (phases are sequential within a chunk) and `(k-1, p)`
+///   (chunk FIFO on each phase's dimension). Completion times obey
+///   `C(k, p) = sum(d_0..=d_p) + k * max(d_0..=d_p)`, so the makespan is
+///   `sum + (chunks-1) * bottleneck` — the Baseline closed form.
+/// - **BlueConnect** — each phase streams its own chunk FIFO
+///   concurrently; only the *designated bottleneck* phase (first index
+///   of the maximal duration) of chunk `k` additionally waits for chunk
+///   `k` on every strictly-faster "feeder" phase. Completion of the
+///   bottleneck chain is `fill + (k+1) * bottleneck`, so the makespan is
+///   `bottleneck * chunks + fill` — the BlueConnect closed form
+///   (equal-peak phases are not feeders, matching the fold's strict
+///   `d < bottleneck` fill update).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkSchedule {
+    policy: MultiDimPolicy,
+    /// First index of the maximal per-chunk phase duration.
+    bottleneck: usize,
+    /// BlueConnect only: phases strictly faster than the bottleneck.
+    feeders: Vec<usize>,
+}
+
+impl ChunkSchedule {
+    /// Build the schedule for one collective from its per-chunk phase
+    /// durations (ideal, uncongested — see [`PhaseSpec::duration_us`]).
+    pub fn new(policy: MultiDimPolicy, durations: &[f64]) -> Self {
+        let mut bottleneck = 0;
+        let mut peak = f64::NEG_INFINITY;
+        for (i, &d) in durations.iter().enumerate() {
+            if d > peak {
+                peak = d;
+                bottleneck = i;
+            }
+        }
+        let feeders = match policy {
+            MultiDimPolicy::Baseline => Vec::new(),
+            MultiDimPolicy::BlueConnect => durations
+                .iter()
+                .enumerate()
+                .filter(|&(_, &d)| d < peak)
+                .map(|(i, _)| i)
+                .collect(),
+        };
+        Self { policy, bottleneck, feeders }
+    }
+
+    /// The designated bottleneck phase (first index of the maximal
+    /// per-chunk duration).
+    pub fn bottleneck(&self) -> usize {
+        self.bottleneck
+    }
+
+    /// Visit every `(chunk, phase)` whose *completion* gates the start
+    /// of chunk `k`'s phase `p`.
+    pub fn deps(&self, k: u32, p: usize, mut visit: impl FnMut(u32, usize)) {
+        if k > 0 {
+            visit(k - 1, p);
+        }
+        match self.policy {
+            MultiDimPolicy::Baseline => {
+                if p > 0 {
+                    visit(k, p - 1);
+                }
+            }
+            MultiDimPolicy::BlueConnect => {
+                if p == self.bottleneck {
+                    for &q in &self.feeders {
+                        visit(k, q);
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Time (us) for a multi-dimensional collective of `bytes` per-NPU payload
 /// over the given dimension subset, split into `chunks` pipelined pieces.
 ///
@@ -410,6 +493,59 @@ mod tests {
                     assert!(
                         (composed - direct).abs() < 1e-6,
                         "{kind} {} chunks={chunks}: {composed} vs {direct}",
+                        policy.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_schedule_recurrence_matches_closed_form() {
+        // Drain the precedence graph analytically (topological order,
+        // each flow taking exactly its uncongested duration once its
+        // deps complete) and pin the makespan to compose_phases. Covers
+        // ties, a zero-duration phase, and single-phase plans.
+        let duration_sets: Vec<Vec<f64>> = vec![
+            vec![3.0, 7.0, 2.0],
+            vec![5.0, 5.0],
+            vec![4.0],
+            vec![0.0, 6.0, 6.0, 1.0],
+            vec![2.5, 0.0],
+        ];
+        for durations in &duration_sets {
+            for chunks in [1u32, 2, 5, 16] {
+                for policy in MultiDimPolicy::ALL {
+                    let sched = ChunkSchedule::new(policy, durations);
+                    let n = durations.len();
+                    let mut done = vec![vec![0.0f64; n]; chunks as usize];
+                    for k in 0..chunks {
+                        // Non-bottleneck phases first: under BlueConnect
+                        // the bottleneck waits on same-chunk feeders.
+                        let mut order: Vec<usize> =
+                            (0..n).filter(|&p| p != sched.bottleneck()).collect();
+                        order.push(sched.bottleneck());
+                        // Baseline needs in-chunk phase order instead.
+                        if policy == MultiDimPolicy::Baseline {
+                            order = (0..n).collect();
+                        }
+                        for p in order {
+                            let mut start = 0.0f64;
+                            sched.deps(k, p, |dk, dp| {
+                                start = start.max(done[dk as usize][dp]);
+                            });
+                            done[k as usize][p] = start + durations[p];
+                        }
+                    }
+                    let makespan = done
+                        .iter()
+                        .flat_map(|row| row.iter().copied())
+                        .fold(0.0f64, f64::max);
+                    let closed = compose_phases(policy, durations, chunks);
+                    assert!(
+                        (makespan - closed).abs() < 1e-9,
+                        "{} chunks={chunks} durations={durations:?}: \
+                         graph={makespan} closed={closed}",
                         policy.name()
                     );
                 }

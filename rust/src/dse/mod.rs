@@ -153,6 +153,12 @@ pub struct Environment {
     /// The flow-level twin, used when a genome's PsA fidelity knob (or a
     /// caller via [`Environment::evaluate_with`]) asks for congestion.
     flow_simulator: Simulator,
+    /// The chunk-precedence flow twin: the flow fabric with
+    /// [`FlowLevelConfig::with_chunk_precedence`] on, used when a
+    /// genome's PsA "Chunk Precedence" knob asks for the per-chunk
+    /// drain. Kept as its own simulator so the two modes' backends carry
+    /// distinct cache tags and never share memoized collective costs.
+    chunked_flow_simulator: Simulator,
     /// The packet-level twin, the most expensive rung (staged-packet
     /// finalists, or a genome/caller asking for `FidelityMode::Packet`).
     packet_simulator: Simulator,
@@ -231,6 +237,8 @@ impl Environment {
             pss,
             simulator: Simulator::new(),
             flow_simulator: Simulator::new().with_fidelity(FidelityMode::FlowLevel),
+            chunked_flow_simulator: Simulator::new()
+                .with_flow_config(FlowLevelConfig::default().with_chunk_precedence(true)),
             packet_simulator: Simulator::new().with_fidelity(FidelityMode::Packet),
             workloads,
             objective,
@@ -253,9 +261,15 @@ impl Environment {
     /// Reconfigure the flow-level twin's fabric (oversubscription /
     /// background load) — builder style.
     pub fn with_flow_config(mut self, config: FlowLevelConfig) -> Self {
-        let mut sim = Simulator::new().with_flow_config(config);
+        let mut sim = Simulator::new().with_flow_config(config.clone());
         sim.mem_budget_bytes = self.simulator.mem_budget_bytes;
         self.flow_simulator = sim;
+        // The chunked twin tracks the same fabric with the mode forced
+        // on, so the PsA knob toggles precedence without losing the
+        // configured oversubscription/background load.
+        let mut chunked = Simulator::new().with_flow_config(config.with_chunk_precedence(true));
+        chunked.mem_budget_bytes = self.simulator.mem_budget_bytes;
+        self.chunked_flow_simulator = chunked;
         self
     }
 
@@ -601,6 +615,7 @@ impl Environment {
             }
         };
         let fidelity = forced.unwrap_or_else(|| self.pss.fidelity_of(&point));
+        let chunked = self.pss.chunk_precedence_of(&point);
         let knob_trace = match self.knob_trace(&point, &cluster) {
             Ok(t) => t,
             Err(e) => {
@@ -621,6 +636,7 @@ impl Environment {
                 &par,
                 ckpt,
                 fidelity,
+                chunked,
                 use_eval_cache,
                 &mut priced_any,
             ) {
@@ -637,11 +653,7 @@ impl Environment {
                 }
             }
         } else {
-            let sim = match fidelity {
-                FidelityMode::FlowLevel => &self.flow_simulator,
-                FidelityMode::Packet => &self.packet_simulator,
-                FidelityMode::Analytical => &self.simulator,
-            };
+            let sim = self.sim_for(fidelity, chunked);
             self.simulate_traffic_point(
                 sim,
                 knob_trace.as_ref(),
@@ -791,6 +803,18 @@ impl Environment {
         StepOutcome { reward, reports, invalid_reason: None }
     }
 
+    /// The base simulator for one evaluation: the fidelity rung, with
+    /// the flow rung split by the design point's chunk-precedence
+    /// choice. The analytical and packet rungs ignore the flag.
+    fn sim_for(&self, fidelity: FidelityMode, chunked: bool) -> &Simulator {
+        match fidelity {
+            FidelityMode::FlowLevel if chunked => &self.chunked_flow_simulator,
+            FidelityMode::FlowLevel => &self.flow_simulator,
+            FidelityMode::Packet => &self.packet_simulator,
+            FidelityMode::Analytical => &self.simulator,
+        }
+    }
+
     /// Run one materialized design through every scenario of the suite
     /// at one fidelity. `Ok` carries one outcome per scenario (nominal
     /// first, reports attached); `Err` carries the invalid outcome (a
@@ -806,22 +830,19 @@ impl Environment {
         par: &Parallelization,
         ckpt: Option<u64>,
         fidelity: FidelityMode,
+        chunked: bool,
         use_eval_cache: bool,
         priced_any: &mut bool,
     ) -> Result<Vec<StepOutcome>, StepOutcome> {
-        let base = match fidelity {
-            FidelityMode::FlowLevel => &self.flow_simulator,
-            FidelityMode::Packet => &self.packet_simulator,
-            FidelityMode::Analytical => &self.simulator,
-        };
+        let base = self.sim_for(fidelity, chunked);
         let mut outcomes = Vec::with_capacity(robust.scenarios.len());
         for scenario in &robust.scenarios {
             let sim =
                 base.clone().with_faults(Arc::clone(scenario)).with_checkpoint_interval(ckpt);
             // Traffic crosses the suite: each scenario sweeps every trace
             // (folded by the traffic aggregate) before scenarios fold.
-            let out =
-                self.simulate_traffic_point(&sim, knob_trace, cluster, par, use_eval_cache, priced_any);
+            let out = self
+                .simulate_traffic_point(&sim, knob_trace, cluster, par, use_eval_cache, priced_any);
             if out.invalid_reason.is_some() {
                 return Err(out);
             }
@@ -848,6 +869,7 @@ impl Environment {
         let point = self.pss.schema.decode_valid(genome)?;
         let (cluster, par) = self.pss.materialize(&point)?;
         let fidelity = forced.unwrap_or_else(|| self.pss.fidelity_of(&point));
+        let chunked = self.pss.chunk_precedence_of(&point);
         let ckpt = self.pss.checkpoint_interval_of(&point);
         let knob_trace = self.knob_trace(&point, &cluster)?;
         if self.traffic.is_some() || knob_trace.is_some() {
@@ -863,6 +885,7 @@ impl Environment {
                 &par,
                 ckpt,
                 fidelity,
+                chunked,
                 true,
                 &mut priced_any,
             )

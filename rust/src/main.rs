@@ -66,14 +66,14 @@ fn print_usage() {
 USAGE:
   cosmic simulate [--system 1|2|3] [--model NAME] [--batch N]
                   [--dp N --sp N --pp N --shard 0|1] [--layers N] [--mode train|prefill|decode]
-                  [--fidelity analytical|flow|packet] [--trace FILE.json]
+                  [--fidelity analytical|flow|packet] [--chunk-precedence 0|1] [--trace FILE.json]
                   [--faults SEED] [--ckpt ITERS]
                   [--traffic none|constant|diurnal|bursty|FILE.json] [--traffic-seed N]
   cosmic search   [--system 1|2|3] [--model NAME] [--batch N] [--agent RW|GA|ACO|BO]
                   [--scope full|workload|collective|network] [--steps N] [--seed N]
                   [--objective bw|cost|latency]
                   [--strategy genome|analytical|flow|packet|staged|staged-packet]
-                  [--promote K] [--packet-top K]
+                  [--chunk-precedence 0|1|knob] [--promote K] [--packet-top K]
                   [--cache-cap N] [--progress N] [--telemetry FILE.json]
                   [--robust expected|worst] [--scenarios K] [--faults-seed N]
                   [--traffic PROFILE|FILE.json] [--traffic-seed N] [--traffic-traces K]
@@ -89,8 +89,22 @@ type Opts = HashMap<String, String>;
 
 /// The value-taking flags each subcommand accepts (without the `--`).
 const SIMULATE_FLAGS: &[&str] = &[
-    "system", "model", "batch", "dp", "sp", "pp", "shard", "layers", "mode", "fidelity", "trace",
-    "faults", "ckpt", "traffic", "traffic-seed",
+    "system",
+    "model",
+    "batch",
+    "dp",
+    "sp",
+    "pp",
+    "shard",
+    "layers",
+    "mode",
+    "fidelity",
+    "chunk-precedence",
+    "trace",
+    "faults",
+    "ckpt",
+    "traffic",
+    "traffic-seed",
 ];
 const SEARCH_FLAGS: &[&str] = &[
     "system",
@@ -102,6 +116,7 @@ const SEARCH_FLAGS: &[&str] = &[
     "seed",
     "objective",
     "strategy",
+    "chunk-precedence",
     "promote",
     "packet-top",
     "cache-cap",
@@ -209,6 +224,23 @@ fn cmd_simulate(opts: &Opts) -> Result<(), String> {
         f => return Err(format!("unknown fidelity '{f}'")),
     };
     let mut sim = Simulator::new().with_fidelity(fidelity);
+    match opt_str(opts, "chunk-precedence", "0") {
+        "0" => {}
+        "1" => {
+            if fidelity != FidelityMode::FlowLevel {
+                return Err(
+                    "--chunk-precedence 1 needs --fidelity flow (the analytical and packet \
+                     rungs ignore the mode)"
+                        .to_string(),
+                );
+            }
+            sim = sim.with_flow_config(
+                cosmic::netsim::FlowLevelConfig::default().with_chunk_precedence(true),
+            );
+            println!("chunk precedence: on (per-chunk flow FIFO drain)");
+        }
+        other => return Err(format!("--chunk-precedence needs 0 or 1, got '{other}'")),
+    }
     let recorder = opts.get("trace").map(|_| Arc::new(Recorder::new()));
     if let Some(rec) = &recorder {
         sim = sim.with_trace_sink(Arc::clone(rec));
@@ -320,18 +352,38 @@ fn cmd_search(opts: &Opts) -> Result<(), String> {
     let traffic_seed = opt_u64(opts, "traffic-seed", 7)?;
     let traffic_k = opt_u64(opts, "traffic-traces", 2)? as usize;
 
+    let chunk_prec = opt_str(opts, "chunk-precedence", "0");
+    if !matches!(chunk_prec, "0" | "1" | "knob") {
+        return Err(format!("--chunk-precedence needs 0|1|knob, got '{chunk_prec}'"));
+    }
+
     let npus = cluster.npus();
     let dims = cluster.topology.num_dims();
     let baseline_par = Parallelization::derive(npus, npus.min(64), 1, 1, true)?;
     // Robust searches co-optimize the checkpoint interval, so the knob
     // joins the action space alongside the paper's Table 4 parameters.
-    let schema = if robust.is_some() {
-        with_checkpoint_param(paper_table4_schema(npus, dims))
-    } else {
-        paper_table4_schema(npus, dims)
-    };
+    let mut schema = paper_table4_schema(npus, dims);
+    if robust.is_some() {
+        schema = with_checkpoint_param(schema);
+    }
+    if chunk_prec == "knob" {
+        schema = cosmic::psa::with_chunk_precedence_param(schema);
+    }
     let pss = Pss::new(schema, cluster, baseline_par);
     let mut env = Environment::new(pss, vec![WorkloadSpec::training(model, batch)], objective);
+    match chunk_prec {
+        "1" => {
+            // Force the per-chunk drain for every flow-level evaluation
+            // (whatever routes a genome there: the fidelity knob, a
+            // fixed flow strategy, or staged promotion).
+            env = env.with_flow_config(
+                cosmic::netsim::FlowLevelConfig::default().with_chunk_precedence(true),
+            );
+            println!("chunk precedence: on for flow-level evaluations");
+        }
+        "knob" => println!("chunk precedence: searched (PsA \"Chunk Precedence\" knob)"),
+        _ => {}
+    }
     if let Some(aggregate) = robust {
         env = env.with_scenarios(ScenarioSuite::generate(faults_seed, scenarios, dims), aggregate);
     }
@@ -589,6 +641,13 @@ mod tests {
         assert!(e.contains("--batch") && e.contains("twelve"), "{e}");
         let o = parse_opts(&argv(&["--steps", "-3"]), SEARCH_FLAGS).unwrap();
         assert!(opt_u64(&o, "steps", 0).is_err(), "negative must not parse as u64");
+    }
+
+    #[test]
+    fn chunk_precedence_flag_is_known_where_it_applies() {
+        assert!(parse_opts(&argv(&["--chunk-precedence", "1"]), SIMULATE_FLAGS).is_ok());
+        assert!(parse_opts(&argv(&["--chunk-precedence", "knob"]), SEARCH_FLAGS).is_ok());
+        assert!(parse_opts(&argv(&["--chunk-precedence", "1"]), SPACE_FLAGS).is_err());
     }
 
     #[test]

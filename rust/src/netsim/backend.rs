@@ -21,9 +21,10 @@ use std::fmt;
 use std::sync::Arc;
 
 use super::fabric::FlowLevelConfig;
-use super::flow::{FlowSegment, FlowSim, FlowSpec};
+use super::flow::{ChunkFlowSpec, ChunkSegment, FlowSegment, FlowSim, FlowSpec};
 use crate::collective::{
-    compose_phases, phase_plan, CollAlgo, CollectiveKind, MultiDimPolicy, SchedulingPolicy,
+    compose_phases, phase_plan, ChunkSchedule, CollAlgo, CollectiveKind, MultiDimPolicy,
+    SchedulingPolicy,
 };
 use crate::obs::{tracks, TraceSink};
 use crate::topology::{DimCost, Topology};
@@ -370,6 +371,13 @@ impl NetworkBackend for Analytical {
 /// dimension's capacity max-min fairly, so contention between layers'
 /// gradient syncs — invisible to the serial analytical drain — shapes
 /// the exposed tail.
+///
+/// With [`FlowLevelConfig::with_chunk_precedence`] enabled, the drain
+/// models every chunk's every phase as its own flow in a per-(job, dim)
+/// FIFO precedence DAG instead of collapsing the pipeline into a
+/// steady-state tail: max-min shares are re-solved at each chunk
+/// completion, so concurrent collectives' chunks interleave on shared
+/// links. Off (the default) is bit-identical to the historical model.
 #[derive(Debug, Clone, Default)]
 pub struct FlowLevel {
     pub config: FlowLevelConfig,
@@ -432,6 +440,41 @@ impl FlowLevel {
         }
         specs
     }
+
+    /// Build the chunk-precedence flow graph of one overlappable
+    /// collective: every chunk's every phase becomes its own flow, wired
+    /// into the [`ChunkSchedule`] dependency DAG (chunk FIFO within each
+    /// phase, plus the policy's cross-phase edges). Flow `k * plan.len()
+    /// + p` is chunk `k`, phase `p`. Alone on the fabric the graph's
+    /// makespan equals the [`compose_phases`] closed form exactly — see
+    /// `ChunkSchedule`'s recurrence proof — so the uncontended price
+    /// still matches [`NetworkBackend::collective_time_us`].
+    fn chunked_job_of(&self, call: &CollectiveCall<'_>) -> Vec<ChunkFlowSpec> {
+        let chunks = call.chunks.max(1);
+        let plan = Self::chunk_plan(call);
+        if plan.is_empty() {
+            return Vec::new();
+        }
+        let durations: Vec<f64> = plan.iter().map(|p| self.congested_time(call, p)).collect();
+        let sched = ChunkSchedule::new(call.policy, &durations);
+        let np = plan.len();
+        let mut flows = Vec::with_capacity(np * chunks as usize);
+        for k in 0..chunks {
+            for (p, phase) in plan.iter().enumerate() {
+                let mut deps = Vec::new();
+                sched.deps(k, p, |dk, dp| deps.push(dk as usize * np + dp));
+                flows.push(ChunkFlowSpec {
+                    chunk: k,
+                    phase: p,
+                    dim: call.span[phase.span_dim].1,
+                    bytes: phase.wire_bytes,
+                    latency_us: phase.alpha_us,
+                    deps,
+                });
+            }
+        }
+        flows
+    }
 }
 
 impl NetworkBackend for FlowLevel {
@@ -462,6 +505,10 @@ impl NetworkBackend for FlowLevel {
                 .as_ref()
                 .map(|v| v.iter().map(|f| f.to_bits()).collect::<Vec<u64>>())
                 .hash(h);
+            // Chunk-precedence drains price overlap differently from the
+            // steady-state model; the two modes must never share
+            // memoized collective costs.
+            self.config.chunk_precedence.hash(h);
         })
     }
 
@@ -488,6 +535,16 @@ impl NetworkBackend for FlowLevel {
         // LIFO/FIFO admission policy is moot.
         let Some(first) = jobs.first() else { return Vec::new() };
         let caps = self.config.dim_capacities(first.call.topology);
+        if self.config.chunk_precedence {
+            let cjobs: Vec<(f64, Vec<ChunkFlowSpec>)> = jobs
+                .iter()
+                .map(|j| (j.issue_us.max(0.0), self.chunked_job_of(&j.call)))
+                .collect();
+            let results = FlowSim::new(caps).run_chunked(&cjobs);
+            return collapse_per_layer(
+                jobs.iter().zip(results.iter()).map(|(j, r)| (j.layer, r.finish_us)),
+            );
+        }
         let chains: Vec<(f64, Vec<FlowSpec>)> = jobs
             .iter()
             .map(|j| (j.issue_us.max(0.0), self.chain_of(&j.call)))
@@ -506,6 +563,28 @@ impl NetworkBackend for FlowLevel {
     ) -> Vec<(u64, f64)> {
         let Some(first) = jobs.first() else { return Vec::new() };
         let caps = self.config.dim_capacities(first.call.topology);
+        if self.config.chunk_precedence {
+            let cjobs: Vec<(f64, Vec<ChunkFlowSpec>)> = jobs
+                .iter()
+                .map(|j| (j.issue_us.max(0.0), self.chunked_job_of(&j.call)))
+                .collect();
+            let mut segments: Vec<ChunkSegment> = Vec::new();
+            let results = FlowSim::new(caps).run_chunked_recorded(&cjobs, &mut segments);
+            if sink.enabled() {
+                for seg in &segments {
+                    let layer = jobs[seg.job].layer;
+                    sink.span(
+                        tracks::net_dim(seg.dim),
+                        &format!("grad L{layer} c{} p{}", seg.chunk, seg.phase),
+                        seg.start_us,
+                        seg.finish_us,
+                    );
+                }
+            }
+            return collapse_per_layer(
+                jobs.iter().zip(results.iter()).map(|(j, r)| (j.layer, r.finish_us)),
+            );
+        }
         let chains: Vec<(f64, Vec<FlowSpec>)> = jobs
             .iter()
             .map(|j| (j.issue_us.max(0.0), self.chain_of(&j.call)))
@@ -717,6 +796,87 @@ mod tests {
                 assert!(dim < topo.dims.len());
             }
         }
+    }
+
+    #[test]
+    fn chunked_uncontended_drain_matches_closed_form() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        for policy in [MultiDimPolicy::Baseline, MultiDimPolicy::BlueConnect] {
+            for chunks in [1u32, 2, 5, 16] {
+                let mut c = call(&topo, &span, &algos, 64e6, chunks);
+                c.policy = policy;
+                for flow in [
+                    FlowLevel::new(FlowLevelConfig::default().with_chunk_precedence(true)),
+                    FlowLevel::new(
+                        FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true),
+                    ),
+                ] {
+                    let want = flow.collective_time_us(&c);
+                    let job = OverlapCall { layer: 0, issue_us: 7.5, call: c };
+                    let got = flow.drain_overlapped(&[job], SchedulingPolicy::Fifo);
+                    assert_eq!(got.len(), 1);
+                    let drained = got[0].1 - 7.5;
+                    assert!(
+                        (drained - want).abs() < 1e-6 * want.max(1.0),
+                        "{policy:?} chunks={chunks}: drain={drained} closed={want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_precedence_folds_into_cache_tag() {
+        let off = FlowLevel::default();
+        let on = FlowLevel::new(FlowLevelConfig::default().with_chunk_precedence(true));
+        assert_ne!(off.cache_tag(), on.cache_tag());
+        let off4 = FlowLevel::new(FlowLevelConfig::oversubscribed(4.0));
+        let on4 =
+            FlowLevel::new(FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true));
+        assert_ne!(off4.cache_tag(), on4.cache_tag());
+        assert_ne!(on.cache_tag(), on4.cache_tag());
+    }
+
+    #[test]
+    fn chunked_concurrent_jobs_finish_no_earlier_than_alone() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 16e6, 4);
+        let flow =
+            FlowLevel::new(FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true));
+        let job0 = OverlapCall { layer: 0, issue_us: 0.0, call: c };
+        let alone = flow.drain_overlapped(&[job0], SchedulingPolicy::Fifo);
+        let jobs: Vec<OverlapCall> = (0..4)
+            .map(|l| OverlapCall { layer: l, issue_us: 0.0, call: c })
+            .collect();
+        let together = flow.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        let last = together.iter().map(|(_, t)| *t).fold(0.0, f64::max);
+        assert!(last >= alone[0].1 - 1e-9, "last={last} alone={}", alone[0].1);
+    }
+
+    #[test]
+    fn chunked_traced_drain_matches_untraced_and_labels_chunks() {
+        let topo = topo();
+        let span = span_of(&topo);
+        let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+        let c = call(&topo, &span, &algos, 16e6, 3);
+        let jobs: Vec<OverlapCall> = (0..3)
+            .map(|l| OverlapCall { layer: l, issue_us: l as f64 * 5.0, call: c })
+            .collect();
+        let flow =
+            FlowLevel::new(FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true));
+        let plain = flow.drain_overlapped(&jobs, SchedulingPolicy::Fifo);
+        let rec = crate::obs::Recorder::new();
+        let traced = flow.drain_overlapped_traced(&jobs, SchedulingPolicy::Fifo, &rec);
+        assert_eq!(plain, traced, "tracing must not perturb completions");
+        let spans = rec.spans();
+        assert!(spans.len() >= 9, "expected per-chunk spans, got {}", spans.len());
+        assert!(spans.iter().all(|s| s.pid == tracks::NET_PID));
+        assert!(spans.iter().all(|s| s.tid >= tracks::NET_DIM_BASE));
+        assert!(spans.iter().any(|s| s.name.contains("c2 p")), "chunk labels missing");
     }
 
     #[test]

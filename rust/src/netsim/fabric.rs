@@ -60,6 +60,13 @@ pub struct FlowLevelConfig {
     /// uniform trace takes the exact arithmetic path of
     /// `with_background_load`.
     pub per_dim_background: Option<Vec<f64>>,
+    /// Chunk-level flow precedence: when on, the flow-level drain admits
+    /// each collective's chunks as a per-(job, dim) FIFO precedence
+    /// graph (`FlowSim::run_chunked`) instead of one steady-state
+    /// aggregate flow per phase, so chunks of concurrent collectives
+    /// genuinely interleave on shared dimensions. Off (the default) is
+    /// bit-identical to the historical steady-state model.
+    pub chunk_precedence: bool,
 }
 
 impl Default for FlowLevelConfig {
@@ -69,6 +76,7 @@ impl Default for FlowLevelConfig {
             background_load: 0.0,
             per_dim_oversubscription: None,
             per_dim_background: None,
+            chunk_precedence: false,
         }
     }
 }
@@ -82,6 +90,13 @@ impl FlowLevelConfig {
     /// A multi-tenant variant: `load` of every link is already in use.
     pub fn with_background_load(mut self, load: f64) -> Self {
         self.background_load = sanitize_load(load);
+        self
+    }
+
+    /// Toggle chunk-level flow precedence (see the field docs) —
+    /// builder style.
+    pub fn with_chunk_precedence(mut self, on: bool) -> Self {
+        self.chunk_precedence = on;
         self
     }
 
@@ -153,6 +168,7 @@ impl FlowLevelConfig {
                 .per_dim_background
                 .as_ref()
                 .map(|v| v.iter().map(|&x| sanitize_load(x)).collect()),
+            chunk_precedence: self.chunk_precedence,
         }
     }
 
@@ -285,12 +301,14 @@ mod tests {
             background_load: f64::NAN,
             per_dim_oversubscription: Some(vec![0.25, f64::INFINITY]),
             per_dim_background: Some(vec![-1.0, 2.0, f64::NAN]),
+            chunk_precedence: true,
         };
         let s = cfg.sanitized();
         assert_eq!(s.switch_oversubscription, 1.0);
         assert_eq!(s.background_load, 0.0);
         assert_eq!(s.per_dim_oversubscription, Some(vec![1.0, 1.0]));
         assert_eq!(s.per_dim_background, Some(vec![0.0, 0.95, 0.0]));
+        assert!(s.chunk_precedence, "mode flag passes through sanitization");
         // NaN background no longer reaches the capacity table even
         // before sanitizing (accessors clamp too).
         assert!(cfg.dim_capacities(&topo()).iter().all(|c| c.is_finite()));

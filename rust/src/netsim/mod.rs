@@ -13,7 +13,10 @@
 //! - [`flow`] — a flow-level network model: flows cross topology
 //!   dimensions, share capacity max-min fairly ([`maxmin_rates`]), and
 //!   progress is re-rated at every flow start/finish event
-//!   ([`FlowSim`]).
+//!   ([`FlowSim`]). An opt-in chunk-precedence mode
+//!   ([`FlowLevelConfig::with_chunk_precedence`]) admits each
+//!   collective's chunks as a per-(job, dim) FIFO dependency DAG
+//!   ([`ChunkFlowSpec`]) instead of a steady-state bottleneck tail.
 //! - [`fabric`] — what congests: switch oversubscription and co-tenant
 //!   background load ([`FlowLevelConfig`]).
 //! - [`backend`] — the [`NetworkBackend`] trait with the first two
@@ -70,7 +73,9 @@ pub use backend::{
 pub use calibrate::{calibrate_flow_config, CalibrationReport, CalibrationSample};
 pub use engine::EventQueue;
 pub use fabric::FlowLevelConfig;
-pub use flow::{maxmin_rates, ChainResult, FlowSegment, FlowSim, FlowSpec};
+pub use flow::{
+    maxmin_rates, ChainResult, ChunkFlowSpec, ChunkSegment, FlowSegment, FlowSim, FlowSpec,
+};
 pub use packet::{
     ecmp_path, FlowSpan, PacketChainResult, PacketLevel, PacketLevelConfig, PacketSim,
     PacketTrace, PortWindow, ServedPacket,

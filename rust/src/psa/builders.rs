@@ -24,6 +24,9 @@ pub mod names {
     /// The multi-tenant traffic-profile knob (optional; see
     /// [`super::with_traffic_param`]).
     pub const TRAFFIC_PROFILE: &str = "Traffic Profile";
+    /// The flow-level chunk-precedence knob (optional; see
+    /// [`super::with_chunk_precedence_param`]).
+    pub const CHUNK_PRECEDENCE: &str = "Chunk Precedence";
 }
 
 /// Append the netsim "Network Fidelity" knob ({Analytical, FlowLevel,
@@ -72,6 +75,23 @@ pub fn with_traffic_param(mut schema: Schema) -> Schema {
         names::TRAFFIC_PROFILE,
         Stack::Network,
         Domain::cats(&["None", "Constant", "Diurnal", "Bursty"]),
+    ));
+    schema
+}
+
+/// Append the flow-level "Chunk Precedence" knob ({Off, On}) to any
+/// schema. Opt-in like the other netsim knobs. When a design point's
+/// fidelity resolves to the flow rung, "On" swaps the overlap drain's
+/// steady-state chunk tail for the per-(job, dim) chunk FIFO precedence
+/// model ([`crate::netsim::FlowLevelConfig::with_chunk_precedence`]) —
+/// sharper multi-collective overlap at a modest event-count cost. The
+/// analytical and packet rungs ignore the knob (the packet rung already
+/// serializes at packet granularity).
+pub fn with_chunk_precedence_param(mut schema: Schema) -> Schema {
+    schema.params.push(ParamDef::scalar(
+        names::CHUNK_PRECEDENCE,
+        Stack::Network,
+        Domain::cats(&["Off", "On"]),
     ));
     schema
 }
@@ -283,5 +303,19 @@ mod tests {
             paper_table4_schema(1024, 4),
         )));
         assert_eq!(all.genome_len(), base.genome_len() + 3);
+    }
+
+    #[test]
+    fn chunk_precedence_param_appends_one_network_slot() {
+        let base = paper_table4_schema(1024, 4);
+        let with = with_chunk_precedence_param(paper_table4_schema(1024, 4));
+        assert_eq!(with.genome_len(), base.genome_len() + 1);
+        let p = with.param(names::CHUNK_PRECEDENCE).expect("chunk-precedence knob present");
+        assert_eq!(p.stack, Stack::Network);
+        assert_eq!(p.domain.cardinality(), 2);
+        assert!(base.param(names::CHUNK_PRECEDENCE).is_none());
+        // Composes with the other opt-in netsim knobs.
+        let both = with_chunk_precedence_param(with_fidelity_param(paper_table4_schema(1024, 4)));
+        assert_eq!(both.genome_len(), base.genome_len() + 2);
     }
 }

@@ -22,8 +22,8 @@ pub mod builders;
 pub mod space;
 
 pub use builders::{
-    paper_table1_schema, paper_table4_schema, with_checkpoint_param, with_fidelity_param,
-    with_traffic_param,
+    paper_table1_schema, paper_table4_schema, with_checkpoint_param, with_chunk_precedence_param,
+    with_fidelity_param, with_traffic_param,
 };
 pub use space::{design_space_size, DesignSpace};
 

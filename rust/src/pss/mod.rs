@@ -244,6 +244,16 @@ impl Pss {
             _ => None,
         }
     }
+
+    /// Whether a design point asks for chunk-level flow precedence.
+    /// Schemas without the optional "Chunk Precedence" knob (see
+    /// [`crate::psa::with_chunk_precedence_param`]) resolve to `false` —
+    /// the steady-state flow drain, the historical behavior. Only
+    /// meaningful when the point's fidelity is the flow rung; the other
+    /// rungs ignore it.
+    pub fn chunk_precedence_of(&self, point: &DesignPoint) -> bool {
+        matches!(point.get(names::CHUNK_PRECEDENCE).and_then(|v| v.as_cat()), Some(1))
+    }
 }
 
 /// Index of the closest value in an integer domain.
@@ -420,6 +430,31 @@ mod tests {
         let bare = pss();
         let bp = bare.schema.decode_valid(&bare.baseline_genome()).unwrap();
         assert_eq!(bare.traffic_profile_of(&bp), None);
+    }
+
+    #[test]
+    fn chunk_precedence_knob_resolves_and_defaults_off() {
+        use crate::psa::with_chunk_precedence_param;
+        let cluster = presets::system2();
+        let par = Parallelization::derive(1024, 64, 4, 1, true).unwrap();
+        let p = Pss::new(with_chunk_precedence_param(paper_table4_schema(1024, 4)), cluster, par);
+        let g = p.baseline_genome();
+        assert_eq!(g.len(), p.schema.genome_len());
+        let point = p.schema.decode_valid(&g).unwrap();
+        // Baseline slot 0 = "Off": the historical steady-state drain.
+        assert!(!p.chunk_precedence_of(&point));
+        let mut g2 = g.clone();
+        *g2.last_mut().unwrap() = 1;
+        let point2 = p.schema.decode_valid(&g2).unwrap();
+        assert!(p.chunk_precedence_of(&point2));
+        // Materialization ignores the knob (same cluster either way).
+        let (c1, _) = p.materialize(&point).unwrap();
+        let (c2, _) = p.materialize(&point2).unwrap();
+        assert_eq!(c1.topology, c2.topology);
+        // Schemas without the knob resolve to Off.
+        let bare = pss();
+        let bp = bare.schema.decode_valid(&bare.baseline_genome()).unwrap();
+        assert!(!bare.chunk_precedence_of(&bp));
     }
 
     #[test]

@@ -57,6 +57,11 @@ use std::sync::Arc;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CollKey {
     /// Backend pricing fingerprint ([`NetworkBackend::cache_tag`]).
+    /// Backend-side modes that change pricing fold in here — e.g. the
+    /// flow rung's chunk-precedence drain
+    /// ([`crate::netsim::FlowLevelConfig::with_chunk_precedence`])
+    /// hashes into the tag, so chunked and steady-state evaluations of
+    /// the same collective never share a memoized cost.
     pub backend: u64,
     /// Topology fingerprint ([`Topology::fingerprint`]).
     pub topology: u64,

@@ -1,0 +1,458 @@
+//! Chunk-level flow precedence, pinned by a closed-form conformance and
+//! property suite.
+//!
+//! With `FlowLevelConfig::with_chunk_precedence(true)` the flow rung
+//! admits each collective's chunks as a per-(job, dim) FIFO precedence
+//! DAG instead of a steady-state bottleneck tail. This suite pins the
+//! mode three ways:
+//!
+//! - **Closed-form conformance** — a single uncontended collective
+//!   drained under chunk precedence must match the `compose_phases`
+//!   closed form *exactly*, for both the Baseline and BlueConnect
+//!   multi-dim compositions (the `ChunkSchedule` recurrence theorem).
+//! - **Properties** (`util::prop`) — byte conservation, chunk-FIFO
+//!   non-inversion within (job, phase), monotonicity in chunk count and
+//!   concurrent-job count, and run-to-run determinism of the chunked
+//!   event core.
+//! - **Cache hygiene** — chunked and steady-state evaluations of the
+//!   same design never share a memoized collective cost (the mode folds
+//!   into the backend `cache_tag`, hence into `CollKey`), and the PsA
+//!   "Chunk Precedence" knob's Off slot is bit-identical to a schema
+//!   without the knob.
+
+use cosmic::collective::{
+    compose_phases, ChunkSchedule, CollAlgo, CollectiveKind, MultiDimPolicy, SchedulingPolicy,
+};
+use cosmic::dse::{Environment, Objective, WorkloadSpec};
+use cosmic::harness::median_baseline_par;
+use cosmic::netsim::{
+    ChunkFlowSpec, ChunkSegment, CollectiveCall, FlowLevel, FlowLevelConfig, FlowSim,
+    NetworkBackend, OverlapCall,
+};
+use cosmic::psa::{paper_table4_schema, with_chunk_precedence_param, with_fidelity_param};
+use cosmic::pss::Pss;
+use cosmic::sim::{presets, CollCostMemo, CollKey, LocalCollMemo};
+use cosmic::topology::{DimCost, DimKind, Topology};
+use cosmic::util::prop::check;
+use cosmic::util::Rng;
+use cosmic::workload::models::presets as wl;
+
+fn topo() -> Topology {
+    let kinds = [DimKind::Ring, DimKind::Switch];
+    Topology::from_arrays(&kinds, &[4, 8], &[200.0, 100.0], &[0.5, 1.0])
+}
+
+fn span_of(topo: &Topology) -> Vec<(DimCost, usize)> {
+    topo.dims.iter().enumerate().map(|(d, nd)| (DimCost::from_dim(nd), d)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Closed-form conformance: uncontended chunked drain == compose_phases.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uncontended_chunked_drain_matches_compose_phases_exactly() {
+    let topo = topo();
+    let span = span_of(&topo);
+    let algos = [CollAlgo::Ring, CollAlgo::Rhd];
+    let configs = [
+        FlowLevelConfig::default().with_chunk_precedence(true),
+        FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true),
+        FlowLevelConfig::default().with_background_load(0.4).with_chunk_precedence(true),
+    ];
+    for config in configs {
+        let flow = FlowLevel::new(config);
+        for policy in [MultiDimPolicy::Baseline, MultiDimPolicy::BlueConnect] {
+            for kind in [CollectiveKind::AllReduce, CollectiveKind::ReduceScatter] {
+                for chunks in [1u32, 2, 5, 16] {
+                    let c = CollectiveCall {
+                        kind,
+                        policy,
+                        algos: &algos,
+                        span: &span,
+                        topology: &topo,
+                        bytes: 48e6,
+                        chunks,
+                    };
+                    // The closed form over the congested per-chunk phase
+                    // durations — exactly what collective_time_us prices.
+                    let durations: Vec<f64> =
+                        flow.phase_times_us(&c).iter().map(|(_, t)| *t).collect();
+                    let closed = compose_phases(policy, &durations, chunks);
+                    let blocking = flow.collective_time_us(&c);
+                    assert!(
+                        (blocking - closed).abs() <= 1e-9 * closed.max(1.0),
+                        "{policy:?}/{kind:?} chunks={chunks}: blocking {blocking} vs {closed}"
+                    );
+                    let issue = 12.25;
+                    let job = OverlapCall { layer: 0, issue_us: issue, call: c };
+                    let drain = flow.drain_overlapped(&[job], SchedulingPolicy::Fifo);
+                    assert_eq!(drain.len(), 1);
+                    let drained = drain[0].1 - issue;
+                    assert!(
+                        (drained - closed).abs() <= 1e-6 * closed.max(1.0),
+                        "{policy:?}/{kind:?} chunks={chunks}: drain {drained} vs closed {closed}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties of the chunked event core (util::prop).
+// ---------------------------------------------------------------------------
+
+/// Build one job's chunk-precedence flow DAG from a per-phase
+/// `(dim, total bytes)` plan: `chunks` FIFO copies of the plan wired by
+/// [`ChunkSchedule`], flow `k * plan.len() + p` being chunk `k` phase
+/// `p`, each carrying `bytes / chunks`.
+fn chunked_job(
+    plan: &[(usize, f64)],
+    caps: &[f64],
+    chunks: u32,
+    policy: MultiDimPolicy,
+    latency_us: f64,
+) -> Vec<ChunkFlowSpec> {
+    let durations: Vec<f64> =
+        plan.iter().map(|&(d, b)| b / chunks as f64 / caps[d]).collect();
+    let sched = ChunkSchedule::new(policy, &durations);
+    let np = plan.len();
+    let mut flows = Vec::with_capacity(np * chunks as usize);
+    for k in 0..chunks {
+        for (p, &(dim, bytes)) in plan.iter().enumerate() {
+            let mut deps = Vec::new();
+            sched.deps(k, p, |dk, dp| deps.push(dk as usize * np + dp));
+            flows.push(ChunkFlowSpec {
+                chunk: k,
+                phase: p,
+                dim,
+                bytes: bytes / chunks as f64,
+                latency_us,
+                deps,
+            });
+        }
+    }
+    flows
+}
+
+fn rand_policy(rng: &mut Rng) -> MultiDimPolicy {
+    if rng.gen_range(2) == 0 {
+        MultiDimPolicy::Baseline
+    } else {
+        MultiDimPolicy::BlueConnect
+    }
+}
+
+#[test]
+fn prop_chunked_bytes_are_conserved() {
+    check("chunked byte conservation", 24, |rng| {
+        let ndims = 2 + rng.gen_range(3);
+        let caps: Vec<f64> = (0..ndims).map(|_| 50.0 + rng.gen_f64() * 150.0).collect();
+        let policy = rand_policy(rng);
+        let chunks = 1 + rng.gen_range(4) as u32;
+        let jobs: Vec<(f64, Vec<ChunkFlowSpec>)> = (0..1 + rng.gen_range(3))
+            .map(|_| {
+                let plan: Vec<(usize, f64)> = (0..1 + rng.gen_range(3))
+                    .map(|_| (rng.gen_range(ndims), 1e3 + rng.gen_f64() * 1e6))
+                    .collect();
+                (rng.gen_f64() * 10.0, chunked_job(&plan, &caps, chunks, policy, rng.gen_f64()))
+            })
+            .collect();
+        let sent: f64 =
+            jobs.iter().flat_map(|(_, fs)| fs.iter().map(|f| f.bytes)).sum();
+        let mut segments: Vec<ChunkSegment> = Vec::new();
+        let results = FlowSim::new(caps).run_chunked_recorded(&jobs, &mut segments);
+        let served: f64 = results.iter().map(|r| r.served_bytes).sum();
+        if (served - sent).abs() > 1e-9 * sent.max(1.0) {
+            return Err(format!("served {served} bytes of {sent} sent"));
+        }
+        let flows: usize = jobs.iter().map(|(_, fs)| fs.len()).sum();
+        if segments.len() != flows {
+            return Err(format!("{} segments for {flows} flows", segments.len()));
+        }
+        let seg_bytes: f64 = segments.iter().map(|s| s.bytes).sum();
+        if (seg_bytes - sent).abs() > 1e-9 * sent.max(1.0) {
+            return Err(format!("segments carry {seg_bytes} bytes of {sent} sent"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_fifo_never_inverts_within_a_job() {
+    check("chunk FIFO non-inversion", 24, |rng| {
+        let ndims = 2 + rng.gen_range(2);
+        let caps: Vec<f64> = (0..ndims).map(|_| 50.0 + rng.gen_f64() * 150.0).collect();
+        let policy = rand_policy(rng);
+        let chunks = 2 + rng.gen_range(6) as u32;
+        let jobs: Vec<(f64, Vec<ChunkFlowSpec>)> = (0..1 + rng.gen_range(3))
+            .map(|_| {
+                let plan: Vec<(usize, f64)> = (0..1 + rng.gen_range(3))
+                    .map(|_| (rng.gen_range(ndims), 1e4 + rng.gen_f64() * 1e6))
+                    .collect();
+                (rng.gen_f64() * 5.0, chunked_job(&plan, &caps, chunks, policy, 0.0))
+            })
+            .collect();
+        let mut segments: Vec<ChunkSegment> = Vec::new();
+        FlowSim::new(caps).run_chunked_recorded(&jobs, &mut segments);
+        // Within one (job, phase) lane, chunk k+1's data phase cannot
+        // begin before chunk k has drained: completion-based FIFO.
+        let mut last: Vec<((usize, usize), (u32, f64))> = Vec::new();
+        let mut ordered = segments.clone();
+        ordered.sort_by_key(|s| (s.job, s.phase, s.chunk));
+        for seg in &ordered {
+            let lane = (seg.job, seg.phase);
+            match last.iter_mut().find(|(k, _)| *k == lane) {
+                Some((_, (prev_chunk, prev_finish))) => {
+                    if seg.chunk != *prev_chunk + 1 {
+                        return Err(format!(
+                            "lane {lane:?}: chunk {} follows {prev_chunk}",
+                            seg.chunk
+                        ));
+                    }
+                    if seg.start_us < *prev_finish - 1e-9 {
+                        return Err(format!(
+                            "lane {lane:?}: chunk {} started at {} before chunk {} drained at {}",
+                            seg.chunk, seg.start_us, prev_chunk, prev_finish
+                        ));
+                    }
+                    *prev_chunk = seg.chunk;
+                    *prev_finish = seg.finish_us;
+                }
+                None => {
+                    if seg.chunk != 0 {
+                        return Err(format!("lane {lane:?} begins at chunk {}", seg.chunk));
+                    }
+                    last.push((lane, (0, seg.finish_us)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_makespan_is_monotone_in_chunk_count() {
+    // A lone zero-latency job on a flow shop (each phase its own dim):
+    // Baseline T(K) = max + (sum - max)/K, BlueConnect T(K) = max +
+    // fill/K — both non-increasing in K, so finer chunking never slows
+    // an uncontended collective.
+    check("chunk-count monotonicity", 16, |rng| {
+        let phases = 1 + rng.gen_range(4);
+        let caps: Vec<f64> = (0..phases).map(|_| 50.0 + rng.gen_f64() * 150.0).collect();
+        let plan: Vec<(usize, f64)> =
+            (0..phases).map(|p| (p, 1e4 + rng.gen_f64() * 1e6)).collect();
+        let policy = rand_policy(rng);
+        let sim = FlowSim::new(caps.clone());
+        let mut prev = f64::INFINITY;
+        for chunks in [1u32, 2, 4, 8, 16] {
+            let jobs = vec![(0.0, chunked_job(&plan, &caps, chunks, policy, 0.0))];
+            let t = sim.run_chunked(&jobs)[0].finish_us;
+            if t > prev * (1.0 + 1e-9) {
+                return Err(format!("{policy:?}: {chunks} chunks took {t} > {prev}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_makespan_is_monotone_in_concurrent_job_count() {
+    // Identical jobs issued together run in lockstep: every shared dim
+    // splits evenly across the distinct jobs, so adding a tenant can
+    // only stretch the makespan.
+    check("job-count monotonicity", 12, |rng| {
+        let ndims = 2 + rng.gen_range(2);
+        let caps: Vec<f64> = (0..ndims).map(|_| 50.0 + rng.gen_f64() * 150.0).collect();
+        let policy = rand_policy(rng);
+        let chunks = 1 + rng.gen_range(4) as u32;
+        let plan: Vec<(usize, f64)> = (0..1 + rng.gen_range(3))
+            .map(|_| (rng.gen_range(ndims), 1e4 + rng.gen_f64() * 1e6))
+            .collect();
+        let latency = rng.gen_f64() * 2.0;
+        let sim = FlowSim::new(caps.clone());
+        let mut prev = 0.0;
+        for n in [1usize, 2, 4] {
+            let jobs: Vec<(f64, Vec<ChunkFlowSpec>)> = (0..n)
+                .map(|_| (0.0, chunked_job(&plan, &caps, chunks, policy, latency)))
+                .collect();
+            let t = sim
+                .run_chunked(&jobs)
+                .iter()
+                .map(|r| r.finish_us)
+                .fold(0.0, f64::max);
+            if t < prev * (1.0 - 1e-9) {
+                return Err(format!("{policy:?}: {n} jobs finished at {t} < {prev}"));
+            }
+            prev = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_runs_are_bit_deterministic() {
+    check("chunked determinism", 16, |rng| {
+        let ndims = 2 + rng.gen_range(3);
+        let caps: Vec<f64> = (0..ndims).map(|_| 50.0 + rng.gen_f64() * 150.0).collect();
+        let policy = rand_policy(rng);
+        let chunks = 1 + rng.gen_range(6) as u32;
+        let jobs: Vec<(f64, Vec<ChunkFlowSpec>)> = (0..1 + rng.gen_range(4))
+            .map(|_| {
+                let plan: Vec<(usize, f64)> = (0..1 + rng.gen_range(3))
+                    .map(|_| (rng.gen_range(ndims), 1e3 + rng.gen_f64() * 1e6))
+                    .collect();
+                (rng.gen_f64() * 10.0, chunked_job(&plan, &caps, chunks, policy, rng.gen_f64()))
+            })
+            .collect();
+        let sim = FlowSim::new(caps);
+        let mut seg_a: Vec<ChunkSegment> = Vec::new();
+        let mut seg_b: Vec<ChunkSegment> = Vec::new();
+        let a = sim.run_chunked_recorded(&jobs, &mut seg_a);
+        let b = sim.run_chunked_recorded(&jobs, &mut seg_b);
+        for (x, y) in a.iter().zip(b.iter()) {
+            if x.finish_us.to_bits() != y.finish_us.to_bits()
+                || x.served_bytes.to_bits() != y.served_bytes.to_bits()
+            {
+                return Err(format!("results drifted: {x:?} vs {y:?}"));
+            }
+        }
+        if seg_a != seg_b {
+            return Err("segment streams drifted between identical runs".into());
+        }
+        // The plain entry point is the recorded one minus observation.
+        let plain = sim.run_chunked(&jobs);
+        if plain != a {
+            return Err("recording perturbed the simulation".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Cache hygiene: the mode can never alias memoized costs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chunked_and_steady_backends_never_share_memoized_costs() {
+    // Deliberate-collision regression: identical CollKeys except for the
+    // backend tag must hit distinct memo entries — the chunk-precedence
+    // bit folds into FlowLevel::cache_tag, so a chunked evaluation can
+    // never be served a steady-state collective cost (or vice versa).
+    let steady = FlowLevel::new(FlowLevelConfig::oversubscribed(4.0));
+    let chunked =
+        FlowLevel::new(FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true));
+    assert_ne!(steady.cache_tag(), chunked.cache_tag());
+    let key = |backend: u64| CollKey {
+        backend,
+        topology: 0x1111,
+        algos: 0x2222,
+        policy: MultiDimPolicy::Baseline,
+        kind: CollectiveKind::AllReduce,
+        stride: 1,
+        size: 4,
+        bytes: 64e6_f64.to_bits(),
+        chunks: 4,
+        scenario: 0,
+        traffic: 0,
+    };
+    let mut memo = LocalCollMemo::default();
+    let a = memo.cost_us(&key(steady.cache_tag()), &mut || 111.0);
+    let b = memo.cost_us(&key(chunked.cache_tag()), &mut || 222.0);
+    assert_eq!(a, 111.0);
+    assert_eq!(b, 222.0, "chunked evaluation was served the steady-state memo entry");
+    // And both hit their own entries on re-query.
+    assert_eq!(memo.cost_us(&key(steady.cache_tag()), &mut || -1.0), 111.0);
+    assert_eq!(memo.cost_us(&key(chunked.cache_tag()), &mut || -1.0), 222.0);
+}
+
+// ---------------------------------------------------------------------------
+// The PsA "Chunk Precedence" knob end to end.
+// ---------------------------------------------------------------------------
+
+/// Environment over system1 with the fidelity + chunk-precedence knobs
+/// appended and a congested flow fabric, so the knob has something to
+/// change.
+fn knob_env(with_knob: bool) -> Environment {
+    let cluster = presets::system1();
+    let model = wl::gpt3_13b().with_simulated_layers(4);
+    let spec = WorkloadSpec::training(model, 1024);
+    let baseline = median_baseline_par(&cluster, &spec);
+    let mut schema = with_fidelity_param(paper_table4_schema(
+        cluster.npus(),
+        cluster.topology.num_dims(),
+    ));
+    if with_knob {
+        schema = with_chunk_precedence_param(schema);
+    }
+    let pss = Pss::new(schema, cluster, baseline);
+    Environment::new(pss, vec![spec], Objective::PerfPerBwPerNpu)
+        .with_flow_config(FlowLevelConfig::oversubscribed(4.0))
+}
+
+/// The baseline genome with the fidelity knob flipped to FlowLevel and
+/// (when present) the chunk knob set to `chunk_slot`.
+fn flow_genome(env: &Environment, with_knob: bool, chunk_slot: usize) -> Vec<usize> {
+    let mut g = env.pss.baseline_genome();
+    let n = g.len();
+    if with_knob {
+        g[n - 2] = 1; // Network Fidelity = FlowLevel
+        g[n - 1] = chunk_slot; // Chunk Precedence
+    } else {
+        g[n - 1] = 1; // Network Fidelity = FlowLevel
+    }
+    g
+}
+
+#[test]
+fn chunk_knob_off_is_bit_identical_to_a_schema_without_the_knob() {
+    let bare = knob_env(false);
+    let with = knob_env(true);
+    let out_bare = bare.evaluate_nomemo(&flow_genome(&bare, false, 0));
+    let out_with = with.evaluate_nomemo(&flow_genome(&with, true, 0));
+    assert!(out_bare.invalid_reason.is_none(), "{:?}", out_bare.invalid_reason);
+    assert!(out_with.invalid_reason.is_none(), "{:?}", out_with.invalid_reason);
+    assert_eq!(
+        out_bare.reward.to_bits(),
+        out_with.reward.to_bits(),
+        "the Off slot must price exactly like a knob-free schema"
+    );
+    let (a, b) = (&out_bare.reports, &out_with.reports);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.latency_us.to_bits(), y.latency_us.to_bits());
+    }
+}
+
+#[test]
+fn chunked_evaluations_are_order_independent_of_steady_ones() {
+    // Warm-cache regression: evaluating Off then On (shared cross-
+    // evaluation cache) must match a cold On evaluation bit for bit —
+    // a backend-tag collision between the modes would leak memoized
+    // costs across and break this.
+    let warm = knob_env(true);
+    let g_off = flow_genome(&warm, true, 0);
+    let g_on = flow_genome(&warm, true, 1);
+    let _ = warm.evaluate_nomemo(&g_off);
+    let warm_on = warm.evaluate_nomemo(&g_on);
+    let cold = knob_env(true);
+    let cold_on = cold.evaluate_nomemo(&g_on);
+    assert!(warm_on.invalid_reason.is_none(), "{:?}", warm_on.invalid_reason);
+    assert_eq!(
+        warm_on.reward.to_bits(),
+        cold_on.reward.to_bits(),
+        "warm-cache chunked evaluation drifted from the cold one"
+    );
+    // And the mirrored order: On first, then Off, vs cold Off.
+    let warm2 = knob_env(true);
+    let _ = warm2.evaluate_nomemo(&g_on);
+    let warm_off = warm2.evaluate_nomemo(&g_off);
+    let cold_off = knob_env(true).evaluate_nomemo(&g_off);
+    assert_eq!(
+        warm_off.reward.to_bits(),
+        cold_off.reward.to_bits(),
+        "warm-cache steady evaluation drifted from the cold one"
+    );
+}

@@ -12,7 +12,8 @@ use cosmic::collective::{CollAlgo, CollectiveKind, MultiDimPolicy, SchedulingPol
 use cosmic::faults::{FaultScenario, FaultView, LinkFaults};
 use cosmic::netsim::{
     ecmp_path, Analytical, CollectiveCall, FidelityMode, FlowLevel, FlowLevelConfig, FlowSpec,
-    NetworkBackend, OverlapCall, PacketLevel, PacketLevelConfig, PacketSim,
+    NetworkBackend, OverlapCall, PacketLevel, PacketLevelConfig, PacketSim, TrafficTrace,
+    TrafficView,
 };
 use cosmic::sim::{presets, ClusterConfig, Simulator};
 use cosmic::topology::{DimCost, DimKind, Topology};
@@ -136,6 +137,66 @@ fn contended_switch_drain_orders_up_the_ladder() {
     // a sub-0.1% effect here, hence the wider guard band.
     assert!(p >= f - 1e-3 * f, "packet {p} came out below flow {f}");
     assert!(f > 1.5 * a, "4:1 oversubscription failed to bite: flow {f} vs analytical {a}");
+}
+
+#[test]
+fn contended_chunked_drain_orders_between_analytical_and_packet() {
+    // Packet >= ChunkedFlow >= Analytical on a 4:1 oversubscribed switch
+    // dimension. Reduce-Scatter visits each dimension exactly once, so a
+    // chunked collective is a pure per-(job, dim) FIFO chain and the
+    // ordering is tight (AllReduce revisits dims, where the chunked
+    // model's full-duplex RS/AG overlap makes only a hedged comparison
+    // sound — covered end to end below).
+    let topo = topo();
+    let span = switch_span(&topo);
+    let algos = [CollAlgo::Rhd];
+    let c = CollectiveCall {
+        kind: CollectiveKind::ReduceScatter,
+        policy: MultiDimPolicy::Baseline,
+        algos: &algos,
+        span: &span,
+        topology: &topo,
+        bytes: 16e6,
+        chunks: 4,
+    };
+    let jobs: Vec<OverlapCall> =
+        (0..6).map(|l| OverlapCall { layer: l, issue_us: 0.0, call: c }).collect();
+    let a = makespan(Analytical.drain_overlapped(&jobs, SchedulingPolicy::Fifo));
+    let cf = makespan(
+        FlowLevel::new(FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true))
+            .drain_overlapped(&jobs, SchedulingPolicy::Fifo),
+    );
+    let p = makespan(
+        PacketLevel::new(PacketLevelConfig::oversubscribed(4.0))
+            .drain_overlapped(&jobs, SchedulingPolicy::Fifo),
+    );
+    assert!(cf >= a - 1e-6 * a, "chunked flow {cf} came out below analytical {a}");
+    assert!(cf > 1.5 * a, "4:1 oversubscription failed to bite: chunked {cf} vs analytical {a}");
+    // Same packet-granularity guard band as the steady-state ordering
+    // test above.
+    assert!(p >= cf - 1e-3 * cf, "packet {p} came out below chunked flow {cf}");
+}
+
+#[test]
+fn chunked_simulator_latency_is_hedged_against_the_analytical_screen() {
+    // End to end (AllReduce gradient drains revisit dimensions), the
+    // chunked flow rung on an oversubscribed fabric must not come out
+    // meaningfully *faster* than the analytical screen — the same hedge
+    // `simulator_latency_orders_up_the_ladder_end_to_end` applies to the
+    // steady-state rungs.
+    let (cluster, model, par) = setup();
+    let run = |sim: Simulator| {
+        sim.run(&cluster, &model, &par, 1024, ExecutionMode::Training).unwrap().latency_us
+    };
+    let a = run(Simulator::new());
+    let cf = run(Simulator::new().with_flow_config(
+        FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true),
+    ));
+    assert!(a > 0.0 && cf.is_finite());
+    assert!(
+        cf >= 0.95 * a,
+        "chunked flow on an oversubscribed fabric came out faster: {cf} vs {a}"
+    );
 }
 
 #[test]
@@ -364,14 +425,27 @@ fn cache_tags_are_pairwise_distinct_across_the_ladder() {
         ("analytical", Arc::new(Analytical)),
         ("flow", Arc::new(FlowLevel::default())),
         ("flow-4x", Arc::new(FlowLevel::new(FlowLevelConfig::oversubscribed(4.0)))),
+        (
+            "chunked-flow",
+            Arc::new(FlowLevel::new(FlowLevelConfig::default().with_chunk_precedence(true))),
+        ),
+        (
+            "chunked-flow-4x",
+            Arc::new(FlowLevel::new(
+                FlowLevelConfig::oversubscribed(4.0).with_chunk_precedence(true),
+            )),
+        ),
         ("packet", Arc::new(PacketLevel::default())),
         ("packet-4x", Arc::new(PacketLevel::new(PacketLevelConfig::oversubscribed(4.0)))),
     ];
+    let trace = Arc::new(TrafficTrace::uniform(2, 0.3));
     let mut tagged: Vec<(String, u64)> =
         backends.iter().map(|(n, b)| (n.to_string(), b.cache_tag())).collect();
     for (n, b) in &backends {
         let view = FaultView::wrap(Arc::clone(b), &links);
         tagged.push((format!("faulted-{n}"), view.cache_tag()));
+        let shaped = TrafficView::wrap(Arc::clone(b), Arc::clone(&trace));
+        tagged.push((format!("traffic-{n}"), shaped.cache_tag()));
     }
     for i in 0..tagged.len() {
         for j in i + 1..tagged.len() {
@@ -395,20 +469,31 @@ fn corpus() -> Vec<String> {
     let dims = cluster.topology.num_dims();
     let fidelities = [FidelityMode::Analytical, FidelityMode::FlowLevel, FidelityMode::Packet];
     let mut out = Vec::new();
+    let mut record = |name: &str, sim: Simulator, seed: u64| {
+        let sim = sim.with_faults(Arc::new(FaultScenario::from_seed(seed, dims)));
+        let rep = sim.run(&cluster, &model, &par, 1024, ExecutionMode::Training).unwrap();
+        out.push(format!(
+            "{}/seed{}: latency_bits={:016x} {:?}",
+            name,
+            seed,
+            rep.latency_us.to_bits(),
+            rep
+        ));
+    };
     for fid in fidelities {
         for seed in [3u64, 7] {
-            let sim = Simulator::new()
-                .with_fidelity(fid)
-                .with_faults(Arc::new(FaultScenario::from_seed(seed, dims)));
-            let rep = sim.run(&cluster, &model, &par, 1024, ExecutionMode::Training).unwrap();
-            out.push(format!(
-                "{}/seed{}: latency_bits={:016x} {:?}",
-                fid.name(),
-                seed,
-                rep.latency_us.to_bits(),
-                rep
-            ));
+            record(fid.name(), Simulator::new().with_fidelity(fid), seed);
         }
+    }
+    // The chunk-precedence variant of the flow rung joins the corpus: a
+    // fourth column pinning the per-chunk drain's bit-reproducibility.
+    for seed in [3u64, 7] {
+        record(
+            "ChunkedFlow",
+            Simulator::new()
+                .with_flow_config(FlowLevelConfig::default().with_chunk_precedence(true)),
+            seed,
+        );
     }
     out
 }
@@ -417,7 +502,11 @@ fn corpus() -> Vec<String> {
 fn golden_corpus_is_run_to_run_deterministic() {
     let first = corpus();
     let second = corpus();
-    assert_eq!(first.len(), 6, "one model x three fidelities x two fault seeds");
+    assert_eq!(
+        first.len(),
+        8,
+        "one model x (three fidelities + chunked flow) x two fault seeds"
+    );
     for (a, b) in first.iter().zip(second.iter()) {
         assert_eq!(a, b, "corpus entry drifted between identical runs");
     }
